@@ -1,0 +1,92 @@
+"""Shared benchmark scaffolding: the paper's calibrated system settings and
+the CNN-FL harness used by Figs. 1-2."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
+from repro.core import defl, delay, kkt
+from repro.data import BatchIterator, make_cifar_like, make_mnist_like
+from repro.federated.partition import partition_dirichlet, partition_sizes
+from repro.federated.simulation import FLSimulation, SimResult
+from repro.models import cnn
+from repro.optim import sgd
+from repro.utils.tree import tree_bytes
+
+# Calibration (see EXPERIMENTS.md §Claims): per-sample compute ~10 ms at
+# b=1 on the 2 GHz edge GPU pins theta* ~= 0.13-0.15 (the paper's reported
+# operating point, independent of c), and c ~= 4.0 then pins b* ~= 32
+# (the paper's "rounded off" batch size) at eps = 0.01.
+CALIBRATED_COMPUTE = ComputeConfig(bits_per_sample=6.8e5)
+CALIBRATED_C = 4.0
+
+
+def paper_population(M: int = 10, heterogeneity: float = 0.0,
+                     seed: int = 0) -> delay.DevicePopulation:
+    return delay.draw_population(
+        M, CALIBRATED_COMPUTE, WirelessConfig(), seed, heterogeneity)
+
+
+def paper_problem(update_bits: float, M: int = 10, eps: float = 0.01,
+                  nu: float = 2.0, c: float = CALIBRATED_C,
+                  pop: Optional[delay.DevicePopulation] = None,
+                  ) -> kkt.DelayProblem:
+    pop = pop if pop is not None else paper_population(M)
+    T_cm = delay.round_comm_time(update_bits, WirelessConfig(), pop.p, pop.h)
+    g = float(max(pop.G / pop.f))
+    return kkt.DelayProblem(T_cm=T_cm, g=g, M=M, eps=eps, nu=nu, c=c)
+
+
+def cnn_update_bits(dataset: str = "mnist") -> float:
+    cfg = cnn.mnist_cnn() if dataset == "mnist" else cnn.cifar_cnn()
+    params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
+    return tree_bytes(params) * 8.0
+
+
+def run_cnn_fl(
+    dataset: str,
+    fed: FedConfig,
+    label: str,
+    rounds: int = 15,
+    n_train: int = 1500,
+    n_test: int = 400,
+    eval_every: int = 3,
+    target_acc: Optional[float] = None,
+    seed: int = 0,
+) -> SimResult:
+    make = make_mnist_like if dataset == "mnist" else make_cifar_like
+    data = make(n_train, seed=seed)
+    test = make(n_test, seed=seed + 1)
+    cfg = cnn.mnist_cnn() if dataset == "mnist" else cnn.cifar_cnn()
+    params = cnn.init_cnn(cfg, jax.random.PRNGKey(seed))
+    parts = partition_dirichlet(data, fed.n_devices, alpha=1.0, seed=seed)
+    iters = [BatchIterator(data, p, fed.batch_size, seed=seed + i)
+             for i, p in enumerate(parts)]
+    pop = paper_population(fed.n_devices)
+    xb, yb = jnp.asarray(test.x), jnp.asarray(test.y)
+
+    @jax.jit
+    def eval_acc(p):
+        logits = cnn.cnn_forward(cfg, p, xb)
+        return jnp.mean((jnp.argmax(logits, -1) == yb).astype(jnp.float32))
+
+    sim = FLSimulation(
+        functools.partial(cnn.cnn_loss, cfg), params, iters,
+        partition_sizes(parts), fed, sgd(fed.lr), pop,
+        eval_fn=lambda p: {"acc": float(eval_acc(p))}, label=label)
+    return sim.run(max_rounds=rounds, eval_every=eval_every,
+                   target_acc=target_acc)
+
+
+def emit(rows, header=None):
+    """CSV emission: name,us_per_call,derived columns."""
+    if header:
+        print(header)
+    for r in rows:
+        print(",".join(str(x) for x in r))

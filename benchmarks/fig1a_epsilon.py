@@ -1,0 +1,26 @@
+"""Fig. 1(a): impact of the preset global error eps on the optimized
+(b*, theta*, H, predicted overall time)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import cnn_update_bits, paper_problem
+from repro.core import kkt, tradeoff
+
+
+def run(quick: bool = False):
+    bits = cnn_update_bits("mnist")
+    base = paper_problem(bits)
+    epsilons = [0.05, 0.02, 0.01, 0.005, 0.002]
+    rows = []
+    for eps, sol in tradeoff.sweep_epsilon(base, epsilons):
+        rows.append(("fig1a", eps, int(sol.b), round(sol.theta, 4), sol.V,
+                     round(sol.H, 1), round(sol.overall, 2)))
+    return ("name,epsilon,b_star,theta_star,V,H,overall_pred_s", rows)
+
+
+if __name__ == "__main__":
+    header, rows = run()
+    print(header)
+    for r in rows:
+        print(",".join(map(str, r)))

@@ -1,0 +1,25 @@
+"""Fig. 1(d): communication rounds H and computation-time split vs theta —
+the talk/work decomposition (Eq. 12 x Eq. 8)."""
+from __future__ import annotations
+
+from benchmarks.common import cnn_update_bits, paper_problem
+from repro.core import tradeoff
+
+
+def run(quick: bool = False):
+    bits = cnn_update_bits("mnist")
+    prob = paper_problem(bits)
+    rows = []
+    for pt in tradeoff.sweep_theta(prob, b=32,
+                                   thetas=[0.5, 0.3, 0.15, 0.05, 0.01]):
+        rows.append(("fig1d", pt.theta, pt.V, round(pt.H, 1),
+                     round(pt.talk_time, 2), round(pt.work_time, 2),
+                     round(pt.overall, 2)))
+    return ("name,theta,V,H,talk_time_s,work_time_s,overall_s", rows)
+
+
+if __name__ == "__main__":
+    header, rows = run()
+    print(header)
+    for r in rows:
+        print(",".join(map(str, r)))

@@ -1,0 +1,78 @@
+"""Fig. 2: DEFL vs FedAvg vs Rand — overall time to a matched accuracy on
+MNIST-like and CIFAR-like tasks (the paper's headline comparison).
+
+Paper settings: FedAvg (b=10, V=20); Rand (b=16, V=15) for MNIST and
+(b=64, V=30) for CIFAR; DEFL uses the optimized (b*, theta*)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    CALIBRATED_C,
+    cnn_update_bits,
+    paper_population,
+    run_cnn_fl,
+)
+from repro.configs.base import FedConfig
+from repro.core import defl
+
+
+def _defl_fed(dataset: str) -> FedConfig:
+    fed = FedConfig(n_devices=10, epsilon=0.01, nu=2.0, c=CALIBRATED_C,
+                    lr=0.05)
+    plan = defl.make_plan(fed, paper_population(10),
+                          cnn_update_bits(dataset))
+    fed = defl.plan_to_fedconfig(plan, fed)
+    # Dataset-bounded batch cap (constraint 15 discussion / paper §VI-B).
+    return FedConfig(**{**fed.__dict__, "batch_size": min(fed.batch_size, 32),
+                        "update_bytes": None})
+
+
+def _configs(dataset: str):
+    defl_fed = _defl_fed(dataset)
+    fedavg = FedConfig(n_devices=10, batch_size=10, theta=float(np.exp(-20 / 2.0)),
+                       nu=2.0, lr=0.05)  # V = 20
+    if dataset == "mnist":
+        rand = FedConfig(n_devices=10, batch_size=16,
+                         theta=float(np.exp(-15 / 2.0)), nu=2.0, lr=0.05)
+    else:
+        rand = FedConfig(n_devices=10, batch_size=64,
+                         theta=float(np.exp(-30 / 2.0)), nu=2.0, lr=0.05)
+    return [("DEFL", defl_fed), ("FedAvg", fedavg), ("Rand", rand)]
+
+
+def run(quick: bool = False):
+    rows = []
+    datasets = ["mnist"] if quick else ["mnist", "cifar"]
+    for ds in datasets:
+        target = 0.90
+        results = {}
+        for label, fed in _configs(ds):
+            res = run_cnn_fl(ds, fed, label=label,
+                             rounds=4 if quick else 12,
+                             n_train=600 if quick else 1500,
+                             eval_every=1, target_acc=target)
+            results[label] = res
+            tta = res.time_to_accuracy(target)
+            last_acc = next((r.test_acc for r in reversed(res.history)
+                             if r.test_acc is not None), float("nan"))
+            rows.append(("fig2", ds, label, fed.batch_size,
+                         fed.local_rounds, res.rounds,
+                         round(res.total_time, 2),
+                         round(last_acc, 4),
+                         round(tta, 2) if tta else ""))
+        if "DEFL" in results and "FedAvg" in results:
+            d, f = results["DEFL"], results["FedAvg"]
+            dt, ft = (d.time_to_accuracy(target) or d.total_time,
+                      f.time_to_accuracy(target) or f.total_time)
+            rows.append(("fig2", ds, "reduction_vs_fedavg", "", "", "",
+                         round(100 * (1 - dt / ft), 1), "", ""))
+    return ("name,dataset,method,b,V,rounds,overall_time_s,acc,time_to_90",
+            rows)
+
+
+if __name__ == "__main__":
+    header, rows = run()
+    print(header)
+    for r in rows:
+        print(",".join(map(str, r)))

@@ -1,0 +1,55 @@
+"""Roofline table: aggregates launch/dryrun.py JSON dumps into the
+per-(arch x shape x mesh) three-term roofline report (deliverable g)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DEFAULT_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "dryrun")
+
+
+def load_records(dryrun_dir: str = DEFAULT_DIR, tag: str = ""):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        base = os.path.basename(fn)[:-5]
+        parts = base.split("--")
+        rec_tag = parts[3] if len(parts) > 3 else ""
+        if rec_tag != tag:
+            continue
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(quick: bool = False, dryrun_dir: str = DEFAULT_DIR):
+    """Analytic terms are primary (XLA cost_analysis visits while bodies
+    once — see utils/analytic.py); raw HLO terms kept as *_hlo columns."""
+    rows = []
+    for r in load_records(dryrun_dir):
+        if not r.get("ok"):
+            rows.append(("roofline", r["arch"], r["shape"], r["mesh"],
+                         "FAIL", r.get("error", ""), "", "", "", "", "", ""))
+            continue
+        ta = r.get("terms_analytic_seconds", r["terms_seconds"])
+        th = r["terms_seconds"]
+        ratio = r.get("useful_flops_ratio_analytic")
+        rows.append((
+            "roofline", r["arch"], r["shape"], r["mesh"],
+            f"{ta['compute']:.3e}", f"{ta['memory']:.3e}",
+            f"{ta['collective']:.3e}",
+            r.get("dominant_analytic", r["dominant"]),
+            f"{r['model_flops']:.3e}",
+            f"{ratio:.3f}" if ratio else "",
+            f"{th['compute']:.3e}", f"{th['collective']:.3e}"))
+    return ("name,arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,"
+            "dominant,model_flops,useful_ratio,t_compute_hlo,t_coll_hlo",
+            rows)
+
+
+if __name__ == "__main__":
+    header, rows = run()
+    print(header)
+    for r in rows:
+        print(",".join(map(str, r)))

@@ -1,0 +1,57 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1a,...]
+
+Emits ``name,...`` CSV blocks per benchmark. The roofline table reads the
+dry-run dumps in experiments/dryrun (run launch/dryrun.py first for the
+full 40-pair baseline)."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0])
+
+from benchmarks import (  # noqa: E402
+    ablation_compression,
+    ablation_straggler,
+    fig1a_epsilon,
+    fig1b_batch,
+    fig1c_theta,
+    fig1d_rounds,
+    fig2_defl_vs_fedavg,
+    roofline_table,
+)
+
+BENCHES = {
+    "fig1a": fig1a_epsilon.run,
+    "fig1b": fig1b_batch.run,
+    "fig1c": fig1c_theta.run,
+    "fig1d": fig1d_rounds.run,
+    "fig2": fig2_defl_vs_fedavg.run,
+    "straggler": ablation_straggler.run,
+    "compression": ablation_compression.run,
+    "roofline": roofline_table.run,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced round budgets (single-core CPU container)")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else list(BENCHES)
+    for name in names:
+        t0 = time.time()
+        header, rows = BENCHES[name](quick=args.quick)
+        print(f"# === {name} ({time.time() - t0:.1f}s) ===", flush=True)
+        print(header)
+        for r in rows:
+            print(",".join(map(str, r)))
+        print(flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""End-to-end driver (deliverable b): DEFL vs FedAvg vs Rand on the
+paper's CNN task with real training + simulated delay accounting —
+reproduces Fig. 2 qualitatively.
+
+  PYTHONPATH=src python examples/defl_vs_fedavg.py [--rounds 12]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0])
+
+from benchmarks.fig2_defl_vs_fedavg import run  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    header, rows = run(quick=args.quick)
+    print(header)
+    for r in rows:
+        print(",".join(map(str, r)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Multi-pod demo: lower + compile one architecture on the 2x16x16
+(512-chip) production mesh and print its memory/cost analyses.
+
+  PYTHONPATH=src python examples/multipod_dryrun_demo.py [arch] [shape]
+"""
+import subprocess
+import sys
+import os
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "gemma-7b"
+shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+# Subprocess so the 512-device XLA flag never leaks into the caller.
+sys.exit(subprocess.call(
+    [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+     "--shape", shape, "--mesh", "multi", "--out", "/tmp/multipod_demo"],
+    env=env))

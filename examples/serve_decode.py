@@ -1,0 +1,11 @@
+"""Serving example (deliverable b): batched prefill + token-by-token decode
+against KV/SSM caches, across architecture families.
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch import serve
+
+for arch in ["qwen2-0.5b", "falcon-mamba-7b", "zamba2-2.7b"]:
+    print(f"=== {arch} ===")
+    serve.main(["--arch", arch, "--smoke", "--batch", "2",
+                "--prompt-len", "32", "--gen", "8"])

@@ -1,0 +1,65 @@
+"""msgpack-based checkpointing of parameter / optimizer pytrees.
+
+Layout: a single .msgpack file holding {flat_key: (dtype, shape, bytes)}
+plus a JSON-able metadata dict. Flat keys are '/'-joined pytree paths, so
+restore is structure-checked against a template tree.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree: Any, metadata: Optional[Dict] = None) -> None:
+    flat = _flatten(tree)
+    payload = {
+        "metadata": metadata or {},
+        "arrays": {
+            k: {"dtype": str(v.dtype), "shape": list(v.shape),
+                "data": v.tobytes()}
+            for k, v in flat.items()
+        },
+    }
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, template: Any) -> Tuple[Any, Dict]:
+    """Restore into the structure of `template` (shape/dtype checked)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    arrays = payload["arrays"]
+    tmpl_flat = _flatten(template)
+    missing = set(tmpl_flat) - set(arrays)
+    extra = set(arrays) - set(tmpl_flat)
+    if missing or extra:
+        raise ValueError(f"checkpoint mismatch: missing={missing} extra={extra}")
+    restored_flat = {}
+    for k, t in tmpl_flat.items():
+        a = arrays[k]
+        arr = np.frombuffer(a["data"], dtype=np.dtype(a["dtype"])).reshape(a["shape"])
+        if tuple(arr.shape) != tuple(t.shape):
+            raise ValueError(f"{k}: shape {arr.shape} != template {t.shape}")
+        restored_flat[k] = arr
+    # Rebuild in template order.
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            for path, _ in leaves_paths]
+    leaves = [restored_flat[k] for k in keys]
+    return jax.tree_util.tree_unflatten(treedef, leaves), payload["metadata"]

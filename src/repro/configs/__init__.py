@@ -1,0 +1,13 @@
+from repro.configs.base import (
+    AttentionConfig,
+    ComputeConfig,
+    FedConfig,
+    InputShape,
+    INPUT_SHAPES,
+    MeshConfig,
+    ModalityConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    WirelessConfig,
+)

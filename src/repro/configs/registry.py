@@ -1,0 +1,49 @@
+"""Architecture registry: --arch <id> resolution."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+from repro.configs import (
+    falcon_mamba_7b,
+    gemma_7b,
+    llama4_scout_17b_a16e,
+    llava_next_34b,
+    moonshot_v1_16b_a3b,
+    musicgen_large,
+    qwen2_0_5b,
+    qwen3_32b,
+    qwen3_moe_30b_a3b,
+    zamba2_2_7b,
+)
+from repro.configs.base import ModelConfig
+
+_MODULES = [
+    qwen3_moe_30b_a3b,
+    qwen2_0_5b,
+    gemma_7b,
+    zamba2_2_7b,
+    qwen3_32b,
+    falcon_mamba_7b,
+    llama4_scout_17b_a16e,
+    moonshot_v1_16b_a3b,
+    llava_next_34b,
+    musicgen_large,
+]
+
+ARCH_IDS = [m.ARCH_ID for m in _MODULES]
+
+_FULL: Dict[str, Callable[[], ModelConfig]] = {m.ARCH_ID: m.make_config for m in _MODULES}
+_SMOKE: Dict[str, Callable[[], ModelConfig]] = {
+    m.ARCH_ID: m.make_smoke_config for m in _MODULES
+}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    table = _SMOKE if smoke else _FULL
+    if arch not in table:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(table)}")
+    return table[arch]()
+
+
+def all_configs(smoke: bool = False) -> Dict[str, ModelConfig]:
+    return {a: get_config(a, smoke=smoke) for a in ARCH_IDS}

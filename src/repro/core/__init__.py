@@ -1,0 +1,9 @@
+"""The paper's primary contribution: DEFL delay-efficient FL.
+
+delay.py        Eqs. 3-8 computation/communication/round-time models
+convergence.py  Theorem 1, Corollaries 1-2, Eq. 12 round-count model
+kkt.py          problem (18) + closed form (Eq. 29) + numerical optimum
+defl.py         Algorithm 1 plan construction
+tradeoff.py     talk-vs-work decomposition sweeps (Fig. 1)
+"""
+from repro.core import convergence, defl, delay, kkt, tradeoff

@@ -1,0 +1,143 @@
+"""The paper's delay models (§II-B/C/D, Eqs. 3-8).
+
+Everything here is the *system model*: deterministic functions of device
+and channel parameters. The federated simulator draws heterogeneous device
+populations and evaluates these; the KKT optimizer (core/kkt.py) inverts
+them. Units: seconds, Hz, watts, bits.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+from repro.configs.base import ComputeConfig, WirelessConfig
+
+
+# ---------------------------------------------------------------------------
+# Computation model (Eqs. 3-5)
+# ---------------------------------------------------------------------------
+
+
+def gpu_frequency(cc: ComputeConfig) -> float:
+    """Eq. 3: f_m = 1 / (a_s + a_c/f_c + a_M/f_M).
+
+    With the paper's constants this caps at the effective GPU frequency
+    combining static, core and memory terms (Abe et al. [12]).
+    """
+    return 1.0 / (cc.a_s + cc.a_c / cc.core_freq_hz + cc.a_m / cc.mem_freq_hz)
+
+
+def cycles_per_iteration(cc: ComputeConfig) -> float:
+    """G_m: GPU cycles for one mini-batch-size-1 iteration (measured
+    offline in the paper; here cycles/bit x bits/sample)."""
+    return cc.cycles_per_bit * cc.bits_per_sample
+
+
+def local_compute_time(b: float, G_m: float, f_m: float) -> float:
+    """Eq. 4: T_cp^m = G_m * b / f_m (one mini-batch SGD iteration)."""
+    return G_m * b / f_m
+
+
+def round_compute_time(b: float, G: Sequence[float], f: Sequence[float]) -> float:
+    """Eq. 5: synchronous straggler bound T_cp = max_m T_cp^m."""
+    return float(max(local_compute_time(b, g, fm) for g, fm in zip(G, f)))
+
+
+# ---------------------------------------------------------------------------
+# Communication model (Eqs. 6-7)
+# ---------------------------------------------------------------------------
+
+
+def uplink_rate(wc: WirelessConfig, p_m: float, h_m: float) -> float:
+    """Shannon rate B*log2(1 + p*h/N0) in bits/s. N0 is total noise power
+    over the band (noise PSD x bandwidth)."""
+    n0_w = 10 ** (wc.noise_dbm_per_hz / 10.0) * 1e-3 * wc.bandwidth_hz
+    snr = p_m * h_m / n0_w
+    return wc.bandwidth_hz * np.log2(1.0 + snr)
+
+
+def uplink_time(update_bits: float, wc: WirelessConfig, p_m: float, h_m: float) -> float:
+    """Eq. 6: T_cm^m = s / rate."""
+    return update_bits / uplink_rate(wc, p_m, h_m)
+
+
+def round_comm_time(
+    update_bits: float, wc: WirelessConfig,
+    p: Sequence[float], h: Sequence[float],
+) -> float:
+    """Eq. 7: synchronous T_cm = max_m T_cm^m."""
+    return float(max(uplink_time(update_bits, wc, pm, hm) for pm, hm in zip(p, h)))
+
+
+# ---------------------------------------------------------------------------
+# Round / overall time (Eq. 8, Eq. 13)
+# ---------------------------------------------------------------------------
+
+
+def round_time(T_cm: float, T_cp: float, V: int) -> float:
+    """Eq. 8: T = T_cm + V * T_cp."""
+    return T_cm + V * T_cp
+
+
+def overall_time(H: float, T: float) -> float:
+    """Eq. 13: 𝒯 = H * T."""
+    return H * T
+
+
+# ---------------------------------------------------------------------------
+# Device population (heterogeneity draw for the simulator)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DevicePopulation:
+    """Per-device compute (G_m, f_m) and channel (p_m, h_m) draws."""
+
+    G: np.ndarray  # cycles per sample per iteration
+    f: np.ndarray  # effective processor frequency, Hz
+    p: np.ndarray  # tx power, W
+    h: np.ndarray  # channel gain
+
+    @property
+    def n(self) -> int:
+        return len(self.G)
+
+
+def draw_population(
+    n_devices: int,
+    cc: ComputeConfig,
+    wc: WirelessConfig,
+    seed: int = 0,
+    heterogeneity: float = 0.3,
+) -> DevicePopulation:
+    """Draw a heterogeneous device population.
+
+    G_m and f_m jitter log-normally around the paper's nominal values;
+    channel gains follow exponential (Rayleigh-power) fading around the
+    mean pathloss. heterogeneity=0 gives the paper's homogeneous setting
+    (equal f_m = 2 GHz for all devices).
+    """
+    rng = np.random.default_rng(seed)
+    G0 = cycles_per_iteration(cc)
+    f0 = gpu_frequency(cc)
+    jitter = lambda: np.exp(rng.normal(0.0, heterogeneity, n_devices))
+    h = wc.mean_channel_gain * (
+        rng.exponential(1.0, n_devices) if heterogeneity > 0
+        else np.ones(n_devices))
+    return DevicePopulation(
+        G=G0 * jitter() if heterogeneity > 0 else np.full(n_devices, G0),
+        f=f0 / jitter() if heterogeneity > 0 else np.full(n_devices, f0),
+        p=np.full(n_devices, wc.tx_power_w),
+        h=h,
+    )
+
+
+def population_round_times(
+    pop: DevicePopulation, b: float, update_bits: float, wc: WirelessConfig,
+) -> tuple[float, float]:
+    """(T_cm, T_cp) for a population at batch size b (Eqs. 5, 7)."""
+    T_cp = round_compute_time(b, pop.G, pop.f)
+    T_cm = round_comm_time(update_bits, wc, pop.p, pop.h)
+    return T_cm, T_cp

@@ -1,0 +1,7 @@
+from repro.data.pipeline import BatchIterator, token_batches
+from repro.data.synthetic import (
+    ClassificationData,
+    make_cifar_like,
+    make_mnist_like,
+    make_token_stream,
+)

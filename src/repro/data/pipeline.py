@@ -1,0 +1,50 @@
+"""Batching pipeline: deterministic, seeded, epoch-shuffled mini-batches."""
+from __future__ import annotations
+
+from typing import Dict, Iterator
+
+import numpy as np
+
+from repro.data.synthetic import ClassificationData
+
+
+class BatchIterator:
+    """Infinite shuffled mini-batch iterator over index-selected data."""
+
+    def __init__(
+        self, data: ClassificationData, indices: np.ndarray, batch_size: int,
+        seed: int = 0,
+    ):
+        self.data = data
+        self.indices = np.asarray(indices)
+        self.batch_size = int(batch_size)
+        self.rng = np.random.default_rng(seed)
+        self._order = self.rng.permutation(self.indices)
+        self._ptr = 0
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        """Always returns exactly batch_size samples (fixed shapes keep one
+        jit compilation across heterogeneous clients); small partitions
+        sample with replacement."""
+        n = len(self._order)
+        bs = self.batch_size
+        if n < bs:
+            idx = self.rng.choice(self.indices, size=bs, replace=True)
+            return {"x": self.data.x[idx], "y": self.data.y[idx]}
+        if self._ptr + bs > n:
+            self._order = self.rng.permutation(self.indices)
+            self._ptr = 0
+        idx = self._order[self._ptr : self._ptr + bs]
+        self._ptr += bs
+        return {"x": self.data.x[idx], "y": self.data.y[idx]}
+
+    def batches(self, count: int) -> Iterator[Dict[str, np.ndarray]]:
+        for _ in range(count):
+            yield self.next_batch()
+
+
+def token_batches(stream: np.ndarray, batch: int, seq: int, step: int, seed: int = 0):
+    """Slice a token stream into (batch, seq+1) training windows."""
+    rng = np.random.default_rng(seed + step)
+    starts = rng.integers(0, len(stream) - seq - 1, batch)
+    return np.stack([stream[s : s + seq + 1] for s in starts]).astype(np.int32)

@@ -1,0 +1,8 @@
+from repro.federated import (
+    client,
+    compression,
+    mesh_rounds,
+    partition,
+    server,
+    simulation,
+)

@@ -1,0 +1,47 @@
+"""Client-side local computation (Alg. 1 line 3): V local mini-batch SGD
+steps toward a theta-approximate local solution."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.api import Optimizer, apply_updates
+
+
+def make_local_update(loss_fn: Callable, opt: Optimizer):
+    """Build a jitted V-step local update.
+
+    loss_fn(params, batch) -> (loss, metrics). Batches are stacked pytrees
+    with leading axis V; runs jax.lax.scan over them.
+    """
+
+    @jax.jit
+    def local_update(params, opt_state, batches):
+        def step(carry, batch):
+            p, s = carry
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
+            updates, s = opt.update(grads, s, p)
+            return (apply_updates(p, updates), s), loss
+
+        (params, opt_state), losses = jax.lax.scan(step, (params, opt_state), batches)
+        return params, opt_state, losses
+
+    return local_update
+
+
+def client_round(
+    local_update, global_params, opt_state, batches_stacked,
+) -> Tuple[Any, Any, jnp.ndarray]:
+    """One client's round: start at the global model, work V steps, return
+    the local model update (delta) and losses."""
+    new_params, opt_state, losses = local_update(
+        global_params, opt_state, batches_stacked)
+    delta = jax.tree.map(lambda n, g: n - g, new_params, global_params)
+    return delta, opt_state, losses
+
+
+def stack_batches(batches: List[Dict]) -> Dict:
+    """[batch, ...] (length V) -> pytree with leading V axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)

@@ -1,0 +1,204 @@
+"""Mesh-level DEFL round step: the datacenter realization of Algorithm 1.
+
+Clients are a stacked leading axis C on every param/opt leaf, sharded over
+the mesh's client axes ('data', and 'pod' x 'data' multi-pod). One round
+step = V local SGD steps per client (vmapped: zero cross-client
+collectives) + weighted FedAvg aggregation (one param-sized all-reduce) +
+broadcast. The paper's talk/work ratio is therefore visible directly in
+the compiled HLO: collective bytes per round ~ |params|, compute ~ V
+forward/backward passes (see EXPERIMENTS.md §Roofline).
+
+Aggregation modes:
+  'allreduce'  : psum-style weighted mean in fp32 (paper-faithful sync).
+  'int8_gather': beyond-paper — per-client int8 quantized deltas are
+                 all-gathered and combined locally, shrinking collective
+                 bytes ~4x (federated/compression.py semantics inline).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.api import Optimizer, apply_updates
+
+
+def local_steps_fn(loss_fn: Callable, opt: Optimizer):
+    """(params, opt_state, batches[V]) -> (params', opt_state', mean_loss)."""
+
+    def run(params, opt_state, batches):
+        def step(carry, batch):
+            p, s = carry
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
+            updates, s = opt.update(grads, s, p)
+            return (apply_updates(p, updates), s), loss
+
+        (params, opt_state), losses = jax.lax.scan(step, (params, opt_state), batches)
+        return params, opt_state, jnp.mean(losses)
+
+    return run
+
+
+def _weighted_mean_bcast(stacked, weights):
+    """sum_c w_c x_c, broadcast back to all C rows (keeps leaves (C, ...))."""
+    C = weights.shape[0]
+
+    def agg(x):
+        w = weights.astype(jnp.float32)
+        mean = jnp.tensordot(w, x.astype(jnp.float32), axes=(0, 0))
+        return jnp.broadcast_to(mean[None].astype(x.dtype), x.shape)
+
+    return jax.tree.map(agg, stacked)
+
+
+def _int8_gather_mean_bcast(new_params, old_params, weights, key):
+    """Quantize per-client deltas to int8, combine, add to the (shared) old
+    params, broadcast. old_params rows are identical pre-round, so using row
+    data is consistent under the client-axis sharding."""
+
+    def agg(new, old):
+        delta = (new - old).astype(jnp.float32)  # (C, ...)
+        flat = delta.reshape(delta.shape[0], -1)
+        absmax = jnp.max(jnp.abs(flat), axis=-1, keepdims=True)
+        scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+        q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+        # The all-gather happens here under GSPMD: q is client-sharded and the
+        # weighted sum contracts the client axis.
+        deq = q.astype(jnp.float32) * scale
+        mean = jnp.tensordot(weights.astype(jnp.float32), deq, axes=(0, 0))
+        agg_new = old[0].reshape(-1) + mean
+        return jnp.broadcast_to(
+            agg_new.reshape(old.shape[1:])[None].astype(new.dtype), new.shape)
+
+    return jax.tree.map(agg, new_params, old_params)
+
+
+def _int8_shardmap_sync(mesh, param_specs_tree, client_axes):
+    """Explicit-collective int8 sync: each client quantizes its delta to
+    int8 locally, `lax.all_gather` moves INT8 (+ fp32 scales) over the
+    client axes, dequant + weighted-combine happen after the gather.
+
+    Why not GSPMD: quantize-then-contract under pjit lets the partitioner
+    place the collective on the dequantized fp32 tensor (measured: WORSE
+    than plain all-reduce — EXPERIMENTS.md §Perf iteration A3/B-int8).
+    shard_map pins int8 on the wire: ~4x fewer sync bytes than fp32
+    all-reduce at one extra rounding step (unbiased via the stochastic
+    quantizer semantics; deterministic rounding here since the round-step
+    PRNG lives outside the sync)."""
+    from jax import shard_map as _shard_map  # jax >= 0.8
+
+    axis = client_axes if len(client_axes) > 1 else client_axes[0]
+
+    def sync(new_p, old_p, weights):
+        def leaf(new, old, spec):
+            def body(n_loc, o_loc, w_all):
+                # n_loc/o_loc: (1, ...) local client row(s).
+                delta = (n_loc - o_loc).astype(jnp.float32).reshape(
+                    n_loc.shape[0], -1)
+                absmax = jnp.max(jnp.abs(delta), axis=-1, keepdims=True)
+                scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+                q = jnp.clip(jnp.round(delta / scale), -127, 127).astype(jnp.int8)
+                qg = jax.lax.all_gather(q, axis)  # int8 on the wire
+                sg = jax.lax.all_gather(scale, axis)
+                if isinstance(axis, tuple):
+                    qg = qg.reshape(-1, *qg.shape[len(axis):])
+                    sg = sg.reshape(-1, *sg.shape[len(axis):])
+                qg = qg.reshape(-1, delta.shape[-1])
+                sg = sg.reshape(-1, 1)
+                mean = jnp.tensordot(
+                    w_all, qg.astype(jnp.float32) * sg, axes=(0, 0))
+                out = o_loc.reshape(o_loc.shape[0], -1) + mean[None]
+                return out.reshape(o_loc.shape).astype(n_loc.dtype)
+
+            in_specs = (spec, spec, jax.sharding.PartitionSpec())
+            return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                              out_specs=spec, check_vma=False)(
+                new, old, weights)
+
+        return jax.tree.map(leaf, new_p, old_p, param_specs_tree)
+
+    return sync
+
+
+def _psum_shardmap_sync(mesh, param_specs_tree, client_axes):
+    """Explicit-collective fp32 FedAvg sync: weighted psum over the client
+    axes inside shard_map.
+
+    Why not GSPMD tensordot: for leaves whose trailing dims are replicated
+    (e.g. small attention weight stacks) the partitioner lowers the
+    client-axis contraction as a FULL all-gather of the stacked fp32
+    weights (measured 197 GB/leaf on llava-next-34b — EXPERIMENTS.md
+    §Perf B). A pinned psum moves 2x the leaf shard instead."""
+    from jax import shard_map as _shard_map
+
+    axes = tuple(client_axes)
+
+    def sync(new_p, weights):
+        def leaf(new, spec):
+            def body(n_loc, w_all):
+                idx = jax.lax.axis_index(axes[0])
+                if len(axes) > 1:
+                    for a in axes[1:]:
+                        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+                w = w_all[idx].astype(jnp.float32)
+                agg = jax.lax.psum(w * n_loc.astype(jnp.float32),
+                                   axes if len(axes) > 1 else axes[0])
+                return jnp.broadcast_to(agg[:1], n_loc.shape).astype(n_loc.dtype)
+
+            in_specs = (spec, jax.sharding.PartitionSpec())
+            return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                              out_specs=spec, check_vma=False)(new, weights)
+
+        return jax.tree.map(leaf, new_p, param_specs_tree)
+
+    return sync
+
+
+def build_round_step(
+    loss_fn: Callable,
+    opt: Optimizer,
+    V: int,
+    aggregation: str = "allreduce",
+    mesh=None,
+    param_specs_tree=None,
+    client_axes=None,
+):
+    """Build round_step(params_C, opt_C, batches, weights) with leaves
+    stacked on a leading client axis C and batches (C, V, ...).
+
+    aggregation in ('allreduce_shardmap', 'int8_shardmap') needs
+    (mesh, param_specs_tree, client_axes) for the explicit-collective path;
+    'allreduce' is the plain GSPMD tensordot used on a single device."""
+    local = local_steps_fn(loss_fn, opt)
+    int8_sync = psum_sync = None
+    if aggregation == "int8_shardmap":
+        int8_sync = _int8_shardmap_sync(mesh, param_specs_tree, client_axes)
+    if aggregation == "allreduce_shardmap":
+        psum_sync = _psum_shardmap_sync(mesh, param_specs_tree, client_axes)
+
+    def round_step(params_C, opt_C, batches, weights):
+        new_p, new_s, losses = jax.vmap(local)(params_C, opt_C, batches)
+        if aggregation == "allreduce":
+            agg_p = _weighted_mean_bcast(new_p, weights)
+        elif aggregation == "allreduce_shardmap":
+            agg_p = psum_sync(new_p, weights)
+        elif aggregation == "int8_gather":
+            agg_p = _int8_gather_mean_bcast(
+                new_p, params_C, weights, key=None)
+        elif aggregation == "int8_shardmap":
+            agg_p = int8_sync(new_p, params_C, weights)
+        else:
+            raise ValueError(aggregation)
+        metrics = {"loss": jnp.tensordot(weights.astype(jnp.float32),
+                                         losses, axes=(0, 0))}
+        return agg_p, new_s, metrics
+
+    return round_step
+
+
+def replicate_clients(tree: Any, n_clients: int) -> Any:
+    """Stack identical client copies on a new leading axis."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_clients, *x.shape)), tree)

@@ -1,0 +1,25 @@
+"""Parameter-server side (Alg. 1 line 5): weighted aggregation + broadcast."""
+from __future__ import annotations
+
+from typing import Any, List, Sequence
+
+import jax
+import numpy as np
+
+from repro.optim.api import apply_updates
+from repro.utils.tree import tree_weighted_mean
+
+
+def aggregate_updates(
+    global_params: Any, deltas: List[Any], data_sizes: Sequence[int],
+) -> Any:
+    """FedAvg: w <- w + sum_m (D_m / D) * delta_m (Eq. 2 weighting)."""
+    weights = np.asarray(data_sizes, dtype=np.float64)
+    mean_delta = tree_weighted_mean(deltas, weights)
+    return apply_updates(global_params, mean_delta)
+
+
+def broadcast(global_params: Any, n_devices: int) -> List[Any]:
+    """Broadcast the global model (identity copies; device placement is the
+    mesh runtime's job in launch/train.py)."""
+    return [global_params for _ in range(n_devices)]

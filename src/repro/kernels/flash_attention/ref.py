@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for flash attention (same contract as kernel.py)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (BH, Sq, hd)
+    k: jnp.ndarray,  # (BH, Sk, hd)
+    v: jnp.ndarray,  # (BH, Sk, hd)
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    Sq, Sk = q.shape[1], k.shape[1]
+    hd = q.shape[-1]
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    s = jnp.where(mask[None], s, NEG_INF)
+    # Fully-masked rows -> zeros (matches kernel semantics).
+    row_valid = mask.any(axis=1)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(row_valid[None, :, None], p, 0.0)
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(q.dtype)

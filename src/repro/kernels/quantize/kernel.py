@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: rowwise int8 stochastic-rounding quantization.
+
+Used by the federated 'talk' compression (DESIGN.md §6): each client's
+update rows are scaled to int8 with an unbiased stochastic round before
+the uplink/all-gather. Grid tiles rows into VMEM blocks; randomness comes
+in as a pre-drawn uniform tile (keeps the kernel deterministic w.r.t. the
+caller's PRNG and identical between interpret and compiled modes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, u_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)  # (block_r, D)
+    u = u_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.floor(x / scale + u)
+    q_ref[...] = jnp.clip(q, -127, 127).astype(jnp.int8)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+def quantize_kernel(
+    x: jnp.ndarray,  # (R, D) fp32
+    uniform: jnp.ndarray,  # (R, D) fp32 in [0, 1)
+    *,
+    block_r: int = 256,
+    interpret: bool = True,
+):
+    R, D = x.shape
+    assert R % block_r == 0
+    grid = (R // block_r,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, D), lambda r: (r, 0)),
+            pl.BlockSpec((block_r, D), lambda r: (r, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_r, D), lambda r: (r, 0)),
+            pl.BlockSpec((block_r, 1), lambda r: (r, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, D), jnp.int8),
+            jax.ShapeDtypeStruct((R, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, uniform)

@@ -1,0 +1,31 @@
+"""jit'd wrapper for the quantize kernel (row padding + PRNG handling)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize.kernel import quantize_kernel
+from repro.kernels.quantize.ref import dequantize_ref
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def quantize(x: jnp.ndarray, key, block_r: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (R, D) fp32 -> (q int8 (R, D), scale (R, 1))."""
+    R, D = x.shape
+    u = jax.random.uniform(key, (R, D), jnp.float32)
+    pad = (-R) % block_r
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        u = jnp.pad(u, ((0, pad), (0, 0)))
+    q, s = quantize_kernel(x, u, block_r=min(block_r, x.shape[0]),
+                           interpret=not _is_tpu())
+    return q[:R], s[:R]
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return dequantize_ref(q, scale)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for int8 stochastic-rounding quantization.
+
+Contract (shared with the Pallas kernel):
+
+  q, scale = quantize(x, key)     x: (..., d) fp32 -> q int8, scale fp32 per row
+  x_hat    = dequantize(q, scale)
+
+Stochastic rounding makes the quantizer unbiased: E[x_hat] = x, which is
+what lets FedAvg aggregate compressed updates without systematic drift
+(the 'talk' compression of DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_ref(x: jnp.ndarray, key) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Rowwise symmetric int8 quantization with stochastic rounding.
+
+    x: (R, D) fp32. Returns (q int8 (R, D), scale fp32 (R, 1))."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    y = x / scale
+    noise = jax.random.uniform(key, x.shape, jnp.float32)
+    q = jnp.floor(y + noise)
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel for the Mamba-1 selective scan.
+
+TPU mapping (DESIGN.md §6): grid = (batch, d_inner/block_d, n_chunks).
+The TPU executes the grid sequentially (last axis fastest), so the SSM
+state h (block_d, N) lives in VMEM scratch and is carried across the
+chunk axis — an explicit realization of the chunked-scan recurrence with
+only (1, L, block_d) tiles of x/dt and (1, L, N) tiles of B/C resident in
+VMEM per step. Inside a chunk the recurrence runs as a fori_loop over L
+steps of (block_d, N) VPU element-wise ops.
+
+Validated interpret=True against ref.selective_scan_ref / _sequential
+(tests/test_kernels_scan.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref,
+                 y_ref, h_ref, h_scratch, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    x = x_ref[0].astype(jnp.float32)  # (L, bd)
+    dt = dt_ref[0].astype(jnp.float32)  # (L, bd)
+    A = a_ref[...].astype(jnp.float32)  # (bd, N)
+    Bc = b_ref[0].astype(jnp.float32)  # (L, N)
+    Cc = c_ref[0].astype(jnp.float32)  # (L, N)
+    D = d_ref[...].astype(jnp.float32)  # (bd,)
+
+    def step(t, carry):
+        h, y = carry
+        dA = jnp.exp(dt[t][:, None] * A)  # (bd, N)
+        h = dA * h + (dt[t] * x[t])[:, None] * Bc[t][None, :]
+        y = y.at[t].set(jnp.sum(h * Cc[t][None, :], axis=1))
+        return h, y
+
+    h0 = h_scratch[...]
+    y0 = jnp.zeros((chunk, x.shape[1]), jnp.float32)
+    h, y = jax.lax.fori_loop(0, chunk, step, (h0, y0))
+    h_scratch[...] = h
+    y_ref[0] = (y + D[None, :] * x).astype(y_ref.dtype)
+    h_ref[0] = h.astype(h_ref.dtype)
+
+
+def selective_scan_kernel(
+    x: jnp.ndarray,  # (B, S, D) fp32
+    dt: jnp.ndarray,  # (B, S, D)
+    A: jnp.ndarray,  # (D, N)
+    B: jnp.ndarray,  # (B, S, N)
+    C: jnp.ndarray,  # (B, S, N)
+    D: jnp.ndarray,  # (D,)
+    *,
+    chunk: int = 128,
+    block_d: int = 512,
+    interpret: bool = True,
+):
+    """Returns (y (B,S,D), h_final (B,D,N)). S % chunk == 0, D % block_d == 0
+    (ops.py pads/chooses blocks)."""
+    Bsz, S, Dm = x.shape
+    N = A.shape[1]
+    assert S % chunk == 0 and Dm % block_d == 0
+    nc = S // chunk
+    nd = Dm // block_d
+    grid = (Bsz, nd, nc)
+    kernel = functools.partial(_scan_kernel, chunk=chunk)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((block_d, N), lambda b, d, c: (d, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((block_d,), lambda b, d, c: (d,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            # h written every chunk; the last write (final state) survives.
+            pl.BlockSpec((1, block_d, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, S, Dm), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, Dm, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, D)
+    return y, h

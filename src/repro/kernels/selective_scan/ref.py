@@ -1,0 +1,94 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan (chunked parallel form).
+
+Contract (shared with the Pallas kernel in kernel.py):
+
+  y, h_final = selective_scan(x, dt, A, B, C, D, chunk, h0)
+
+  x  : (B, S, D)  fp32   post-conv activations
+  dt : (B, S, D)  fp32   softplus'd step sizes
+  A  : (D, N)     fp32   negative-real state matrix (diag)
+  B  : (B, S, N)  fp32   input projection
+  C  : (B, S, N)  fp32   output projection
+  D  : (D,)       fp32   skip
+  h0 : (B, D, N)  fp32   initial state (None = zeros)
+
+Recurrence: h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+            y_t = (h_t · C_t) + D * x_t
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _assoc_op(left, right):
+    a1, b1 = left
+    a2, b2 = right
+    return a1 * a2, b1 * a2 + b2
+
+
+def selective_scan_ref(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    C: jnp.ndarray,
+    D: jnp.ndarray,
+    chunk: int = 128,
+    h0: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    Bsz, S, Dm = x.shape
+    N = A.shape[1]
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        # Zero-pad the tail: dt=0 => decay=1 and input=0, so the state is
+        # carried through padding unchanged and padded outputs are dropped.
+        x, dt, B, C = (jnp.pad(t, ((0, 0), (0, pad), (0, 0))) for t in (x, dt, B, C))
+        y, h = selective_scan_ref(x, dt, A, B, C, D, chunk=chunk, h0=h0)
+        return y[:, :S], h
+    nc = S // L
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, Dm, N), jnp.float32)
+
+    # Reshape to (nc, B, L, ...) for lax.scan over chunks.
+    def to_chunks(t):
+        return jnp.swapaxes(t.reshape(Bsz, nc, L, *t.shape[2:]), 0, 1)
+
+    xs = (to_chunks(x), to_chunks(dt), to_chunks(B), to_chunks(C))
+
+    def chunk_step(h, inp):
+        xc, dtc, Bc, Cc = inp  # (B, L, ...)
+        dA = jnp.exp(dtc[..., None] * A[None, None])  # (B, L, D, N)
+        dBx = (dtc * xc)[..., None] * Bc[:, :, None, :]  # (B, L, D, N)
+        a_cum, b_cum = jax.lax.associative_scan(_assoc_op, (dA, dBx), axis=1)
+        hs = a_cum * h[:, None] + b_cum  # (B, L, D, N)
+        yc = jnp.einsum("bldn,bln->bld", hs, Cc)
+        return hs[:, -1], yc
+
+    h_final, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = jnp.swapaxes(ys, 0, 1).reshape(Bsz, S, Dm)
+    return y + D[None, None] * x, h_final
+
+
+def selective_scan_sequential(
+    x, dt, A, B, C, D, h0=None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Step-by-step scan — the ground-truth oracle for the chunked forms."""
+    Bsz, S, Dm = x.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, Dm, N), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp
+        dA = jnp.exp(dtt[..., None] * A[None])
+        h = dA * h + (dtt * xt)[..., None] * Bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, Ct)
+        return h, y
+
+    xs = tuple(jnp.swapaxes(t, 0, 1) for t in (x, dt, B, C))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return jnp.swapaxes(ys, 0, 1) + D[None, None] * x, h_final

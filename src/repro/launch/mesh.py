@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — dryrun.py must set XLA_FLAGS before any jax
+device query.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) ('data', 'model') single pod — 256 chips;
+    (2, 16, 16) ('pod', 'data', 'model') — 512 chips across 2 pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_from_config(mc: MeshConfig):
+    return make_production_mesh(multi_pod=mc.multi_pod)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CI-scale sharding tests (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count>=prod(shape))."""
+    return jax.make_mesh(shape, axes)

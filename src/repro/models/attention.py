@@ -1,0 +1,219 @@
+"""GQA attention: train forward, prefill (cache write) and decode step.
+
+Supports qk-norm (Qwen3), QKV bias (Qwen2), sliding-window (the sub-quadratic
+variant that qualifies dense archs for the long_500k decode shape), and a
+Pallas flash-attention path for TPU targets (``impl='pallas'``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.models.norms import init_rms_norm, rms_norm
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model: int, cfg: AttentionConfig) -> Dict:
+    """Head-major 3D weights: (d, H, hd) / (H, hd, d).
+
+    SHARDING NOTE (EXPERIMENTS.md §Perf iteration A2): flat (d, H*hd)
+    weights force GSPMD to shard the flattened projection dim; after the
+    (H, hd) reshape the partitioner re-shards the *contraction* of the
+    score einsum and all-reduces fp32 (S, S, heads) partial scores —
+    22.5 GB/round on qwen2-0.5b. Head-major weights + head-axis einsums
+    keep scores head-sharded (padded when H % mesh != 0) and off the wire.
+    """
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    hd, h, kvh = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    scale_in = 1.0 / (d_model ** 0.5)
+    scale_out = 1.0 / ((h * hd) ** 0.5)
+    p = {
+        "wq": jax.random.normal(kq, (d_model, h, hd), jnp.float32) * scale_in,
+        "wk": jax.random.normal(kk, (d_model, kvh, hd), jnp.float32) * scale_in,
+        "wv": jax.random.normal(kv, (d_model, kvh, hd), jnp.float32) * scale_in,
+        "wo": jax.random.normal(ko, (h, hd, d_model), jnp.float32) * scale_out,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), jnp.float32)
+        p["bk"] = jnp.zeros((kvh, hd), jnp.float32)
+        p["bv"] = jnp.zeros((kvh, hd), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms_norm(hd)
+        p["k_norm"] = init_rms_norm(hd)
+    return p
+
+
+def _project_qkv(p: Dict, x: jnp.ndarray, cfg: AttentionConfig, positions):
+    """x: (B, S, d) -> q (B,S,H,hd), k,v (B,S,KV,hd), roped."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask) -> jnp.ndarray:
+    """Reference scaled-dot-product GQA attention.
+
+    q: (B,S,H,hd), k/v: (B,T,KV,hd), mask: (S,T) or (B,S,T) bool (True=keep).
+    KV heads are repeated to H *before* the score einsum so both score
+    operands carry the same sharded head axis (no contraction resharding).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+    logits = logits / (hd ** 0.5)
+    if mask.ndim == 2:
+        mask_b = mask[None, None]
+    else:
+        mask_b = mask[:, None]
+    logits = jnp.where(mask_b, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def _causal_mask(S: int, window: Optional[int]) -> jnp.ndarray:
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    m = j <= i
+    if window is not None:
+        m = m & (j > i - window)
+    return m
+
+
+def _blocked_causal_sdpa(q, k, v, window: Optional[int], block: int = 2048):
+    """Causal attention computed per query block against only its valid
+    context — skips the strictly-upper triangle, ~2x fewer score/PV FLOPs
+    than the dense-masked _sdpa at long S (the XLA-path analogue of flash
+    attention's block skipping; used by the prefill perf path)."""
+    B, S, H, hd = q.shape
+    outs = []
+    for i in range(0, S, block):
+        bq = min(block, S - i)
+        q_i = q[:, i : i + bq]
+        end = i + bq
+        start = 0 if window is None else max(0, end - window - bq)
+        k_i = k[:, start:end]
+        v_i = v[:, start:end]
+        q_pos = i + jnp.arange(bq)
+        k_pos = start + jnp.arange(end - start)
+        mask = k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        outs.append(_sdpa(q_i, k_i, v_i, mask))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention_forward(
+    p: Dict,
+    x: jnp.ndarray,
+    cfg: AttentionConfig,
+    positions: jnp.ndarray,
+    impl: str = "xla",
+) -> jnp.ndarray:
+    """Causal self-attention over the full sequence. x: (B, S, d)."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(q, k, v, causal=True, window=cfg.sliding_window)
+    elif impl == "blocked":
+        out = _blocked_causal_sdpa(q, k, v, cfg.sliding_window)
+    else:
+        mask = _causal_mask(x.shape[1], cfg.sliding_window)
+        out = _sdpa(q, k, v, mask)
+    return jnp.einsum("bshd,hdo->bso", out, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# KV cache (full-length or sliding-window ring buffer)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(
+    batch: int, max_len: int, cfg: AttentionConfig, dtype=jnp.bfloat16
+) -> Dict:
+    length = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    shape = (batch, length, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_prefill(
+    p: Dict, x: jnp.ndarray, cfg: AttentionConfig, positions, cache: Dict,
+    impl: str = "xla",
+) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence forward that also fills the KV cache."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    S = x.shape[1]
+    L = cache["k"].shape[1]
+    if cfg.sliding_window and S > L:
+        # Ring buffer keeps the last L positions at slot p % L (the decode
+        # step writes pos % L, so the layout must match).
+        slots = jnp.arange(S - L, S) % L
+        cache = {"k": cache["k"].at[:, slots].set(
+                     k[:, S - L:].astype(cache["k"].dtype)),
+                 "v": cache["v"].at[:, slots].set(
+                     v[:, S - L:].astype(cache["v"].dtype))}
+    else:
+        cache = {
+            "k": jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+        }
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(q, k, v, causal=True, window=cfg.sliding_window)
+    elif impl == "blocked":
+        out = _blocked_causal_sdpa(q, k, v, cfg.sliding_window)
+    else:
+        mask = _causal_mask(S, cfg.sliding_window)
+        out = _sdpa(q, k, v, mask)
+    return jnp.einsum("bshd,hdo->bso", out, p["wo"].astype(x.dtype)), cache
+
+
+def attention_decode_step(
+    p: Dict, x: jnp.ndarray, cfg: AttentionConfig, pos: jnp.ndarray, cache: Dict
+) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode against the KV cache.
+
+    x: (B, 1, d); pos: scalar int32 (current absolute position).
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    L = cache["k"].shape[1]
+    slot = jnp.mod(pos, L) if cfg.sliding_window else pos
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    cache = {"k": ck, "v": cv}
+    # Valid positions: for full cache, j <= pos; for ring buffer every slot
+    # written so far is in-window by construction.
+    j = jnp.arange(L)
+    if cfg.sliding_window:
+        valid = (j <= jnp.minimum(pos, L - 1)) | (pos >= L)
+        mask = valid[None, :]  # (1, L): query row attends to valid slots
+    else:
+        mask = (j <= pos)[None, :]
+    out = _sdpa(q, ck, cv, mask)
+    return jnp.einsum("bshd,hdo->bso", out, p["wo"].astype(x.dtype)), cache

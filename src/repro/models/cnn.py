@@ -1,0 +1,88 @@
+"""The paper's evaluation model: the FedAvg CNN (McMahan et al. [2]) for
+MNIST / CIFAR-10 image classification — two 5x5 conv + pool stages, one
+512-unit FC layer, softmax head."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    input_hw: Tuple[int, int]
+    in_channels: int
+    n_classes: int = 10
+    conv_channels: Tuple[int, int] = (32, 64)
+    kernel: int = 5
+    fc_dim: int = 512
+
+    @property
+    def flat_dim(self) -> int:
+        h, w = self.input_hw
+        return (h // 4) * (w // 4) * self.conv_channels[1]
+
+
+def mnist_cnn() -> CNNConfig:
+    return CNNConfig(name="cnn-mnist", input_hw=(28, 28), in_channels=1)
+
+
+def cifar_cnn() -> CNNConfig:
+    return CNNConfig(name="cnn-cifar", input_hw=(32, 32), in_channels=3)
+
+
+def init_cnn(cfg: CNNConfig, key) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    c1, c2 = cfg.conv_channels
+    k = cfg.kernel
+
+    def conv_init(key, shape):
+        fan_in = shape[0] * shape[1] * shape[2]
+        return jax.random.normal(key, shape, jnp.float32) * (2.0 / fan_in) ** 0.5
+
+    def fc_init(key, shape):
+        return jax.random.normal(key, shape, jnp.float32) * (2.0 / shape[0]) ** 0.5
+
+    return {
+        "conv1": {"w": conv_init(k1, (k, k, cfg.in_channels, c1)),
+                  "b": jnp.zeros((c1,), jnp.float32)},
+        "conv2": {"w": conv_init(k2, (k, k, c1, c2)),
+                  "b": jnp.zeros((c2,), jnp.float32)},
+        "fc1": {"w": fc_init(k3, (cfg.flat_dim, cfg.fc_dim)),
+                "b": jnp.zeros((cfg.fc_dim,), jnp.float32)},
+        "fc2": {"w": fc_init(k4, (cfg.fc_dim, cfg.n_classes)),
+                "b": jnp.zeros((cfg.n_classes,), jnp.float32)},
+    }
+
+
+def _conv(x, p):
+    out = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + p["b"]
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_forward(cfg: CNNConfig, params: Dict, images: jnp.ndarray) -> jnp.ndarray:
+    """images: (B, H, W, C) -> logits (B, n_classes)."""
+    x = _maxpool(jax.nn.relu(_conv(images, params["conv1"])))
+    x = _maxpool(jax.nn.relu(_conv(x, params["conv2"])))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def cnn_loss(cfg: CNNConfig, params: Dict, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+    logits = cnn_forward(cfg, params, batch["x"])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
+    loss = jnp.mean(nll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+    return loss, {"ce_loss": loss, "accuracy": acc}

@@ -1,0 +1,130 @@
+"""Mamba-1 block (falcon-mamba): selective SSM with chunked parallel scan.
+
+TPU adaptation (DESIGN.md §3): the CUDA selective-scan kernel is replaced by
+a chunked scan — `lax.scan` over sequence chunks carrying the (D, N) state,
+with a `lax.associative_scan` inside each chunk. This bounds the materialized
+(B, L, D, N) tensor to one chunk and maps onto the TPU VPU; the Pallas
+`selective_scan` kernel implements the same contract with explicit VMEM
+tiling (kernels/selective_scan).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.kernels.selective_scan.ref import selective_scan_ref
+
+
+def mamba1_dims(d_model: int, cfg: SSMConfig):
+    d_in = cfg.expand * d_model
+    dt_rank = max(d_model // 16, 1)
+    return d_in, dt_rank
+
+
+def init_mamba1(key, d_model: int, cfg: SSMConfig) -> Dict:
+    d_in, dt_rank = mamba1_dims(d_model, cfg)
+    keys = jax.random.split(key, 7)
+    si = 1.0 / (d_model ** 0.5)
+    sx = 1.0 / (d_in ** 0.5)
+    # S4D-real initialization for A.
+    A = jnp.tile(jnp.arange(1, cfg.d_state + 1, dtype=jnp.float32), (d_in, 1))
+    return {
+        "in_x": jax.random.normal(keys[0], (d_model, d_in), jnp.float32) * si,
+        "in_z": jax.random.normal(keys[1], (d_model, d_in), jnp.float32) * si,
+        "conv_w": jax.random.normal(keys[2], (cfg.d_conv, d_in), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "x_proj": jax.random.normal(
+            keys[3], (d_in, dt_rank + 2 * cfg.d_state), jnp.float32) * sx,
+        "dt_w": jax.random.normal(keys[4], (dt_rank, d_in), jnp.float32)
+        * (1.0 / (dt_rank ** 0.5)),
+        "dt_b": jnp.log(jnp.expm1(jnp.full((d_in,), 0.01, jnp.float32))),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": jax.random.normal(keys[5], (d_in, d_model), jnp.float32) * sx,
+    }
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x: (B, S, D); w: (K, D); b: (D,)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(K)
+    )
+    return out + b.astype(x.dtype)
+
+
+def _ssm_inputs(p: Dict, x_c: jnp.ndarray, cfg: SSMConfig):
+    d_in = x_c.shape[-1]
+    dt_rank = p["dt_w"].shape[0]
+    proj = x_c @ p["x_proj"].astype(x_c.dtype)
+    dt_in, B_t, C_t = jnp.split(proj, [dt_rank, dt_rank + cfg.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_in @ p["dt_w"].astype(x_c.dtype)).astype(jnp.float32) + p["dt_b"]
+    )
+    A = -jnp.exp(p["A_log"])  # (D, N)
+    return dt, A, B_t.astype(jnp.float32), C_t.astype(jnp.float32)
+
+
+def mamba1_forward(
+    p: Dict, x: jnp.ndarray, cfg: SSMConfig, impl: str = "xla",
+    h0: jnp.ndarray | None = None, return_state: bool = False,
+):
+    """x: (B, S, d_model) -> (B, S, d_model) [+ final (conv_tail, h) state]."""
+    xz = x @ p["in_x"].astype(x.dtype)
+    z = x @ p["in_z"].astype(x.dtype)
+    conv_out = causal_conv1d(xz, p["conv_w"], p["conv_b"])
+    x_c = jax.nn.silu(conv_out)
+    dt, A, B_t, C_t = _ssm_inputs(p, x_c, cfg)
+    if impl == "pallas":
+        from repro.kernels.selective_scan import ops as ss_ops
+
+        y, h = ss_ops.selective_scan(
+            x_c.astype(jnp.float32), dt, A, B_t, C_t, p["D"],
+            chunk=cfg.chunk, h0=h0)
+    else:
+        y, h = selective_scan_ref(
+            x_c.astype(jnp.float32), dt, A, B_t, C_t, p["D"],
+            chunk=cfg.chunk, h0=h0)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        K = p["conv_w"].shape[0]
+        conv_tail = xz[:, -(K - 1) :, :]  # last K-1 pre-activation inputs
+        return out, (conv_tail, h)
+    return out
+
+
+def init_mamba1_cache(batch: int, d_model: int, cfg: SSMConfig, dtype=jnp.float32):
+    d_in, _ = mamba1_dims(d_model, cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, d_in), dtype),
+        "h": jnp.zeros((batch, d_in, cfg.d_state), jnp.float32),
+    }
+
+
+def mamba1_decode_step(
+    p: Dict, x: jnp.ndarray, cfg: SSMConfig, cache: Dict
+) -> Tuple[jnp.ndarray, Dict]:
+    """One-token recurrent step. x: (B, 1, d_model)."""
+    xz = x @ p["in_x"].astype(x.dtype)  # (B, 1, D)
+    z = x @ p["in_z"].astype(x.dtype)
+    window = jnp.concatenate([cache["conv"].astype(x.dtype), xz], axis=1)
+    conv_out = (
+        jnp.einsum("bkd,kd->bd", window, p["conv_w"].astype(x.dtype))
+        + p["conv_b"].astype(x.dtype)
+    )[:, None, :]
+    x_c = jax.nn.silu(conv_out)
+    dt, A, B_t, C_t = _ssm_inputs(p, x_c, cfg)
+    xf = x_c.astype(jnp.float32)[:, 0]  # (B, D)
+    dt0, B0, C0 = dt[:, 0], B_t[:, 0], C_t[:, 0]
+    dA = jnp.exp(dt0[:, :, None] * A[None])  # (B, D, N)
+    dBx = dt0[:, :, None] * B0[:, None, :] * xf[:, :, None]
+    h = dA * cache["h"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C0) + p["D"] * xf
+    y = y.astype(x.dtype)[:, None, :] * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"conv": window[:, 1:].astype(cache["conv"].dtype), "h": h}

@@ -1,0 +1,173 @@
+"""Mamba-2 block (zamba2): SSD chunked matmul form.
+
+TPU adaptation: the SSD "state-space dual" algorithm is already matmul-
+structured; we scan over sequence chunks (carrying the (H, P, N) state) and
+compute intra-chunk attention-form and inter-chunk state contributions with
+einsums that map onto the MXU. Group count G=1 (zamba2).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.mamba import causal_conv1d
+from repro.models.norms import init_rms_norm, rms_norm
+
+
+def mamba2_dims(d_model: int, cfg: SSMConfig):
+    d_in = cfg.expand * d_model
+    n_heads = d_in // cfg.head_dim
+    conv_dim = d_in + 2 * cfg.n_groups * cfg.d_state
+    return d_in, n_heads, conv_dim
+
+
+def init_mamba2(key, d_model: int, cfg: SSMConfig) -> Dict:
+    d_in, H, conv_dim = mamba2_dims(d_model, cfg)
+    GN = cfg.n_groups * cfg.d_state
+    keys = jax.random.split(key, 7)
+    si = 1.0 / (d_model ** 0.5)
+    so = 1.0 / (d_in ** 0.5)
+    return {
+        "in_z": jax.random.normal(keys[0], (d_model, d_in), jnp.float32) * si,
+        "in_x": jax.random.normal(keys[1], (d_model, d_in), jnp.float32) * si,
+        "in_B": jax.random.normal(keys[2], (d_model, GN), jnp.float32) * si,
+        "in_C": jax.random.normal(keys[3], (d_model, GN), jnp.float32) * si,
+        "in_dt": jax.random.normal(keys[4], (d_model, H), jnp.float32) * si,
+        "conv_w": jax.random.normal(keys[5], (cfg.d_conv, conv_dim), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01, jnp.float32))),
+        "norm": init_rms_norm(d_in),
+        "out_proj": jax.random.normal(keys[6], (d_in, d_model), jnp.float32) * so,
+    }
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # (B, S, H, P) fp32
+    dt: jnp.ndarray,  # (B, S, H) fp32 (softplus'd)
+    A: jnp.ndarray,  # (H,) fp32 negative
+    Bm: jnp.ndarray,  # (B, S, N) fp32  (G=1)
+    Cm: jnp.ndarray,  # (B, S, N) fp32
+    chunk: int = 128,
+    h0: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD scan. Returns y (B,S,H,P) and final state (B,H,P,N)."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        # dt=0 => decay=1 / zero input: state carried unchanged through pad.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm, Cm = (jnp.pad(t, ((0, 0), (0, pad), (0, 0))) for t in (Bm, Cm))
+        y, h = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk, h0=h0)
+        return y[:, :S], h
+    nc = S // L
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def to_chunks(t):
+        return jnp.swapaxes(t.reshape(Bsz, nc, L, *t.shape[2:]), 0, 1)
+
+    xs = (to_chunks(x), to_chunks(dt), to_chunks(Bm), to_chunks(Cm))
+
+    def chunk_step(h, inp):
+        xc, dtc, Bc, Cc = inp  # (B,L,H,P), (B,L,H), (B,L,N), (B,L,N)
+        lna = dtc * A[None, None]  # (B,L,H) log-decay per step
+        La = jnp.cumsum(lna, axis=1)  # inclusive cumulative log-decay
+        # Intra-chunk (attention form): W[l,m] = C_l·B_m * exp(La_l - La_m) for l>=m
+        scores = jnp.einsum("bln,bmn->blm", Cc, Bc)  # (B,L,L)
+        decay = jnp.exp(La[:, :, None, :] - La[:, None, :, :])  # (B,L,L,H)
+        causal = jnp.tril(jnp.ones((L, L), jnp.float32))
+        W = scores[..., None] * decay * causal[None, :, :, None]  # (B,L,L,H)
+        xdt = xc * dtc[..., None]  # (B,L,H,P)
+        y_intra = jnp.einsum("blmh,bmhp->blhp", W, xdt)
+        # Inter-chunk: contribution of the carried state.
+        y_inter = jnp.einsum("bln,bhpn,blh->blhp", Cc, h, jnp.exp(La))
+        # New carried state.
+        seg = jnp.exp(La[:, -1:, :] - La)  # decay from step m to chunk end
+        S_c = jnp.einsum("bmn,bmhp,bmh->bhpn", Bc, xdt, seg)
+        h_new = jnp.exp(La[:, -1, :])[:, :, None, None] * h + S_c
+        return h_new, y_intra + y_inter
+
+    h_final, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = jnp.swapaxes(ys, 0, 1).reshape(Bsz, S, H, P)
+    return y, h_final
+
+
+def mamba2_forward(
+    p: Dict, x: jnp.ndarray, cfg: SSMConfig,
+    h0=None, return_state: bool = False,
+):
+    B_, S, d_model = x.shape
+    d_in, H, conv_dim = mamba2_dims(d_model, cfg)
+    P = cfg.head_dim
+    N = cfg.d_state
+    z = x @ p["in_z"].astype(x.dtype)
+    xBC = jnp.concatenate(
+        [x @ p["in_x"].astype(x.dtype),
+         x @ p["in_B"].astype(x.dtype),
+         x @ p["in_C"].astype(x.dtype)], axis=-1)
+    conv_out = jax.nn.silu(causal_conv1d(xBC, p["conv_w"], p["conv_b"]))
+    x_c, Bm, Cm = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(
+        (x @ p["in_dt"].astype(x.dtype)).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = x_c.astype(jnp.float32).reshape(B_, S, H, P)
+    y, h = ssd_chunked(xh, dt, A, Bm.astype(jnp.float32),
+                       Cm.astype(jnp.float32), chunk=cfg.chunk, h0=h0)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(B_, S, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        K = p["conv_w"].shape[0]
+        conv_tail = xBC[:, -(K - 1):, :]
+        return out, (conv_tail, h)
+    return out
+
+
+def init_mamba2_cache(batch: int, d_model: int, cfg: SSMConfig, dtype=jnp.float32):
+    d_in, H, conv_dim = mamba2_dims(d_model, cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+        "h": jnp.zeros((batch, H, cfg.head_dim, cfg.d_state), jnp.float32),
+    }
+
+
+def mamba2_decode_step(
+    p: Dict, x: jnp.ndarray, cfg: SSMConfig, cache: Dict
+) -> Tuple[jnp.ndarray, Dict]:
+    """One-token recurrent step. x: (B, 1, d_model)."""
+    B_, _, d_model = x.shape
+    d_in, H, conv_dim = mamba2_dims(d_model, cfg)
+    P, N = cfg.head_dim, cfg.d_state
+    z = x @ p["in_z"].astype(x.dtype)
+    xBC = jnp.concatenate(
+        [x @ p["in_x"].astype(x.dtype),
+         x @ p["in_B"].astype(x.dtype),
+         x @ p["in_C"].astype(x.dtype)], axis=-1)
+    window = jnp.concatenate([cache["conv"].astype(x.dtype), xBC], axis=1)
+    conv_out = (
+        jnp.einsum("bkd,kd->bd", window, p["conv_w"].astype(x.dtype))
+        + p["conv_b"].astype(x.dtype))
+    conv_out = jax.nn.silu(conv_out)
+    x_c, Bm, Cm = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(
+        (x @ p["in_dt"].astype(x.dtype)).astype(jnp.float32)[:, 0] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A[None])  # (B, H)
+    xh = x_c.astype(jnp.float32).reshape(B_, H, P)
+    dBx = jnp.einsum("bn,bhp,bh->bhpn", Bm.astype(jnp.float32), xh, dt)
+    h = a[:, :, None, None] * cache["h"] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B_, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"conv": window[:, 1:].astype(cache["conv"].dtype), "h": h}

@@ -1,0 +1,32 @@
+"""Gated-linear-unit MLPs (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def init_mlp(key, d_model: int, d_ff: int) -> Dict:
+    kg, ki, ko = jax.random.split(key, 3)
+    si = 1.0 / (d_model ** 0.5)
+    so = 1.0 / (d_ff ** 0.5)
+    return {
+        "wg": jax.random.normal(kg, (d_model, d_ff), jnp.float32) * si,
+        "wi": jax.random.normal(ki, (d_model, d_ff), jnp.float32) * si,
+        "wo": jax.random.normal(ko, (d_ff, d_model), jnp.float32) * so,
+    }
+
+
+def _act(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def mlp_forward(p: Dict, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    g = _act(x @ p["wg"].astype(x.dtype), act)
+    h = g * (x @ p["wi"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype)

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based scatter dispatch.
+
+TPU adaptation notes (DESIGN.md §3/§6): instead of ragged grouped-GEMM
+(GPU-style), tokens are scattered into a dense per-expert capacity buffer
+(E, C, d) and experts run as one batched einsum — MXU friendly, and under
+GSPMD with experts sharded over the `model` axis the scatter/gather lowers
+to the expert-parallel all-to-all pattern. Overflowing tokens are dropped
+(standard capacity-factor semantics); the router aux loss keeps load
+balanced so drops stay rare.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.mlp import init_mlp, mlp_forward, _act
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig) -> Dict:
+    kr, kg, ki, ko, ks = jax.random.split(key, 5)
+    E, f = cfg.n_experts, cfg.d_ff_expert
+    si = 1.0 / (d_model ** 0.5)
+    so = 1.0 / (f ** 0.5)
+    p = {
+        "router": jax.random.normal(kr, (d_model, E), jnp.float32) * si,
+        "wg": jax.random.normal(kg, (E, d_model, f), jnp.float32) * si,
+        "wi": jax.random.normal(ki, (E, d_model, f), jnp.float32) * si,
+        "wo": jax.random.normal(ko, (E, f, d_model), jnp.float32) * so,
+    }
+    if cfg.shared_expert_d_ff:
+        p["shared"] = init_mlp(ks, d_model, cfg.shared_expert_d_ff)
+    return p
+
+
+def moe_capacity(n_tokens: int, cfg: MoEConfig, capacity_factor: float) -> int:
+    c = int(n_tokens * cfg.top_k * capacity_factor / cfg.n_experts)
+    # MXU-aligned capacity floor.
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_forward(
+    p: Dict,
+    x: jnp.ndarray,
+    cfg: MoEConfig,
+    act: str = "silu",
+    capacity_factor: float | None = None,
+) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, S, d) -> (out, metrics). metrics carries the router aux loss.
+
+    dispatch='batched' routes each batch row independently (vmapped), so
+    the capacity buffer keeps the batch axis and shards over it — see
+    MoEConfig.dispatch.
+    """
+    B, S, d = x.shape
+    if cfg.dispatch == "batched":
+        out, metrics = jax.vmap(
+            lambda row: _moe_tokens(p, row, cfg, act, capacity_factor)
+        )(x.reshape(B, S, d))
+        return out, jax.tree.map(jnp.mean, metrics)
+    out, metrics = _moe_tokens(p, x.reshape(B * S, d), cfg, act,
+                               capacity_factor)
+    return out.reshape(B, S, d), metrics
+
+
+def _moe_tokens(
+    p: Dict,
+    xt: jnp.ndarray,  # (T, d)
+    cfg: MoEConfig,
+    act: str = "silu",
+    capacity_factor: float | None = None,
+) -> Tuple[jnp.ndarray, Dict]:
+    T, d = xt.shape
+    E, k = cfg.n_experts, cfg.top_k
+
+    logits = (xt.astype(jnp.float32)) @ p["router"]  # (T, E) fp32 routing
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Load-balance aux loss (Switch-style) + router z-loss.
+    me = jnp.mean(probs, axis=0)  # (E,)
+    one_hot_top1 = jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux = E * jnp.sum(me * ce)
+    zloss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    # ---- capacity-based dispatch ------------------------------------------
+    C = moe_capacity(T, cfg, capacity_factor or cfg.capacity_factor)
+    flat_expert = expert_idx.reshape(T * k)  # assignment order: token-major
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)  # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1  # position within expert
+    pos_own = jnp.take_along_axis(pos, flat_expert[:, None], axis=1)[:, 0]
+    keep = pos_own < C
+    safe_pos = jnp.where(keep, pos_own, 0)
+
+    xk = jnp.repeat(xt, k, axis=0)  # (T*k, d) token copies per assignment
+    contrib = jnp.where(keep[:, None], xk, jnp.zeros_like(xk))
+    buf = jnp.zeros((E, C, d), xt.dtype)
+    buf = buf.at[flat_expert, safe_pos].add(contrib, mode="drop")
+
+    # Batched expert GLU: (E, C, d) x (E, d, f) -> (E, C, f)
+    g = _act(jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(xt.dtype)), act)
+    h = g * jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(xt.dtype))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(xt.dtype))
+
+    # Combine: gather each assignment's output, weight by gate, sum over k.
+    gathered = out_buf[flat_expert, safe_pos]  # (T*k, d)
+    w = (gate_vals.reshape(T * k) * keep.astype(jnp.float32)).astype(xt.dtype)
+    out = jnp.sum((gathered * w[:, None]).reshape(T, k, d), axis=1)
+
+    if "shared" in p:
+        out = out + mlp_forward(p["shared"], xt, act)
+
+    metrics = {
+        "aux_loss": cfg.router_aux_weight * aux + 1e-3 * zloss,
+        "drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return out, metrics

@@ -1,0 +1,21 @@
+"""Normalization layers (functional, param dicts)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm computed in fp32, cast back to input dtype.
+
+    Uses the (1 + scale) parameterization (gemma-style) with zero-init scale
+    so initialization is exactly unit-gain for every arch.
+    """
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * (1.0 / jnp.sqrt(var + eps))
+    return (xf * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def init_rms_norm(d: int) -> jnp.ndarray:
+    return jnp.zeros((d,), dtype=jnp.float32)

@@ -1,0 +1,382 @@
+"""Composable decoder covering all assigned architectures.
+
+One generic stack, configured by ModelConfig:
+  mixer  : attention | mamba1 | mamba2
+  mlp    : dense | moe | none
+  extras : tied shared attention block every k layers (zamba2),
+           modality prefix (VLM patches / audio conditioning),
+           multi-codebook embedding + K LM heads (musicgen).
+
+Layer parameters are stacked (n_groups, scan_group, ...) and the stack runs
+under jax.lax.scan over groups (remat'd), which keeps lowering time and HLO
+size flat in depth — essential for 40 (arch x shape) x 2 mesh dry-runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as m1
+from repro.models import mamba2 as m2
+from repro.models.mlp import init_mlp, mlp_forward
+from repro.models.moe import init_moe, moe_forward
+from repro.models.norms import init_rms_norm, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(cfg: ModelConfig, key) -> Dict:
+    k1, k2 = jax.random.split(key)
+    p: Dict = {"ln1": init_rms_norm(cfg.d_model)}
+    if cfg.mixer == "attention":
+        p["attn"] = attn.init_attention(k1, cfg.d_model, cfg.attention)
+    elif cfg.mixer == "mamba1":
+        p["mamba"] = m1.init_mamba1(k1, cfg.d_model, cfg.ssm)
+    elif cfg.mixer == "mamba2":
+        p["mamba"] = m2.init_mamba2(k1, cfg.d_model, cfg.ssm)
+    else:
+        raise ValueError(cfg.mixer)
+    if cfg.mlp == "dense":
+        p["ln2"] = init_rms_norm(cfg.d_model)
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff)
+    elif cfg.mlp == "moe":
+        p["ln2"] = init_rms_norm(cfg.d_model)
+        p["moe"] = init_moe(k2, cfg.d_model, cfg.moe)
+    return p
+
+
+def _shared_attn_cfg(cfg: ModelConfig):
+    from repro.configs.base import AttentionConfig
+
+    hd = cfg.d_model // cfg.shared_attn_heads
+    return AttentionConfig(
+        n_heads=cfg.shared_attn_heads, n_kv_heads=cfg.shared_attn_heads,
+        head_dim=hd)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    params: Dict = {}
+    if cfg.modality and cfg.modality.kind == "audio":
+        params["embed"] = (
+            jax.random.normal(
+                keys[0], (cfg.modality.n_codebooks, cfg.vocab_size, d),
+                jnp.float32) * 0.02)
+    else:
+        params["embed"] = (
+            jax.random.normal(keys[0], (cfg.vocab_size, d), jnp.float32) * 0.02)
+    if cfg.modality:
+        params["projector"] = {
+            "w": jax.random.normal(
+                keys[1], (cfg.modality.embed_dim, d), jnp.float32)
+            * (1.0 / cfg.modality.embed_dim ** 0.5),
+            "b": jnp.zeros((d,), jnp.float32),
+        }
+    # Stacked layer params: (G, sg, ...)
+    G, sg = cfg.n_scan_groups, cfg.scan_group
+    layer_keys = jax.random.split(keys[2], G * sg).reshape(G, sg, 2)
+    init_one = functools.partial(_init_layer, cfg)
+    params["layers"] = jax.vmap(jax.vmap(init_one))(layer_keys)
+    if cfg.shared_attn_every:
+        sa_cfg = _shared_attn_cfg(cfg)
+        k1, k2 = jax.random.split(keys[3])
+        params["shared"] = {
+            "ln1": init_rms_norm(d),
+            "attn": attn.init_attention(k1, d, sa_cfg),
+            "ln2": init_rms_norm(d),
+            "mlp": init_mlp(k2, d, 4 * d),
+        }
+    params["ln_f"] = init_rms_norm(d)
+    if not cfg.tie_embeddings:
+        n_heads_out = cfg.modality.n_codebooks if (
+            cfg.modality and cfg.modality.kind == "audio") else 1
+        shape = (d, cfg.vocab_size) if n_heads_out == 1 else (
+            n_heads_out, d, cfg.vocab_size)
+        params["lm_head"] = (
+            jax.random.normal(keys[4], shape, jnp.float32) * (1.0 / d ** 0.5))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / full-sequence)
+# ---------------------------------------------------------------------------
+
+
+def _layer_forward(cfg: ModelConfig, p: Dict, x, positions, impl: str):
+    """One block: pre-norm mixer + pre-norm channel-mixer, residuals."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mixer == "attention":
+        h = attn.attention_forward(p["attn"], h, cfg.attention, positions, impl)
+    elif cfg.mixer == "mamba1":
+        h = m1.mamba1_forward(p["mamba"], h, cfg.ssm, impl)
+    else:
+        h = m2.mamba2_forward(p["mamba"], h, cfg.ssm)
+    x = x + h
+    if cfg.mlp == "dense":
+        x = x + mlp_forward(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.act)
+    elif cfg.mlp == "moe":
+        h, metrics = moe_forward(
+            p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.moe, cfg.act)
+        x = x + h
+        aux = aux + metrics["aux_loss"]
+    return x, aux
+
+
+def _shared_block(cfg: ModelConfig, p: Dict, x, positions, impl: str):
+    sa_cfg = _shared_attn_cfg(cfg)
+    x = x + attn.attention_forward(
+        p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), sa_cfg, positions, impl)
+    x = x + mlp_forward(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.act)
+    return x
+
+
+def embed_inputs(cfg: ModelConfig, params: Dict, tokens, prefix_embeds=None):
+    """Token (+codebook) embedding with optional projected modality prefix.
+
+    Returns (x, prefix_len). x: (B, S_total, d) in cfg.dtype.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    emb = params["embed"]
+    if cfg.modality and cfg.modality.kind == "audio":
+        # tokens: (B, S, K) -> summed codebook embeddings.
+        K = cfg.modality.n_codebooks
+        x = sum(emb[k][tokens[..., k]] for k in range(K)).astype(dtype)
+    else:
+        x = emb[tokens].astype(dtype)
+    prefix_len = 0
+    if cfg.modality and prefix_embeds is not None:
+        pr = params["projector"]
+        pref = (prefix_embeds.astype(jnp.float32) @ pr["w"] + pr["b"]).astype(dtype)
+        x = jnp.concatenate([pref, x], axis=1)
+        prefix_len = prefix_embeds.shape[1]
+    return x, prefix_len
+
+
+def _stack_forward(cfg: ModelConfig, params: Dict, x, positions, impl: str):
+    """Scan over layer groups (remat'd); returns (x, total_aux)."""
+    sg = cfg.scan_group
+
+    def group_body(carry, layer_p):
+        h, aux = carry
+        for i in range(sg):
+            p_i = jax.tree.map(lambda t: t[i], layer_p)
+            h, a = _layer_forward(cfg, p_i, h, positions, impl)
+            aux = aux + a
+        if cfg.shared_attn_every:
+            h = _shared_block(cfg, params["shared"], h, positions, impl)
+        return (h, aux), None
+
+    body = jax.checkpoint(group_body, prevent_cse=False) if cfg.remat \
+        else group_body
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    return x, aux
+
+
+def compute_logits(cfg: ModelConfig, params: Dict, x):
+    xf = rms_norm(x, params["ln_f"], cfg.norm_eps).astype(jnp.float32)
+    if cfg.tie_embeddings:
+        return xf @ params["embed"].astype(jnp.float32).T
+    head = params["lm_head"]
+    if head.ndim == 3:  # audio: K heads -> (B, S, K, V)
+        return jnp.einsum("bsd,kdv->bskv", xf, head)
+    return xf @ head
+
+
+def forward(
+    cfg: ModelConfig, params: Dict, tokens, prefix_embeds=None, impl: str = "xla",
+) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+    """Full-sequence forward. Returns (logits, aux_loss, prefix_len)."""
+    x, prefix_len = embed_inputs(cfg, params, tokens, prefix_embeds)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x, aux = _stack_forward(cfg, params, x, positions, impl)
+    return compute_logits(cfg, params, x), aux, prefix_len
+
+
+def loss_fn(
+    cfg: ModelConfig, params: Dict, batch: Dict, impl: str = "xla",
+) -> Tuple[jnp.ndarray, Dict]:
+    """Next-token cross-entropy (+ MoE aux). batch: {'tokens', ['prefix_embeds']}."""
+    tokens = batch["tokens"]
+    logits, aux, P = forward(
+        cfg, params, tokens, batch.get("prefix_embeds"), impl)
+    # Predict token t+1 from position P+t (prefix positions excluded).
+    if cfg.modality and cfg.modality.kind == "audio":
+        logits_t = logits[:, P : P + tokens.shape[1] - 1]  # (B, St-1, K, V)
+        targets = tokens[:, 1:]  # (B, St-1, K)
+        logp = jax.nn.log_softmax(logits_t, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    else:
+        logits_t = logits[:, P : P + tokens.shape[1] - 1]
+        targets = tokens[:, 1:]
+        logp = jax.nn.log_softmax(logits_t, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    return loss + aux, {"ce_loss": loss, "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with per-layer caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    """Stacked per-layer caches: leaves (G, sg, ...)."""
+    G, sg = cfg.n_scan_groups, cfg.scan_group
+
+    def one_layer(_):
+        if cfg.mixer == "attention":
+            return attn.init_kv_cache(batch, max_len, cfg.attention)
+        if cfg.mixer == "mamba1":
+            return m1.init_mamba1_cache(batch, cfg.d_model, cfg.ssm)
+        return m2.init_mamba2_cache(batch, cfg.d_model, cfg.ssm)
+
+    layer_caches = jax.tree.map(
+        lambda *xs: jnp.stack(xs).reshape(G, sg, *xs[0].shape),
+        *[one_layer(i) for i in range(G * sg)])
+    cache: Dict = {"layers": layer_caches, "pos": jnp.zeros((), jnp.int32)}
+    if cfg.shared_attn_every:
+        sa_cfg = _shared_attn_cfg(cfg)
+        shared = [attn.init_kv_cache(batch, max_len, sa_cfg) for _ in range(G)]
+        cache["shared"] = jax.tree.map(lambda *xs: jnp.stack(xs), *shared)
+    return cache
+
+
+def _layer_decode(cfg: ModelConfig, p: Dict, x, pos, layer_cache, impl: str):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mixer == "attention":
+        h, layer_cache = attn.attention_decode_step(
+            p["attn"], h, cfg.attention, pos, layer_cache)
+    elif cfg.mixer == "mamba1":
+        h, layer_cache = m1.mamba1_decode_step(p["mamba"], h, cfg.ssm, layer_cache)
+    else:
+        h, layer_cache = m2.mamba2_decode_step(p["mamba"], h, cfg.ssm, layer_cache)
+    x = x + h
+    if cfg.mlp == "dense":
+        x = x + mlp_forward(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.act)
+    elif cfg.mlp == "moe":
+        h, _ = moe_forward(
+            p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.moe, cfg.act,
+            capacity_factor=None)
+        x = x + h
+    return x, layer_cache
+
+
+def decode_step(
+    cfg: ModelConfig, params: Dict, cache: Dict, tokens, impl: str = "xla",
+) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode. tokens: (B, 1) (or (B, 1, K) audio). Returns
+    (logits, new_cache)."""
+    x, _ = embed_inputs(cfg, params, tokens, None)
+    pos = cache["pos"]
+    sg = cfg.scan_group
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    def group_body(h, xs):
+        layer_p, layer_c, shared_c = xs
+        new_c = []
+        for i in range(sg):
+            p_i = jax.tree.map(lambda t: t[i], layer_p)
+            c_i = jax.tree.map(lambda t: t[i], layer_c)
+            h, c_i = _layer_decode(cfg, p_i, h, pos, c_i, impl)
+            new_c.append(c_i)
+        layer_c = jax.tree.map(lambda *xs_: jnp.stack(xs_), *new_c)
+        if cfg.shared_attn_every:
+            sa_cfg = _shared_attn_cfg(cfg)
+            p_s = params["shared"]
+            a, shared_c = attn.attention_decode_step(
+                p_s["attn"], rms_norm(h, p_s["ln1"], cfg.norm_eps),
+                sa_cfg, pos, shared_c)
+            h = h + a
+            h = h + mlp_forward(
+                p_s["mlp"], rms_norm(h, p_s["ln2"], cfg.norm_eps), cfg.act)
+        return h, (layer_c, shared_c)
+
+    shared_in = cache.get("shared")
+    if shared_in is None:
+        G = cfg.n_scan_groups
+        shared_in = jnp.zeros((G, 0))  # dummy scannable leaf
+    x, (new_layers, new_shared) = jax.lax.scan(
+        group_body, x, (params["layers"], cache["layers"], shared_in))
+    logits = compute_logits(cfg, params, x)
+    new_cache = {"layers": new_layers, "pos": pos + 1}
+    if cfg.shared_attn_every:
+        new_cache["shared"] = new_shared
+    return logits, new_cache
+
+
+def prefill(
+    cfg: ModelConfig, params: Dict, tokens, prefix_embeds=None,
+    max_len: Optional[int] = None, impl: str = "xla",
+) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence forward that fills all caches. Returns (logits, cache)."""
+    x, prefix_len = embed_inputs(cfg, params, tokens, prefix_embeds)
+    B, S = x.shape[:2]
+    max_len = max_len or S
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    cache = init_cache(cfg, B, max_len)
+    sg = cfg.scan_group
+
+    def group_body(h, xs):
+        layer_p, layer_c, shared_c = xs
+        new_c = []
+        for i in range(sg):
+            p_i = jax.tree.map(lambda t: t[i], layer_p)
+            c_i = jax.tree.map(lambda t: t[i], layer_c)
+            h2 = rms_norm(h, p_i["ln1"], cfg.norm_eps)
+            if cfg.mixer == "attention":
+                h2, c_i = attn.attention_prefill(
+                    p_i["attn"], h2, cfg.attention, positions, c_i, impl)
+            elif cfg.mixer == "mamba1":
+                h2, (conv_tail, hst) = m1.mamba1_forward(
+                    p_i["mamba"], h2, cfg.ssm, impl, return_state=True)
+                c_i = {"conv": conv_tail.astype(c_i["conv"].dtype), "h": hst}
+            else:
+                h2, (conv_tail, hst) = m2.mamba2_forward(
+                    p_i["mamba"], h2, cfg.ssm, return_state=True)
+                c_i = {"conv": conv_tail.astype(c_i["conv"].dtype), "h": hst}
+            h = h + h2
+            if cfg.mlp == "dense":
+                h = h + mlp_forward(
+                    p_i["mlp"], rms_norm(h, p_i["ln2"], cfg.norm_eps), cfg.act)
+            elif cfg.mlp == "moe":
+                hm, _ = moe_forward(
+                    p_i["moe"], rms_norm(h, p_i["ln2"], cfg.norm_eps),
+                    cfg.moe, cfg.act, capacity_factor=None)
+                h = h + hm
+            new_c.append(c_i)
+        layer_c = jax.tree.map(lambda *xs_: jnp.stack(xs_), *new_c)
+        if cfg.shared_attn_every:
+            sa_cfg = _shared_attn_cfg(cfg)
+            p_s = params["shared"]
+            a, shared_c = attn.attention_prefill(
+                p_s["attn"], rms_norm(h, p_s["ln1"], cfg.norm_eps),
+                sa_cfg, positions, shared_c, impl)
+            h = h + a
+            h = h + mlp_forward(
+                p_s["mlp"], rms_norm(h, p_s["ln2"], cfg.norm_eps), cfg.act)
+        return h, (layer_c, shared_c)
+
+    shared_in = cache.get("shared")
+    if shared_in is None:
+        shared_in = jnp.zeros((cfg.n_scan_groups, 0))
+    x, (new_layers, new_shared) = jax.lax.scan(
+        group_body, x, (params["layers"], cache["layers"], shared_in))
+    logits = compute_logits(cfg, params, x[:, -1:])
+    new_cache = {"layers": new_layers,
+                 "pos": jnp.asarray(S, jnp.int32)}
+    if cfg.shared_attn_every:
+        new_cache["shared"] = new_shared
+    return logits, new_cache

@@ -1,0 +1,3 @@
+from repro.optim.adam import adamw
+from repro.optim.api import Optimizer, apply_updates
+from repro.optim.sgd import sgd

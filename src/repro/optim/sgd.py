@@ -1,0 +1,23 @@
+"""SGD (+momentum) — the paper's local optimizer (mini-batch SGD, lr=0.01)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.api import Optimizer
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params=None):
+        del params
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g, grads), state
+        new_state = jax.tree.map(lambda m, g: momentum * m + g, state, grads)
+        return jax.tree.map(lambda m: -lr * m, new_state), new_state
+
+    return Optimizer(init=init, update=update)

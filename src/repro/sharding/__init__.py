@@ -1,0 +1,1 @@
+from repro.sharding.specs import cache_specs, named_shardings, param_specs

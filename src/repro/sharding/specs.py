@@ -1,0 +1,201 @@
+"""PartitionSpec rules for every parameter / activation / cache leaf.
+
+Rules address the TRAILING dims of each leaf by parameter name; leading
+stacking dims (layer-scan group axes, and the federated client axis) are
+padded with None / the client axes. A 'model' assignment is only applied
+when the dim is divisible by the model-axis size (GSPMD could pad uneven
+shardings, but divisible mappings keep the collective schedule clean);
+otherwise the dim stays replicated and the roofline shows the cost.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# name -> trailing-dim logical roles; 'M' marks model-shardable dims.
+# 'H'/'Hd' mark attention head / head_dim axes resolved by the head policy.
+# Attention rules are keyed separately — 'wo' exists in BOTH attention
+# (H, hd, d) and dense MLP (ff, d); resolving by leaf name alone silently
+# mis-shards one of them (found the hard way, EXPERIMENTS.md §Perf A).
+_ATTN_RULES = {
+    "wq": (None, "H", "Hd"), "wk": (None, "H", "Hd"), "wv": (None, "H", "Hd"),
+    "bq": ("H", "Hd"), "bk": ("H", "Hd"), "bv": ("H", "Hd"),
+    "wo": ("H", "Hd", None),
+}
+
+_TRAILING_RULES = {
+    # dense mlp
+    "wg": (None, "M"), "wi": (None, "M"), "wo": ("M", None),
+    # moe (3D leaves override by rank below)
+    "router": (None, "M"),
+    # mamba
+    "in_x": (None, "M"), "in_z": (None, "M"), "in_B": (None, "M"),
+    "in_C": (None, "M"), "in_dt": (None, "M"),
+    "conv_w": (None, "M"), "conv_b": ("M",),
+    "x_proj": ("M", None), "dt_w": (None, "M"), "dt_b": ("M",),
+    "A_log": ("M", None), "D": ("M",),
+    "dt_bias": ("M",), "norm": ("M",),
+    "out_proj": ("M", None),
+}
+
+_MOE_3D = {"wg": ("M", None, None), "wi": ("M", None, None),
+           "wo": ("M", None, None)}
+
+
+def _leaf_trailing_spec(path_keys, shape) -> Tuple:
+    name = path_keys[-1]
+    parents = set(path_keys[:-1])
+    if name == "embed":
+        if len(shape) == 3:  # audio (K, V, d)
+            return (None, "M", None)
+        return ("M", None)
+    if name == "lm_head":
+        if len(shape) == 3:  # (K, d, V)
+            return (None, None, "M")
+        return (None, "M")
+    if "moe" in parents and name in _MOE_3D:
+        return _MOE_3D[name]
+    if "attn" in parents and name in _ATTN_RULES:
+        return _ATTN_RULES[name]
+    if "mlp" in parents and name == "wo":
+        # Replicate small dense down-projections. Measured (§Perf A):
+        # keeping the small-model residual path fully replicated stops the
+        # partitioner from sharding the fp32 (S, S, H) score intermediate's
+        # contraction and all-reducing it (45 GB/round on qwen2-0.5b).
+        total_bytes = 1
+        for d in shape:
+            total_bytes *= d
+        if total_bytes * 4 < 1e9:
+            return ()
+        return ("M", None)
+    rule = _TRAILING_RULES.get(name)
+    if rule is None:
+        return ()  # replicate (norm scales, projector, CNN leaves, biases)
+    return rule
+
+
+def param_specs(
+    abstract_params: Any,
+    mesh: Mesh,
+    model_axis: str = "model",
+    client_axes: Optional[Tuple[str, ...]] = None,
+    stack_dims: int = 0,
+) -> Any:
+    """PartitionSpec tree matching abstract_params.
+
+    stack_dims: number of leading layer-stack dims on 'layers' leaves
+    (informational only; trailing rules self-align by rank).
+    client_axes: if set, every leaf gets a leading client axis sharded over
+    these mesh axes.
+    """
+    msize = int(np.prod([mesh.shape[a] for a in (model_axis,)])) \
+        if model_axis in mesh.shape else 1
+
+    def spec_for(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        shape = leaf.shape
+        offset = 1 if client_axes else 0
+        trailing = _leaf_trailing_spec(keys, shape[offset:])
+        n_trailing = len(trailing)
+        ndim = len(shape)
+        spec = [None] * ndim
+        if client_axes:
+            spec[0] = client_axes if len(client_axes) > 1 else client_axes[0]
+        # Align trailing rule to the end; disambiguate mamba A_log rank:
+        if keys and keys[-1] == "A_log" and (ndim - offset) % 2 == 1:
+            trailing = ("M",)  # stacked mamba2 (G, sg, H) has odd base rank
+            n_trailing = 1
+        # Attention head/head_dim policy (measured — EXPERIMENTS.md §Perf):
+        #   H % msize == 0       -> shard heads (scores stay off the wire)
+        #   small weight stack   -> replicate (cheap; avoids both the score
+        #                           all-reduce and any resharding; pjit
+        #                           rejects padded/uneven input shardings)
+        #   hd % msize == 0      -> shard head_dim (score einsum contracts a
+        #                           sharded dim => per-layer score all-reduce,
+        #                           mild for big-H archs)
+        #   else                 -> replicate
+        if any(r in ("H", "Hd") for r in trailing):
+            h_pos = ndim - n_trailing + trailing.index("H")
+            hd_pos = ndim - n_trailing + trailing.index("Hd")
+            H = shape[h_pos]
+            hd = shape[hd_pos]
+            total_bytes = int(np.prod(shape)) * 4
+            is_wo = keys[-1] == "wo"
+            if msize > 1:
+                if H % msize == 0:
+                    spec[h_pos] = model_axis
+                elif hd % msize == 0 and (is_wo or total_bytes >= 1e9):
+                    # Indivisible heads: hd-shard. For small stacks only the
+                    # out-projection is sharded (q/k/v replicated) — measured
+                    # to keep GSPMD from sharding the S^2 score intermediate
+                    # and all-reducing it (EXPERIMENTS.md §Perf A2).
+                    spec[hd_pos] = model_axis
+            return P(*spec)
+        for i, role in enumerate(trailing):
+            dim = ndim - n_trailing + i
+            if dim < offset:
+                continue
+            if role == "M" and shape[dim] % msize == 0 and msize > 1:
+                spec[dim] = model_axis
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_params)
+
+
+def named_shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_specs(
+    abstract_cache: Any,
+    mesh: Mesh,
+    batch_axes: Optional[Tuple[str, ...]],
+    model_axis: str = "model",
+) -> Any:
+    """Sharding for serve caches.
+
+    KV leaves (G, sg, B, L, KV, hd): batch over batch_axes (replicated when
+    indivisible, e.g. long_500k B=1); KV heads over model when divisible,
+    else head_dim over model. SSM conv/h leaves shard their channel dim.
+    """
+    msize = mesh.shape.get(model_axis, 1)
+    bsize = int(np.prod([mesh.shape[a] for a in (batch_axes or ())])) or 1
+
+    def spec_for(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        shape = leaf.shape
+        ndim = len(shape)
+        spec = [None] * ndim
+        if name == "pos":
+            return P()
+        # Identify batch dim: first dim whose size matches a multiple of bsize
+        # after the (G, sg) stack prefix. Caches are (G, sg, B, ...) except
+        # shared-attn caches (G, B, ...).
+        bdim = None
+        for i in range(min(3, ndim)):
+            if shape[i] % bsize == 0 and i >= 1:
+                bdim = i
+                break
+        if batch_axes and bdim is not None and shape[bdim] % bsize == 0:
+            spec[bdim] = tuple(batch_axes) if len(batch_axes) > 1 else batch_axes[0]
+        if name in ("k", "v") and ndim >= 2:
+            kv_dim, hd_dim = ndim - 2, ndim - 1
+            if shape[kv_dim] % msize == 0:
+                spec[kv_dim] = model_axis
+            elif shape[hd_dim] % msize == 0:
+                spec[hd_dim] = model_axis
+        elif name in ("conv", "h"):
+            # channel dim: conv (..., B, K-1, C) -> last; h (..., B, D, N) or
+            # (..., B, H, P, N) -> first after batch.
+            tgt = ndim - 1 if name == "conv" else (bdim + 1 if bdim is not None else ndim - 2)
+            if tgt < ndim and shape[tgt] % msize == 0:
+                spec[tgt] = model_axis
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_cache)

@@ -1,0 +1,10 @@
+from repro.utils.tree import (
+    tree_bytes,
+    tree_count,
+    tree_zeros_like,
+    tree_add,
+    tree_scale,
+    tree_weighted_mean,
+    tree_allclose,
+    tree_any_nan,
+)

@@ -1,0 +1,167 @@
+"""Analytic roofline cost model.
+
+WHY THIS EXISTS (validated in EXPERIMENTS.md §Dry-run): XLA's
+HloCostAnalysis visits each while-loop body ONCE, so for scan-over-layers
+programs `compiled.cost_analysis()` under-counts FLOPs/bytes by ~(layers x
+V) and the HLO text shows in-loop collectives once. Out-of-loop ops (the
+FedAvg param sync — the dominant collective for training) are counted
+correctly. We therefore report BOTH the raw HLO-derived terms and these
+analytic totals; the analytic model is exact in the matmul terms
+("as-written" semantics: dense full-S attention scores, all-E expert
+capacity GEMMs) and approximate (~20%) in elementwise terms.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.configs.base import InputShape, MeshConfig, ModelConfig
+from repro.models.moe import moe_capacity
+
+
+def _attn_flops_per_token(cfg: ModelConfig, ctx: int) -> float:
+    """Projections + score/PV terms against a ctx-length context."""
+    a = cfg.attention
+    d = cfg.d_model
+    proj = 2 * d * (a.n_heads + 2 * a.n_kv_heads) * a.head_dim \
+        + 2 * a.n_heads * a.head_dim * d
+    scores = 4 * ctx * a.n_heads * a.head_dim  # QK^T + PV, as-written (full S)
+    return proj + scores
+
+
+def _mlp_flops_per_token(cfg: ModelConfig) -> float:
+    return 2 * 3 * cfg.d_model * cfg.d_ff
+
+
+def _moe_flops_per_token(cfg: ModelConfig, n_tokens: int) -> float:
+    m = cfg.moe
+    d = cfg.d_model
+    router = 2 * d * m.n_experts
+    C = moe_capacity(n_tokens, m, m.capacity_factor)
+    # Capacity GEMMs process E*C rows regardless of fill: per-token share.
+    expert_rows = m.n_experts * C / max(n_tokens, 1)
+    experts = expert_rows * 2 * 3 * d * m.d_ff_expert
+    shared = 2 * 3 * d * m.shared_expert_d_ff if m.shared_expert_d_ff else 0
+    return router + experts + shared
+
+
+def _ssm_flops_per_token(cfg: ModelConfig) -> float:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    if s.kind == "mamba1":
+        rank = max(d // 16, 1)
+        proj = 2 * d * 2 * d_in + 2 * d_in * (rank + 2 * s.d_state) \
+            + 2 * rank * d_in + 2 * d_in * d
+        scan = 10 * d_in * s.d_state  # exp, recurrence, output dot
+        conv = 2 * s.d_conv * d_in
+        return proj + scan + conv
+    H = d_in // s.head_dim
+    P = s.head_dim
+    N = s.d_state
+    L = s.chunk
+    proj = 2 * d * (2 * d_in + 2 * s.n_groups * N + H) + 2 * d_in * d
+    conv = 2 * s.d_conv * (d_in + 2 * s.n_groups * N)
+    # SSD per token: scores 2LN + intra 2LHP + states/inter ~4NHP.
+    ssd = 2 * L * N + 2 * L * H * P + 4 * N * H * P
+    return proj + conv + ssd
+
+
+def _shared_block_flops_per_token(cfg: ModelConfig, ctx: int) -> float:
+    d = cfg.d_model
+    proj = 8 * d * d  # qkvo at full MHA heads
+    scores = 4 * ctx * d
+    return proj + scores + 2 * 3 * d * 4 * d  # + 4d GLU mlp
+
+
+def flops_per_token(cfg: ModelConfig, ctx: int, n_tokens_for_moe: int) -> float:
+    per_layer = 0.0
+    if cfg.mixer == "attention":
+        per_layer += _attn_flops_per_token(cfg, ctx)
+    else:
+        per_layer += _ssm_flops_per_token(cfg)
+    if cfg.mlp == "dense":
+        per_layer += _mlp_flops_per_token(cfg)
+    elif cfg.mlp == "moe":
+        per_layer += _moe_flops_per_token(cfg, n_tokens_for_moe)
+    total = per_layer * cfg.n_layers
+    if cfg.shared_attn_every:
+        n_shared = cfg.n_layers // cfg.shared_attn_every
+        total += n_shared * _shared_block_flops_per_token(cfg, ctx)
+    n_heads_out = cfg.modality.n_codebooks if (
+        cfg.modality and cfg.modality.kind == "audio") else 1
+    total += 2 * cfg.d_model * cfg.vocab_size * n_heads_out  # logits
+    return total
+
+
+def analytic_costs(
+    cfg: ModelConfig, shape: InputShape, mesh_cfg: MeshConfig, V: int = 1,
+    param_bytes: int = 4, attn_ctx_factor: float = 1.0,
+) -> Dict:
+    """Global FLOPs + per-device HBM bytes + per-device in-loop collective
+    wire bytes for one jitted call of the (arch x shape) pair."""
+    n_dev = mesh_cfg.n_devices
+    msize = 16  # model-axis size on both meshes
+    total_p, active_p = cfg.param_count()
+    B, S = shape.global_batch, shape.seq_len
+    window = cfg.attention.sliding_window if cfg.attention else None
+
+    if shape.kind == "train":
+        tokens = B * S * V
+        ctx = min(S, window) if window else S
+        ctx = max(int(ctx * attn_ctx_factor), 1)
+        f = flops_per_token(cfg, ctx, B * S) * tokens
+        f *= 4.0 if cfg.remat else 3.0  # fwd + bwd(2x) [+ remat re-fwd]
+        # HBM: V local steps each stream params 3x (fwd/bwd/update) + acts.
+        # Each device holds ONE client's model-shard: total_p / msize.
+        p_dev = total_p * param_bytes / msize
+        act = tokens / (n_dev / msize) * cfg.d_model * 2 * cfg.n_layers * 6
+        hbm_dev = V * 4 * p_dev + act
+        # In-loop TP collectives: 2 activation all-reduces per layer per pass,
+        # 3 passes (fwd/bwd/remat), over the model axis.
+        act_bytes = tokens / (n_dev / msize) * cfg.d_model * 2
+        coll_inloop_dev = (2 * cfg.n_layers * 3 * 2 * act_bytes
+                           * (msize - 1) / msize) / msize
+    elif shape.kind == "prefill":
+        tokens = B * S
+        ctx = min(S, window) if window else S
+        ctx = max(int(ctx * attn_ctx_factor), 1)
+        f = flops_per_token(cfg, ctx, tokens)
+        f *= tokens
+        p_dev = total_p * param_bytes / msize
+        act = tokens / (n_dev / msize) * cfg.d_model * 2 * cfg.n_layers * 4
+        kv = 0
+        if cfg.attention:
+            a = cfg.attention
+            L = min(S, window) if window else S
+            kv = B * L * a.n_kv_heads * a.head_dim * 2 * 2 * cfg.n_layers / n_dev
+        hbm_dev = p_dev + act + kv
+        act_bytes = tokens / (n_dev / msize) * cfg.d_model * 2
+        coll_inloop_dev = (2 * cfg.n_layers * act_bytes
+                           * (msize - 1) / msize) / msize
+    else:  # decode: one token against the cache
+        tokens = B
+        ctx = min(S, window) if window else S
+        f = flops_per_token(cfg, ctx, tokens) * tokens
+        p_dev = total_p * param_bytes / msize  # all params stream per step
+        kv = 0.0
+        if cfg.attention:
+            a = cfg.attention
+            L = min(S, window) if window else S
+            kv = B * L * a.n_kv_heads * a.head_dim * 2 * 2 * cfg.n_layers
+        if cfg.ssm:
+            d_in = cfg.ssm.expand * cfg.d_model
+            kv += B * d_in * cfg.ssm.d_state * 4 * cfg.n_layers * 2
+        hbm_dev = p_dev + kv / n_dev  # cache sharded batch x model
+        act_bytes = tokens * cfg.d_model * 2
+        coll_inloop_dev = (2 * cfg.n_layers * act_bytes
+                           * (msize - 1) / msize) / msize
+
+    return {
+        "flops_global": float(f),
+        "flops_per_device": float(f / n_dev),
+        "hbm_bytes_per_device": float(hbm_dev),
+        "collective_inloop_wire_bytes_per_device": float(coll_inloop_dev),
+        "tokens": int(tokens),
+    }

@@ -1,0 +1,25 @@
+"""Roofline constants and analytic MODEL_FLOPS (6*N_active*D)."""
+from __future__ import annotations
+
+from repro.configs.base import InputShape, ModelConfig
+
+# TPU v5e per-chip constants (assignment-specified).
+PEAK_FLOPS = 197e12  # bf16 FLOP/s
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+
+def tokens_per_call(cfg: ModelConfig, shape: InputShape, V: int = 1) -> int:
+    if shape.kind == "train":
+        return shape.global_batch * shape.seq_len * V
+    if shape.kind == "prefill":
+        return shape.global_batch * shape.seq_len
+    return shape.global_batch  # decode: one token per sequence
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape, V: int = 1) -> float:
+    """6*N_active*D for training (fwd+bwd), 2*N_active*D for inference."""
+    _, n_active = cfg.param_count()
+    D = tokens_per_call(cfg, shape, V)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * D

@@ -1,0 +1,136 @@
+"""Parse collective ops out of compiled HLO text for the roofline's
+collective term (cost_analysis does not report collective bytes).
+
+The compiled module is the post-SPMD per-device program, so parsed shapes
+are shard shapes; wire-byte formulas below are per-device bytes moved:
+
+  all-reduce        2 * bytes * (g-1)/g      (ring reduce-scatter+all-gather)
+  all-gather        bytes_out * (g-1)/g      (bytes received)
+  reduce-scatter    bytes_in * (g-1)/g
+  all-to-all        bytes * (g-1)/g
+  collective-permute bytes
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %all-gather.7 = bf16[4,1024,128]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*(\w+)\[([\d,]*)\][^)]*?\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+# tuple-result collectives:  = (f32[...], f32[...]) all-reduce(
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    dtype: str
+    shape: tuple
+    bytes: int
+    group_size: int
+    wire_bytes: float
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _wire_bytes(kind: str, nbytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    frac = (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * nbytes * frac
+    if kind == "all-gather":
+        return nbytes * frac  # nbytes = output (gathered) size
+    if kind == "reduce-scatter":
+        return nbytes * g * frac  # nbytes = output (scattered) shard
+    if kind == "all-to-all":
+        return nbytes * frac
+    return float(nbytes)  # collective-permute
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    seen_start = set()
+    for line in hlo_text.splitlines():
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        if "-done(" in line:
+            continue  # paired with -start; avoid double count
+        shapes = []
+        m = _OP_RE.search(line)
+        kind = None
+        if m:
+            kind = m.group(3)
+            shapes = [(m.group(1), m.group(2))]
+        else:
+            mt = _TUPLE_RE.search(line)
+            if mt:
+                kind = mt.group(2)
+                shapes = _SHAPE_RE.findall(mt.group(1))
+        if not kind:
+            continue
+        g = _group_size(line, default_group)
+        for dtype, dims in shapes:
+            if dtype not in _DTYPE_BYTES:
+                continue
+            nbytes = _shape_bytes(dtype, dims)
+            ops.append(CollectiveOp(
+                kind=kind, dtype=dtype,
+                shape=tuple(int(d) for d in dims.split(",") if d),
+                bytes=nbytes, group_size=g,
+                wire_bytes=_wire_bytes(kind, nbytes, g)))
+    return ops
+
+
+def collective_summary(ops: List[CollectiveOp]) -> Dict:
+    by_kind: Dict[str, Dict] = {}
+    for op in ops:
+        d = by_kind.setdefault(op.kind, {"count": 0, "bytes": 0, "wire_bytes": 0.0})
+        d["count"] += 1
+        d["bytes"] += op.bytes
+        d["wire_bytes"] += op.wire_bytes
+    return {
+        "total_wire_bytes": sum(o.wire_bytes for o in ops),
+        "total_bytes": sum(o.bytes for o in ops),
+        "count": len(ops),
+        "by_kind": by_kind,
+    }

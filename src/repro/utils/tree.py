@@ -1,0 +1,56 @@
+"""Pytree utilities used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_count(tree) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes across all leaves (dtype-aware)."""
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree.leaves(tree)
+    )
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_weighted_mean(trees, weights):
+    """Weighted mean of a list of pytrees. weights need not be normalized."""
+    w = jnp.asarray(weights, dtype=jnp.float32)
+    w = w / jnp.sum(w)
+    out = tree_scale(trees[0], w[0])
+    for i in range(1, len(trees)):
+        out = tree_add(out, tree_scale(trees[i], w[i]))
+    return out
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-6) -> bool:
+    leaves_a, treedef_a = jax.tree.flatten(a)
+    leaves_b, treedef_b = jax.tree.flatten(b)
+    if treedef_a != treedef_b:
+        return False
+    return all(
+        np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)
+        for x, y in zip(leaves_a, leaves_b)
+    )
+
+
+def tree_any_nan(tree) -> bool:
+    return any(bool(jnp.any(jnp.isnan(x))) for x in jax.tree.leaves(tree))

@@ -1,0 +1,74 @@
+"""Config registry + analytic parameter counts vs published sizes."""
+import pytest
+
+from repro.configs.registry import ARCH_IDS, all_configs, get_config
+
+# Published (approximate) total parameter counts, billions.
+PUBLISHED_TOTALS = {
+    "qwen3-moe-30b-a3b": 30.5,
+    "qwen2-0.5b": 0.49,
+    "gemma-7b": 8.5,  # embedding-heavy: 8.54B with 256k vocab
+    "zamba2-2.7b": 2.7,
+    "qwen3-32b": 32.8,
+    "falcon-mamba-7b": 7.3,
+    "llama4-scout-17b-a16e": 109.0,
+    "llava-next-34b": 34.4,
+    "musicgen-large": 3.3,
+}
+
+
+def test_registry_has_all_10():
+    assert len(ARCH_IDS) == 10
+    cfgs = all_configs()
+    assert set(cfgs) == set(ARCH_IDS)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    assert cfg.name == arch
+    assert cfg.source
+    total, active = cfg.param_count()
+    assert 0 < active <= total
+    if arch in PUBLISHED_TOTALS:
+        pub = PUBLISHED_TOTALS[arch] * 1e9
+        assert abs(total - pub) / pub < 0.15, (
+            f"{arch}: {total / 1e9:.2f}B vs published {pub / 1e9:.2f}B")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_config_is_reduced(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.n_layers <= 2
+    assert cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    # Same family knobs as the full config.
+    full = get_config(arch)
+    assert cfg.mixer == full.mixer and cfg.mlp == full.mlp
+    assert cfg.arch_type == full.arch_type
+
+
+def test_exact_assignment_numbers():
+    c = get_config("qwen3-moe-30b-a3b")
+    assert (c.n_layers, c.d_model, c.attention.n_heads,
+            c.attention.n_kv_heads) == (48, 2048, 32, 4)
+    assert (c.moe.n_experts, c.moe.top_k, c.moe.d_ff_expert) == (128, 8, 768)
+    assert c.vocab_size == 151936
+    c = get_config("gemma-7b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab_size) == (
+        28, 3072, 24576, 256000)
+    assert c.attention.head_dim == 256 and c.act == "gelu"
+    c = get_config("falcon-mamba-7b")
+    assert (c.n_layers, c.d_model, c.vocab_size) == (64, 4096, 65024)
+    assert c.ssm.kind == "mamba1" and c.ssm.d_state == 16
+    c = get_config("zamba2-2.7b")
+    assert c.ssm.kind == "mamba2" and c.ssm.d_state == 64
+    assert c.n_layers == 54 and c.shared_attn_every == 6
+    c = get_config("llama4-scout-17b-a16e")
+    assert (c.moe.n_experts, c.moe.top_k) == (16, 1)
+    assert c.vocab_size == 202048
+    c = get_config("musicgen-large")
+    assert c.modality.n_codebooks == 4 and c.vocab_size == 2048
+    c = get_config("llava-next-34b")
+    assert (c.n_layers, c.d_model, c.attention.n_heads) == (60, 7168, 56)

@@ -1,0 +1,46 @@
+"""Convergence-model tests (Theorem 1 / Corollaries 1-2 / Remark 3)."""
+import numpy as np
+import pytest
+
+from repro.core import convergence as cv
+
+
+def test_theorem1_bound_decreases_with_K():
+    vals = [cv.theorem1_bound(1.0, 1.0, 1.0, M=10, K=k, V=4, b=8)
+            for k in [10, 100, 1000, 10000]]
+    assert all(v2 < v1 for v1, v2 in zip(vals, vals[1:]))
+
+
+def test_corollary1_batch_reduces_variance_terms():
+    # Remark 2: larger b shrinks the sigma terms.
+    b1 = cv.theorem1_bound(1.0, 1.0, 1.0, M=10, K=100, V=4, b=1)
+    b8 = cv.theorem1_bound(1.0, 1.0, 1.0, M=10, K=100, V=4, b=8)
+    assert b8 < b1
+    # The w0 term is b-independent: bound difference == sigma-term difference.
+    t1_only = 8.0 / np.sqrt(10 * 100)
+    assert b8 > t1_only
+
+
+def test_local_rounds_remark3():
+    assert cv.local_rounds(1.0, 2.0) == 1  # log(1) = 0 -> floor 1
+    assert cv.local_rounds(np.exp(-2), 2.0) == 4
+    assert cv.local_rounds(0.15, 2.0) == 4
+    assert cv.local_rounds(1e-30, 2.0) >= 1
+
+
+def test_rounds_eq12_monotonicity():
+    base = dict(M=10, eps=0.01, nu=2.0, c=1.0)
+    h = cv.communication_rounds(16, 0.15, **base)
+    # More local work (lower theta) -> fewer rounds.
+    assert cv.communication_rounds(16, 0.05, **base) < h
+    # Bigger batch -> fewer rounds.
+    assert cv.communication_rounds(64, 0.15, **base) < h
+    # Tighter eps -> more rounds.
+    assert cv.communication_rounds(16, 0.15, 10, 0.001, 2.0, 1.0) > h
+
+
+def test_gradient_steps_inversion():
+    K = cv.gradient_steps_for_eps(0.05, 1.0, 1.0, 1.0, M=4, V=2, b=8)
+    assert cv.theorem1_bound(1.0, 1.0, 1.0, 4, K, 2, 8) <= 0.05
+    if K > 1:
+        assert cv.theorem1_bound(1.0, 1.0, 1.0, 4, K - 1, 2, 8) > 0.05

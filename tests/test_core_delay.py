@@ -1,0 +1,56 @@
+"""Paper delay-model tests (Eqs. 3-8)."""
+import numpy as np
+import pytest
+
+from repro.configs.base import ComputeConfig, WirelessConfig
+from repro.core import delay
+
+
+def test_gpu_frequency_eq3():
+    cc = ComputeConfig(a_s=0.0, a_c=1.0, a_m=0.0, core_freq_hz=2e9)
+    assert delay.gpu_frequency(cc) == pytest.approx(2e9)
+    cc2 = ComputeConfig()
+    f = delay.gpu_frequency(cc2)
+    # Harmonic combination is below each individual bound.
+    assert f <= cc2.core_freq_hz / cc2.a_c + 1e-9
+    assert f > 0
+
+
+def test_compute_time_eq4_linear_in_batch():
+    t1 = delay.local_compute_time(1, 1e7, 2e9)
+    t32 = delay.local_compute_time(32, 1e7, 2e9)
+    assert t32 == pytest.approx(32 * t1)
+
+
+def test_straggler_max_eq5():
+    G = [1e7, 2e7, 1.5e7]
+    f = [2e9, 2e9, 2e9]
+    assert delay.round_compute_time(4, G, f) == pytest.approx(
+        delay.local_compute_time(4, 2e7, 2e9))
+
+
+def test_uplink_rate_eq6():
+    wc = WirelessConfig()
+    r = delay.uplink_rate(wc, 0.5, 1e-8)
+    assert r > 0
+    # Rate increases with power and gain, decreases with noise.
+    assert delay.uplink_rate(wc, 1.0, 1e-8) > r
+    assert delay.uplink_rate(wc, 0.5, 2e-8) > r
+    t = delay.uplink_time(1e6, wc, 0.5, 1e-8)
+    assert t == pytest.approx(1e6 / r)
+
+
+def test_round_time_eq8():
+    assert delay.round_time(0.5, 0.1, 5) == pytest.approx(1.0)
+    assert delay.overall_time(10, 1.0) == pytest.approx(10.0)
+
+
+def test_population_homogeneous_vs_heterogeneous():
+    cc, wc = ComputeConfig(), WirelessConfig()
+    hom = delay.draw_population(10, cc, wc, seed=0, heterogeneity=0.0)
+    assert np.allclose(hom.f, hom.f[0]) and np.allclose(hom.G, hom.G[0])
+    het = delay.draw_population(10, cc, wc, seed=0, heterogeneity=0.5)
+    assert het.f.std() > 0
+    # Straggler bound: heterogeneous max time >= homogeneous.
+    assert delay.round_compute_time(8, het.G, het.f) >= \
+        delay.round_compute_time(8, hom.G, hom.f) * 0.5

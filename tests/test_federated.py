@@ -1,0 +1,137 @@
+"""Federated substrate tests: aggregation, local updates, partitioning,
+compression, mesh round-step equivalence."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
+from repro.core import delay
+from repro.data import BatchIterator, make_mnist_like
+from repro.federated import compression
+from repro.federated.client import client_round, make_local_update, stack_batches
+from repro.federated.mesh_rounds import (
+    build_round_step,
+    local_steps_fn,
+    replicate_clients,
+)
+from repro.federated.partition import (
+    partition_dirichlet,
+    partition_iid,
+    partition_sizes,
+)
+from repro.federated.server import aggregate_updates
+from repro.optim import sgd
+from repro.utils.tree import tree_allclose
+
+
+def _quadratic_loss(params, batch):
+    # f(w) = 0.5 || w - target ||^2 per client target
+    diff = params["w"] - batch["target"]
+    return 0.5 * jnp.sum(diff * diff), {}
+
+
+def test_aggregate_weighted_mean():
+    g = {"w": jnp.zeros(3)}
+    deltas = [{"w": jnp.ones(3)}, {"w": 3 * jnp.ones(3)}]
+    out = aggregate_updates(g, deltas, [1, 3])
+    np.testing.assert_allclose(np.asarray(out["w"]), 2.5 * np.ones(3))
+
+
+def test_local_update_descends_quadratic():
+    params = {"w": jnp.zeros(4)}
+    opt = sgd(0.1)
+    lu = make_local_update(_quadratic_loss, opt)
+    target = jnp.ones(4)
+    batches = {"target": jnp.tile(target[None], (10, 1))}
+    delta, _, losses = client_round(lu, params, opt.init(params), batches)
+    assert float(losses[-1]) < float(losses[0])
+    # 10 steps of lr=0.1 on quadratic: w -> 1 - 0.9^10
+    np.testing.assert_allclose(
+        np.asarray(delta["w"]), (1 - 0.9 ** 10) * np.ones(4), rtol=1e-5)
+
+
+def test_partitions_disjoint_and_complete():
+    data = make_mnist_like(500, seed=0)
+    for parts in (partition_iid(500, 7, 0),
+                  partition_dirichlet(data, 7, alpha=0.5, seed=0)):
+        allidx = np.concatenate(parts)
+        assert len(allidx) == 500
+        assert len(np.unique(allidx)) == 500
+        assert all(len(p) > 0 for p in parts)
+        assert partition_sizes(parts).sum() == 500
+
+
+def test_compression_roundtrip_error_bounded():
+    key = jax.random.PRNGKey(0)
+    update = {"a": jax.random.normal(key, (333,)) * 0.01,
+              "b": jax.random.normal(jax.random.fold_in(key, 1), (64, 65))}
+    comp = compression.compress_update(update, key)
+    rec = compression.decompress_update(comp)
+    for k in update:
+        x, r = np.asarray(update[k]), np.asarray(rec[k])
+        # error bounded by one quantization step per 1024-row
+        assert np.max(np.abs(x - r)) <= np.max(np.abs(x)) / 127.0 + 1e-7
+    assert compression.compressed_bits(update) < compression.raw_bits(update) / 3
+
+
+def test_compression_unbiased():
+    key = jax.random.PRNGKey(0)
+    x = {"w": jnp.linspace(-0.01, 0.01, 256).reshape(1, -1) + 0.0031}
+    recs = []
+    for i in range(200):
+        c = compression.compress_update(x, jax.random.PRNGKey(i))
+        recs.append(np.asarray(compression.decompress_update(c)["w"]))
+    mean = np.mean(recs, axis=0)
+    scale = np.max(np.abs(np.asarray(x["w"]))) / 127.0
+    assert np.max(np.abs(mean - np.asarray(x["w"]))) < 0.2 * scale
+
+
+def test_mesh_round_step_equals_host_fedavg():
+    """The vmapped stacked round step == per-client host loop + weighted mean."""
+    C = 3
+    params = {"w": jnp.arange(4, dtype=jnp.float32)}
+    opt = sgd(0.1)
+    targets = jnp.stack([jnp.full(4, t, jnp.float32) for t in (0.0, 1.0, 2.0)])
+    V = 5
+    batches = {"target": jnp.stack(
+        [jnp.tile(targets[c][None], (V, 1)) for c in range(C)])}
+    weights = jnp.asarray([0.2, 0.3, 0.5])
+
+    step = build_round_step(_quadratic_loss, opt, V)
+    stacked = replicate_clients(params, C)
+    opt_c = jax.vmap(lambda _: opt.init(params))(jnp.arange(C))
+    new_p, _, metrics = jax.jit(step)(stacked, (), batches, weights)
+
+    # Host-side: each client runs V steps then weighted mean.
+    lu = make_local_update(_quadratic_loss, opt)
+    client_params = []
+    for c in range(C):
+        p, _, _ = lu(params, opt.init(params),
+                     {"target": batches["target"][c]})
+        client_params.append(np.asarray(p["w"]))
+    expect = sum(w * p for w, p in zip(np.asarray(weights), client_params))
+    for c in range(C):  # broadcast: every row equals the aggregate
+        np.testing.assert_allclose(np.asarray(new_p["w"][c]), expect,
+                                   rtol=1e-5)
+
+
+def test_mesh_int8_gather_close_to_allreduce():
+    C, V = 2, 3
+    params = {"w": jnp.ones(8, jnp.float32)}
+    opt = sgd(0.05)
+    batches = {"target": jnp.stack(
+        [jnp.tile(jnp.full(8, t)[None], (V, 1)) for t in (0.0, 2.0)])}
+    weights = jnp.asarray([0.5, 0.5])
+    stacked = replicate_clients(params, C)
+    ref_step = build_round_step(_quadratic_loss, opt, V, "allreduce")
+    q_step = build_round_step(_quadratic_loss, opt, V, "int8_gather")
+    p_ref, _, _ = jax.jit(ref_step)(stacked, (), batches, weights)
+    p_q, _, _ = jax.jit(q_step)(stacked, (), batches, weights)
+    delta = np.max(np.abs(np.asarray(p_ref["w"]) - np.asarray(p_q["w"])))
+    # Error bounded by one int8 step of the per-client delta magnitude
+    # (each client moved by +-(1 - 0.95^3) before aggregation).
+    client_delta = 1.0 - 0.95 ** V
+    assert delta <= client_delta / 127 + 1e-7

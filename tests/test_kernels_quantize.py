@@ -1,0 +1,42 @@
+"""Quantize kernel: sweep vs jnp oracle; determinism; error bounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.quantize import ops as q_ops
+from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
+
+
+@pytest.mark.parametrize("R,D", [(256, 128), (300, 1024), (8, 64)])
+def test_quantize_matches_ref(key, R, D):
+    x = jax.random.normal(key, (R, D)) * 0.05
+    q_k, s_k = q_ops.quantize(x, key)
+    q_r, s_r = quantize_ref(x, key)
+    # identical PRNG stream + identical math -> bit-identical
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-6)
+
+
+def test_dequantize_error_bound(key):
+    x = jax.random.normal(key, (64, 512))
+    q, s = q_ops.quantize(x, key)
+    rec = dequantize_ref(q, s)
+    err = np.abs(np.asarray(rec) - np.asarray(x))
+    bound = np.asarray(s) + 1e-7  # one step of stochastic rounding
+    assert (err <= bound).all()
+
+
+def test_quantize_zero_rows(key):
+    x = jnp.zeros((16, 128))
+    q, s = q_ops.quantize(x, key)
+    assert np.asarray(s).min() > 0  # guarded scale
+    rec = dequantize_ref(q, s)
+    # stochastic rounding of exact 0/scale = floor(0 + u) is 0 except u=1-eps
+    assert np.abs(np.asarray(rec)).max() <= np.asarray(s).max()
+
+
+def test_int8_range(key):
+    x = jax.random.normal(key, (32, 256)) * 100
+    q, s = q_ops.quantize(x, key)
+    assert np.asarray(q).min() >= -127 and np.asarray(q).max() <= 127

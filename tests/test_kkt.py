@@ -1,0 +1,61 @@
+"""KKT solution tests (Eq. 29) + the documented reproduction finding."""
+import numpy as np
+import pytest
+
+from repro.core import kkt
+
+
+PROB = kkt.DelayProblem(T_cm=0.167, g=1e-2, M=10, eps=0.01, nu=2.0, c=0.4)
+
+
+def test_closed_form_positive_finite():
+    s = kkt.closed_form(PROB)
+    assert s.b >= 1 and np.isfinite(s.b)
+    assert 0 < s.theta < 1
+    assert s.V >= 1
+    assert s.H > 0 and np.isfinite(s.overall)
+
+
+def test_paper_alpha_is_b_times_stationary():
+    """REPRODUCTION FINDING: Eq. 29's alpha* == b * argmin_alpha J(b, alpha)
+    for every b — the paper's formula drops a 1/b factor (see kkt.py)."""
+    paper_alpha = kkt.closed_form(PROB).alpha
+    for b in [2.0, 8.0, 32.0, 128.0]:
+        assert b * kkt.stationary_alpha(PROB, b) == pytest.approx(
+            paper_alpha, rel=1e-9)
+
+
+def test_stationary_alpha_is_argmin():
+    for b in [4.0, 32.0]:
+        a_star = kkt.stationary_alpha(PROB, b)
+        j_star = kkt.objective(PROB, b, a_star)
+        for mult in [0.5, 0.9, 1.1, 2.0]:
+            assert kkt.objective(PROB, b, a_star * mult) >= j_star - 1e-12
+
+
+def test_objective_decreasing_in_b():
+    a = 1.0
+    js = [kkt.objective(PROB, b, a) for b in [1, 2, 4, 8, 16, 64, 256]]
+    assert all(j2 <= j1 + 1e-12 for j1, j2 in zip(js, js[1:]))
+
+
+def test_numerical_beats_or_matches_closed_form_on_bounded_problem():
+    num = kkt.solve(PROB, "numerical", b_max=64)
+    closed = kkt.closed_form(PROB)
+    closed_bounded = kkt.evaluate(
+        PROB, min(closed.b, 64.0), closed.alpha, "cf-bounded")
+    assert num.overall <= closed_bounded.overall * (1 + 1e-6)
+
+
+def test_quantize_batch_powers_of_two():
+    for b, expect in [(1.0, 1), (1.6, 2), (3.0, 4), (32.0, 32), (84.87, 64),
+                      (0.3, 1)]:
+        q = kkt.quantize_batch(b)
+        assert q == expect
+        assert q & (q - 1) == 0  # power of two
+
+
+def test_corrected_solution_respects_v_floor():
+    s = kkt.corrected_solution(PROB, b_max=64)
+    assert s.V >= 1
+    assert s.alpha >= 1.0 / PROB.nu - 1e-12

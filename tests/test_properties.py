@@ -1,0 +1,115 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import WirelessConfig
+from repro.core import delay, kkt
+from repro.core.convergence import communication_rounds, local_rounds
+from repro.data.synthetic import make_mnist_like
+from repro.federated.partition import partition_dirichlet, partition_iid
+from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
+from repro.kernels.selective_scan.ref import (
+    selective_scan_ref,
+    selective_scan_sequential,
+)
+from repro.utils.tree import tree_weighted_mean
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(T_cm=st.floats(1e-4, 10), g=st.floats(1e-6, 1.0),
+       M=st.integers(2, 100), eps=st.floats(1e-4, 0.5),
+       nu=st.floats(0.5, 8.0), c=st.floats(0.05, 5.0))
+@settings(**_SETTINGS)
+def test_kkt_closed_form_always_feasible(T_cm, g, M, eps, nu, c):
+    prob = kkt.DelayProblem(T_cm=T_cm, g=g, M=M, eps=eps, nu=nu, c=c)
+    s = kkt.closed_form(prob)
+    assert s.b >= 1 and np.isfinite(s.b)
+    # theta = exp(-alpha) may underflow to exactly 0 for extreme channels;
+    # constraint (16) allows theta = 0 ("exact local solution").
+    assert 0 <= s.theta <= 1
+    assert s.V >= 1 and s.H > 0
+    assert np.isfinite(s.overall) and s.overall > 0
+    # Eq. 29 relation: alpha* = b * stationary_alpha(b) for any b.
+    assert np.isclose(4.0 * kkt.stationary_alpha(prob, 4.0), s.alpha,
+                      rtol=1e-6)
+
+
+@given(b=st.floats(0.1, 5000))
+@settings(**_SETTINGS)
+def test_quantize_batch_power_of_two(b):
+    q = kkt.quantize_batch(b)
+    assert q >= 1 and (q & (q - 1)) == 0
+
+
+@given(b=st.integers(1, 512), theta=st.floats(0.01, 0.95),
+       M=st.integers(2, 50))
+@settings(**_SETTINGS)
+def test_rounds_positive_and_monotone_in_b(b, theta, M):
+    h = communication_rounds(b, theta, M, 0.01, 2.0, 1.0)
+    h2 = communication_rounds(2 * b, theta, M, 0.01, 2.0, 1.0)
+    assert h > 0 and h2 < h
+
+
+@given(bits=st.floats(1e3, 1e10), p=st.floats(0.01, 2.0),
+       h=st.floats(1e-10, 1e-6))
+@settings(**_SETTINGS)
+def test_uplink_time_monotone(bits, p, h):
+    wc = WirelessConfig()
+    t = delay.uplink_time(bits, wc, p, h)
+    assert t > 0
+    assert delay.uplink_time(bits * 2, wc, p, h) > t
+    assert delay.uplink_time(bits, wc, p * 2, h) < t
+
+
+@given(n=st.integers(20, 300), m=st.integers(2, 10),
+       seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_partition_complete_disjoint(n, m, seed):
+    parts = partition_iid(n, m, seed)
+    allidx = np.concatenate(parts)
+    assert len(np.unique(allidx)) == n == len(allidx)
+
+
+@given(seed=st.integers(0, 50), scale=st.floats(1e-4, 10.0))
+@settings(max_examples=10, deadline=None)
+def test_quantize_error_bound_property(seed, scale):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (4, 256)) * scale
+    q, s = quantize_ref(x, jax.random.fold_in(key, 1))
+    rec = dequantize_ref(q, s)
+    assert np.max(np.abs(np.asarray(rec - x))) <= float(np.max(np.asarray(s))) + 1e-6
+
+
+@given(seed=st.integers(0, 50), chunk=st.sampled_from([4, 8, 16, 32]),
+       S=st.sampled_from([16, 32, 48]))
+@settings(max_examples=10, deadline=None)
+def test_selective_scan_chunk_invariance(seed, chunk, S):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    B, D, N = 1, 8, 4
+    x = jax.random.normal(ks[0], (B, S, D))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, D))) * 0.3
+    A = -jnp.exp(jax.random.normal(ks[2], (D, N)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    Dk = jnp.ones((D,))
+    y_ref, h_ref = selective_scan_sequential(x, dt, A, Bm, Cm, Dk)
+    y, h = selective_scan_ref(x, dt, A, Bm, Cm, Dk, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=5e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=5e-5)
+
+
+@given(w=st.lists(st.floats(0.1, 10.0), min_size=2, max_size=5))
+@settings(**_SETTINGS)
+def test_weighted_mean_scale_invariant(w):
+    trees = [{"x": jnp.full(3, float(i))} for i in range(len(w))]
+    a = tree_weighted_mean(trees, np.asarray(w))
+    b = tree_weighted_mean(trees, np.asarray(w) * 7.3)
+    np.testing.assert_allclose(np.asarray(a["x"]), np.asarray(b["x"]),
+                               rtol=1e-5)
+    vals = np.asarray([float(i) for i in range(len(w))])
+    expect = (vals * np.asarray(w)).sum() / np.sum(w)
+    np.testing.assert_allclose(np.asarray(a["x"]), expect, rtol=1e-5)
