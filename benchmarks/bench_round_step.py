@@ -1,0 +1,96 @@
+"""Round-step throughput: backend='loop' vs backend='batched'.
+
+The tentpole perf path: one compiled, donated, vmapped round step versus
+the per-client host loop (one dispatch + host compress/decompress
+roundtrip + device->host sync per client per round). Runs the CNN-FL
+harness with int8 update compression at M in {10, 50, 200} and writes
+``BENCH_round_step.json`` (rows ``{m, backend, rounds_per_sec, round_ms}``)
+next to the repo root so the perf trajectory is tracked across PRs.
+
+  PYTHONPATH=src python -m benchmarks.run --only round_step [--quick]
+  PYTHONPATH=src python benchmarks/bench_round_step.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0])
+
+from repro.configs.base import FedConfig  # noqa: E402
+from repro.models import cnn  # noqa: E402
+
+from benchmarks.common import make_cnn_sim  # noqa: E402
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_round_step.json")
+
+# theta=0.62 -> V=1: the talk-heavy end of the paper's trade-off (sync
+# every local step), where simulator overhead is the round time. The
+# smoke-scale CNN keeps model GEMMs from masking the overhead under
+# measurement; int8 compression exercises the full uplink path.
+BENCH_FED = dict(batch_size=4, theta=0.62, lr=0.01, compress_updates=True)
+
+
+def _time_backend(m: int, backend: str, timed_rounds: int) -> float:
+    """Best-of-timed-rounds seconds/round after a warmup round (the warmup
+    absorbs jit compilation for the batched backend; min is robust to CPU
+    contention on shared runners)."""
+    fed = FedConfig(n_devices=m, **BENCH_FED)
+    sim = make_cnn_sim("mnist", fed, f"{backend}-m{m}", seed=0,
+                       backend=backend, with_eval=False,
+                       cnn_cfg=cnn.mnist_cnn_small())
+    sim.run_round()
+    sim.block_until_ready()
+    best = float("inf")
+    for _ in range(timed_rounds):
+        t0 = time.perf_counter()
+        sim.run_round()
+        sim.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = False):
+    ms = [10, 50] if quick else [10, 50, 200]
+    timed = {10: 5, 50: 4, 200: 3}
+    rows_json = []
+    rows_csv = []
+    per_m = {}
+    for m in ms:
+        for backend in ("loop", "batched"):
+            sec = _time_backend(m, backend, timed[m])
+            per_m.setdefault(m, {})[backend] = sec
+            rows_json.append({
+                "m": m,
+                "backend": backend,
+                "rounds_per_sec": 1.0 / sec,
+                "round_ms": sec * 1e3,
+            })
+            rows_csv.append((f"round_step_m{m}_{backend}",
+                             f"{sec * 1e6:.0f}", f"{1.0 / sec:.3f}"))
+        speedup = per_m[m]["loop"] / per_m[m]["batched"]
+        rows_csv.append((f"round_step_m{m}_speedup", "", f"{speedup:.2f}"))
+    if not quick:
+        # Only full runs update the tracked artifact: a --quick sweep must
+        # not clobber the M=200 rows of the cross-PR perf trajectory.
+        with open(JSON_PATH, "w") as f:
+            json.dump(rows_json, f, indent=2)
+            f.write("\n")
+    return "name,us_per_round,rounds_per_sec_or_x", rows_csv
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    header, rows = run(quick=args.quick)
+    print(header)
+    for r in rows:
+        print(",".join(map(str, r)))
+
+
+if __name__ == "__main__":
+    main()

@@ -49,6 +49,51 @@ def cnn_update_bits(dataset: str = "mnist") -> float:
     return tree_bytes(params) * 8.0
 
 
+def make_cnn_sim(
+    dataset: str,
+    fed: FedConfig,
+    label: str,
+    n_train: int = 1500,
+    n_test: int = 400,
+    seed: int = 0,
+    backend: str = "batched",
+    impl: str = "xla",
+    with_eval: bool = True,
+    cnn_cfg: Optional[cnn.CNNConfig] = None,
+) -> FLSimulation:
+    """The CNN-FL harness (Figs. 1-2): data, partitions, population, sim.
+
+    `backend` selects the compiled stacked-client round step ('batched',
+    the default) or the per-client reference loop ('loop'); M scales with
+    fed.n_devices well past the paper's 10 — small partitions resample
+    with replacement. `cnn_cfg` overrides the paper model (e.g.
+    cnn.mnist_cnn_small() for overhead-dominated benching)."""
+    make = make_mnist_like if dataset == "mnist" else make_cifar_like
+    data = make(n_train, seed=seed)
+    cfg = cnn_cfg or (cnn.mnist_cnn() if dataset == "mnist" else cnn.cifar_cnn())
+    params = cnn.init_cnn(cfg, jax.random.PRNGKey(seed))
+    parts = partition_dirichlet(data, fed.n_devices, alpha=1.0, seed=seed)
+    iters = [BatchIterator(data, p, fed.batch_size, seed=seed + i)
+             for i, p in enumerate(parts)]
+    pop = paper_population(fed.n_devices)
+    eval_fn = None
+    if with_eval:
+        test = make(n_test, seed=seed + 1)
+        xb, yb = jnp.asarray(test.x), jnp.asarray(test.y)
+
+        @jax.jit
+        def eval_acc(p):
+            logits = cnn.cnn_forward(cfg, p, xb)
+            return jnp.mean((jnp.argmax(logits, -1) == yb).astype(jnp.float32))
+
+        eval_fn = lambda p: {"acc": float(eval_acc(p))}  # noqa: E731
+
+    return FLSimulation(
+        functools.partial(cnn.cnn_loss, cfg), params, iters,
+        partition_sizes(parts), fed, sgd(fed.lr), pop,
+        eval_fn=eval_fn, label=label, backend=backend, impl=impl)
+
+
 def run_cnn_fl(
     dataset: str,
     fed: FedConfig,
@@ -59,27 +104,11 @@ def run_cnn_fl(
     eval_every: int = 3,
     target_acc: Optional[float] = None,
     seed: int = 0,
+    backend: str = "batched",
+    impl: str = "xla",
 ) -> SimResult:
-    make = make_mnist_like if dataset == "mnist" else make_cifar_like
-    data = make(n_train, seed=seed)
-    test = make(n_test, seed=seed + 1)
-    cfg = cnn.mnist_cnn() if dataset == "mnist" else cnn.cifar_cnn()
-    params = cnn.init_cnn(cfg, jax.random.PRNGKey(seed))
-    parts = partition_dirichlet(data, fed.n_devices, alpha=1.0, seed=seed)
-    iters = [BatchIterator(data, p, fed.batch_size, seed=seed + i)
-             for i, p in enumerate(parts)]
-    pop = paper_population(fed.n_devices)
-    xb, yb = jnp.asarray(test.x), jnp.asarray(test.y)
-
-    @jax.jit
-    def eval_acc(p):
-        logits = cnn.cnn_forward(cfg, p, xb)
-        return jnp.mean((jnp.argmax(logits, -1) == yb).astype(jnp.float32))
-
-    sim = FLSimulation(
-        functools.partial(cnn.cnn_loss, cfg), params, iters,
-        partition_sizes(parts), fed, sgd(fed.lr), pop,
-        eval_fn=lambda p: {"acc": float(eval_acc(p))}, label=label)
+    sim = make_cnn_sim(dataset, fed, label, n_train=n_train, n_test=n_test,
+                       seed=seed, backend=backend, impl=impl)
     return sim.run(max_rounds=rounds, eval_every=eval_every,
                    target_acc=target_acc)
 

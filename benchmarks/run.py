@@ -16,6 +16,7 @@ sys.path.insert(0, __file__.rsplit("/", 2)[0])
 from benchmarks import (  # noqa: E402
     ablation_compression,
     ablation_straggler,
+    bench_round_step,
     fig1a_epsilon,
     fig1b_batch,
     fig1c_theta,
@@ -33,6 +34,7 @@ BENCHES = {
     "straggler": ablation_straggler.run,
     "compression": ablation_compression.run,
     "roofline": roofline_table.run,
+    "round_step": bench_round_step.run,
 }
 
 

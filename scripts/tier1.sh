@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 gate (see ROADMAP.md): the repo's fast verification command plus
+# the simulator backend-parity suite, pinned to CPU so results match CI.
+# Tests slower than ~30s carry @pytest.mark.slow and are skipped here;
+# run `pytest -m slow` for the long tail.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# test_properties.py needs hypothesis; skip it where the container lacks
+# the dependency (seed-state condition) instead of failing collection.
+EXTRA=()
+if ! python -c "import hypothesis" 2>/dev/null; then
+  echo "tier1: hypothesis not installed — skipping tests/test_properties.py"
+  EXTRA+=(--ignore=tests/test_properties.py)
+fi
+
+# Backend-parity suite first (fast, and -x below stops at the first
+# failure anywhere in the tree), then the ROADMAP tier-1 command.
+python -m pytest -q tests/test_simulation_backends.py
+python -m pytest -x -q -m "not slow" "${EXTRA[@]}" "$@"

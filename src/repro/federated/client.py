@@ -6,6 +6,7 @@ from typing import Any, Callable, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.optim.api import Optimizer, apply_updates
 
@@ -45,3 +46,15 @@ def client_round(
 def stack_batches(batches: List[Dict]) -> Dict:
     """[batch, ...] (length V) -> pytree with leading V axis."""
     return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+
+
+def stack_client_batches(iterators: List, V: int) -> Dict:
+    """One round of batches for all M clients -> pytree with leading
+    (M, V) axes. Stacked in numpy so the batched round step sees a single
+    host->device transfer at the jit boundary instead of M*V small ones.
+    Consumes each iterator in the same order as the per-client host loop."""
+    per_client = []
+    for it in iterators:
+        batches = [it.next_batch() for _ in range(V)]
+        per_client.append(jax.tree.map(lambda *xs: np.stack(xs), *batches))
+    return jax.tree.map(lambda *xs: np.stack(xs), *per_client)

@@ -39,15 +39,34 @@ def compress_update(update: Any, key, impl: str = "xla") -> Any:
         treedef, [_leaf_quantize(l, k, impl) for l, k in zip(leaves, keys)])
 
 
-def decompress_update(comp: Any) -> Any:
+def decompress_update(comp: Any, impl: str = "xla") -> Any:
+    if impl == "pallas":
+        from repro.kernels.quantize import ops as q_ops
+
+        dequant = q_ops.dequantize
+    else:
+        dequant = dequantize_ref
+
     def leaf(c):
-        flat = dequantize_ref(c["q"], c["scale"]).reshape(-1)
+        flat = dequant(c["q"], c["scale"]).reshape(-1)
         if c["pad"]:
             flat = flat[: flat.size - c["pad"]]
         return flat.reshape(c["shape"])
 
     return jax.tree.map(
         leaf, comp, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+def sequential_client_keys(key, n: int):
+    """Per-client subkeys with the host loop's schedule: (key, sub) =
+    split(key), n times. Both simulator backends derive quantizer keys
+    through this, so the batched in-graph roundtrip draws bit-identical
+    stochastic-rounding noise to the per-client host roundtrip."""
+    subs = []
+    for _ in range(n):
+        key, sub = jax.random.split(key)
+        subs.append(sub)
+    return key, jnp.stack(subs)
 
 
 def compressed_bits(update: Any) -> int:

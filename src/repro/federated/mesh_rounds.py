@@ -13,6 +13,10 @@ Aggregation modes:
   'int8_gather': beyond-paper — per-client int8 quantized deltas are
                  all-gathered and combined locally, shrinking collective
                  bytes ~4x (federated/compression.py semantics inline).
+  'int8_stochastic': the exact federated/compression.py quantizer
+                 (stochastic rounding, one fp32 scale per 1024-chunk) run
+                 in-graph on per-client deltas — the compiled form of the
+                 simulator's host-side compress/decompress roundtrip.
 """
 from __future__ import annotations
 
@@ -73,6 +77,30 @@ def _int8_gather_mean_bcast(new_params, old_params, weights, key):
             agg_new.reshape(old.shape[1:])[None].astype(new.dtype), new.shape)
 
     return jax.tree.map(agg, new_params, old_params)
+
+
+def _int8_stochastic_mean_bcast(new_params, old_params, weights, keys, impl):
+    """federated/compression.py semantics in-graph: every client's delta
+    goes through the stochastic int8 quantize/dequantize roundtrip (per-
+    1024-chunk fp32 scales), then weighted FedAvg + broadcast. keys (C, 2)
+    carry one PRNG key per client; fed from the same sequential schedule as
+    the host loop, the reconstruction is bit-identical to it."""
+    from repro.federated import compression
+
+    deltas = jax.tree.map(lambda n, o: n - o, new_params, old_params)
+    rec = jax.vmap(
+        lambda d, k: compression.decompress_update(
+            compression.compress_update(d, k, impl=impl), impl=impl)
+    )(deltas, keys)
+
+    def agg(r, old):
+        flat = r.reshape(r.shape[0], -1).astype(jnp.float32)
+        mean = jnp.tensordot(weights.astype(jnp.float32), flat, axes=(0, 0))
+        out = old[0].reshape(-1).astype(jnp.float32) + mean
+        return jnp.broadcast_to(
+            out.reshape(old.shape[1:])[None].astype(old.dtype), old.shape)
+
+    return jax.tree.map(agg, rec, old_params)
 
 
 def _int8_shardmap_sync(mesh, param_specs_tree, client_axes):
@@ -164,13 +192,18 @@ def build_round_step(
     mesh=None,
     param_specs_tree=None,
     client_axes=None,
+    impl: str = "xla",
 ):
-    """Build round_step(params_C, opt_C, batches, weights) with leaves
-    stacked on a leading client axis C and batches (C, V, ...).
+    """Build round_step(params_C, opt_C, batches, weights, keys=None) with
+    leaves stacked on a leading client axis C and batches (C, V, ...).
 
     aggregation in ('allreduce_shardmap', 'int8_shardmap') needs
     (mesh, param_specs_tree, client_axes) for the explicit-collective path;
-    'allreduce' is the plain GSPMD tensordot used on a single device."""
+    'allreduce' is the plain GSPMD tensordot used on a single device.
+    'int8_stochastic' additionally takes keys (C, 2) — one quantizer PRNG
+    key per client — and honors impl ('xla' | 'pallas') for the quantize
+    kernel. metrics carries both the weighted loss and the raw per-client
+    losses so callers can match the host loop's unweighted mean."""
     local = local_steps_fn(loss_fn, opt)
     int8_sync = psum_sync = None
     if aggregation == "int8_shardmap":
@@ -178,7 +211,7 @@ def build_round_step(
     if aggregation == "allreduce_shardmap":
         psum_sync = _psum_shardmap_sync(mesh, param_specs_tree, client_axes)
 
-    def round_step(params_C, opt_C, batches, weights):
+    def round_step(params_C, opt_C, batches, weights, keys=None):
         new_p, new_s, losses = jax.vmap(local)(params_C, opt_C, batches)
         if aggregation == "allreduce":
             agg_p = _weighted_mean_bcast(new_p, weights)
@@ -187,12 +220,17 @@ def build_round_step(
         elif aggregation == "int8_gather":
             agg_p = _int8_gather_mean_bcast(
                 new_p, params_C, weights, key=None)
+        elif aggregation == "int8_stochastic":
+            assert keys is not None, "int8_stochastic needs per-client keys"
+            agg_p = _int8_stochastic_mean_bcast(
+                new_p, params_C, weights, keys, impl)
         elif aggregation == "int8_shardmap":
             agg_p = int8_sync(new_p, params_C, weights)
         else:
             raise ValueError(aggregation)
         metrics = {"loss": jnp.tensordot(weights.astype(jnp.float32),
-                                         losses, axes=(0, 0))}
+                                         losses, axes=(0, 0)),
+                   "per_client_loss": losses}
         return agg_p, new_s, metrics
 
     return round_step

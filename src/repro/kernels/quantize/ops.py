@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.quantize.kernel import quantize_kernel
-from repro.kernels.quantize.ref import dequantize_ref
+from repro.kernels.quantize.ref import dequantize_ref, stochastic_noise
 
 
 def _is_tpu() -> bool:
@@ -17,7 +17,9 @@ def _is_tpu() -> bool:
 def quantize(x: jnp.ndarray, key, block_r: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: (R, D) fp32 -> (q int8 (R, D), scale (R, 1))."""
     R, D = x.shape
-    u = jax.random.uniform(key, (R, D), jnp.float32)
+    # Same packed-8-bit noise stream as quantize_ref: given the same key the
+    # two impls stay bit-identical (tests/test_kernels_quantize.py).
+    u = stochastic_noise(key, (R, D))
     pad = (-R) % block_r
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))

@@ -30,6 +30,15 @@ def mnist_cnn() -> CNNConfig:
     return CNNConfig(name="cnn-mnist", input_hw=(28, 28), in_channels=1)
 
 
+def mnist_cnn_small() -> CNNConfig:
+    """Smoke-scale variant (same topology, ~30x fewer params). The round-
+    step bench runs on it so simulator overhead (per-client dispatch, host
+    compression roundtrips, device->host syncs) dominates over GEMM time —
+    the regime the batched backend exists for."""
+    return CNNConfig(name="cnn-mnist-small", input_hw=(28, 28), in_channels=1,
+                     conv_channels=(8, 16), fc_dim=64)
+
+
 def cifar_cnn() -> CNNConfig:
     return CNNConfig(name="cnn-cifar", input_hw=(32, 32), in_channels=3)
 
@@ -58,16 +67,37 @@ def init_cnn(cfg: CNNConfig, key) -> Dict:
     }
 
 
+def _patches(x, k):
+    """'SAME' kxk patches of x (B, H, W, C) -> (B, H, W, k*k*C), ordered to
+    match an HWIO filter flattened as (k*k*C, O)."""
+    B, H, W, C = x.shape
+    # Symmetric k//2 padding only equals XLA SAME for odd windows.
+    assert k % 2 == 1, f"im2col path requires odd kernel, got {k}"
+    p = k // 2
+    xp = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, 0)))
+    cols = [xp[:, i : i + H, j : j + W, :] for i in range(k) for j in range(k)]
+    return jnp.concatenate(cols, axis=-1)
+
+
 def _conv(x, p):
-    out = jax.lax.conv_general_dilated(
-        x, p["w"], window_strides=(1, 1), padding="SAME",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    return out + p["b"]
+    # im2col + matmul rather than conv_general_dilated: XLA:CPU lowers the
+    # filter/input gradients of a direct conv to transposed convolutions
+    # that run ~10-25x slower than the forward pass; the patches+dot form
+    # keeps both directions on the (fast) GEMM path and is bit-identical in
+    # the forward direction. The FL simulator spends nearly all its compute
+    # here (V fwd/bwd passes per client per round).
+    k = p["w"].shape[0]
+    w = p["w"].reshape(-1, p["w"].shape[-1])  # (k*k*C, O)
+    return _patches(x, k) @ w + p["b"]
 
 
 def _maxpool(x):
-    return jax.lax.reduce_window(
-        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    # Non-overlapping 2x2 window == reshape + max; reduce_window's gradient
+    # (select-and-scatter) is a scalar loop on XLA:CPU. Tie-breaking in the
+    # VJP differs (split vs first-hit) but the forward is exact.
+    B, H, W, C = x.shape
+    assert H % 2 == 0 and W % 2 == 0, f"2x2 pool needs even dims, got {H}x{W}"
+    return jnp.max(x.reshape(B, H // 2, 2, W // 2, 2, C), axis=(2, 4))
 
 
 def cnn_forward(cfg: CNNConfig, params: Dict, images: jnp.ndarray) -> jnp.ndarray:

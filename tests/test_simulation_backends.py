@@ -1,0 +1,151 @@
+"""Backend parity: the compiled stacked-client round (backend='batched',
+with donated buffers and optional in-graph int8 compression) must
+reproduce the per-client host loop (backend='loop') under a fixed seed."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
+from repro.core import delay
+from repro.federated.simulation import FLSimulation
+from repro.models import cnn
+from repro.optim import sgd
+
+
+def _quad_loss(params, batch):
+    diff = params["w"] - batch["target"]
+    return 0.5 * jnp.sum(diff * diff), {}
+
+
+class _TargetIterator:
+    """Deterministic per-client batch source for the quadratic problem."""
+
+    def __init__(self, target, batch_size):
+        self.target = np.asarray(target, np.float32)
+        self.batch_size = batch_size
+
+    def next_batch(self):
+        return {"target": np.tile(self.target, (self.batch_size, 1))}
+
+
+def _quad_sim(backend, compress, impl="xla", momentum=0.0, seed=0):
+    M, d, b = 4, 16, 2
+    fed = FedConfig(n_devices=M, batch_size=b, lr=0.05, seed=seed,
+                    compress_updates=compress)
+    pop = delay.draw_population(M, ComputeConfig(), WirelessConfig(), 0, 0.0)
+    iters = [_TargetIterator(np.linspace(0.0, m, d) * 0.1, b)
+             for m in range(M)]
+    return FLSimulation(
+        _quad_loss, {"w": jnp.zeros(d)}, iters,
+        np.array([10, 20, 30, 40]), fed, sgd(fed.lr, momentum), pop,
+        backend=backend, impl=impl)
+
+
+def _run_pair(make_sim, rounds=5, **kw):
+    out = {}
+    for backend in ("loop", "batched"):
+        res = make_sim(backend, **kw).run(max_rounds=rounds)
+        out[backend] = (res.params, [r.train_loss for r in res.history])
+    return out
+
+
+def _assert_parity(out, atol):
+    for a, b in zip(jax.tree.leaves(out["loop"][0]),
+                    jax.tree.leaves(out["batched"][0])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol)
+    np.testing.assert_allclose(out["loop"][1], out["batched"][1], atol=atol)
+
+
+@pytest.mark.parametrize("compress", [False, True])
+def test_backend_parity_quadratic(compress):
+    """Elementwise model: loop and batched agree to fp32 tolerance, with
+    and without the int8 compression roundtrip (the sequential key
+    schedule makes the stochastic-rounding noise bit-identical)."""
+    _assert_parity(_run_pair(_quad_sim, compress=compress), atol=1e-5)
+
+
+def test_backend_parity_quadratic_momentum():
+    """Stacked opt state (momentum buffers) follows the same parity."""
+    _assert_parity(_run_pair(_quad_sim, compress=True, momentum=0.9),
+                   atol=1e-5)
+
+
+def test_backend_parity_quadratic_pallas_impl():
+    """impl='pallas' routes quantize/dequantize through kernels/quantize/
+    ops (interpret mode on CPU) and must match the xla reference path."""
+    ref = _quad_sim("batched", compress=True, impl="xla").run(max_rounds=3)
+    pal = _quad_sim("batched", compress=True, impl="pallas").run(max_rounds=3)
+    for a, b in zip(jax.tree.leaves(ref.params), jax.tree.leaves(pal.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def _cnn_sim(backend, compress, seed=0):
+    from repro.data import BatchIterator, make_mnist_like
+    from repro.federated.partition import partition_dirichlet, partition_sizes
+
+    M, b = 3, 8
+    fed = FedConfig(n_devices=M, batch_size=b, theta=0.62, lr=0.05, seed=seed,
+                    compress_updates=compress)
+    cfg = cnn.mnist_cnn_small()
+    data = make_mnist_like(240, seed=seed)
+    parts = partition_dirichlet(data, M, alpha=1.0, seed=seed)
+    iters = [BatchIterator(data, p, b, seed=seed + i)
+             for i, p in enumerate(parts)]
+    pop = delay.draw_population(M, ComputeConfig(), WirelessConfig(), 0, 0.0)
+    return FLSimulation(
+        functools.partial(cnn.cnn_loss, cfg), cnn.init_cnn(cfg, jax.random.PRNGKey(seed)),
+        iters, partition_sizes(parts), fed, sgd(fed.lr), pop, backend=backend)
+
+
+def test_backend_parity_cnn():
+    _assert_parity(_run_pair(_cnn_sim, rounds=3, compress=False), atol=1e-5)
+
+
+def test_backend_parity_cnn_compressed():
+    """With compression, vmap-vs-loop fp32 reduction differences can flip
+    individual stochastic-rounding buckets, so agreement is bounded by a
+    few int8 steps of the per-round delta rather than raw fp32 tolerance."""
+    _assert_parity(_run_pair(_cnn_sim, rounds=3, compress=True), atol=2e-3)
+
+
+def test_batched_resumed_run_after_donation():
+    """run() twice on one sim: donated buffers from run #1's last round
+    must not poison run #2 (state is rebound to the returned arrays)."""
+    sim = _quad_sim("batched", compress=True)
+    r1 = sim.run(max_rounds=2)
+    r2 = sim.run(max_rounds=2)
+    assert r1.rounds == 2 and r2.rounds == 2
+    for leaf in jax.tree.leaves(r2.params):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+    # training continued: run #2 starts from run #1's state
+    assert r2.history[-1].train_loss < r1.history[0].train_loss
+    assert all(isinstance(r.train_loss, float) for r in r2.history)
+
+
+def test_batched_eval_boundary_sync():
+    """Metrics stay on device between eval_every boundaries but the
+    returned history is fully materialized floats."""
+    sim = _cnn_sim("batched", compress=False)
+    acc_calls = []
+    sim.eval_fn = lambda p: acc_calls.append(1) or {"acc": 0.0}
+    res = sim.run(max_rounds=4, eval_every=2)
+    assert len(acc_calls) == 2  # rounds 2 and 4 only
+    assert all(isinstance(r.train_loss, float) for r in res.history)
+
+
+def test_compressed_bits_delay_accounting():
+    """T_cm uses compression.compressed_bits (int8 payload + per-1024-chunk
+    fp32 scales), not the bits/4 approximation."""
+    from repro.federated import compression
+    from repro.utils.tree import tree_bytes
+
+    plain = _quad_sim("batched", compress=False)
+    comp = _quad_sim("batched", compress=True)
+    raw_bits = tree_bytes(plain.params) * 8.0
+    assert plain._update_bits() == raw_bits
+    assert comp._update_bits() == compression.compressed_bits(comp.params)
+    assert comp._update_bits() != raw_bits / 4.0
+    assert comp._update_bits() < raw_bits / 3.0
