@@ -17,6 +17,7 @@ import json
 import os
 import sys
 import time
+from typing import Optional
 
 sys.path.insert(0, __file__.rsplit("/", 2)[0])
 
@@ -53,10 +54,18 @@ def _time_backend(m: int, backend: str, timed_rounds: int) -> float:
     return best
 
 
-def run(quick: bool = False):
-    ms = [10, 50] if quick else [10, 50, 200]
+def run(quick: bool = False, smoke: bool = False, out: str = "",
+        speedups: Optional[dict] = None):
+    """smoke=True is the CI gate: tiny config (M=10 only). `out` gets the
+    timing rows plus per-M speedup rows as a CI artifact; pass a dict as
+    `speedups` to receive the raw {m: loop/batched} ratios (main --check
+    uses this — never the rounded CSV strings). smoke/quick runs never
+    clobber the tracked full-size BENCH_round_step.json trajectory, whose
+    rows keep the documented {m, backend, rounds_per_sec, round_ms} shape."""
+    ms = [10] if smoke else ([10, 50] if quick else [10, 50, 200])
     timed = {10: 5, 50: 4, 200: 3}
     rows_json = []
+    speedup_json = []
     rows_csv = []
     per_m = {}
     for m in ms:
@@ -72,12 +81,19 @@ def run(quick: bool = False):
             rows_csv.append((f"round_step_m{m}_{backend}",
                              f"{sec * 1e6:.0f}", f"{1.0 / sec:.3f}"))
         speedup = per_m[m]["loop"] / per_m[m]["batched"]
+        if speedups is not None:
+            speedups[m] = speedup
+        speedup_json.append({"m": m, "speedup_x": speedup})
         rows_csv.append((f"round_step_m{m}_speedup", "", f"{speedup:.2f}"))
-    if not quick:
-        # Only full runs update the tracked artifact: a --quick sweep must
+    if not (quick or smoke):
+        # Only full runs update the tracked artifact: a reduced sweep must
         # not clobber the M=200 rows of the cross-PR perf trajectory.
         with open(JSON_PATH, "w") as f:
             json.dump(rows_json, f, indent=2)
+            f.write("\n")
+    if out:
+        with open(out, "w") as f:
+            json.dump(rows_json + speedup_json, f, indent=2)
             f.write("\n")
     return "name,us_per_round,rounds_per_sec_or_x", rows_csv
 
@@ -85,11 +101,27 @@ def run(quick: bool = False):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: M=10 only, no tracked-artifact write")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if the batched backend is not faster than "
+                         "the loop backend at any M (guards the PR 1 "
+                         "speedup)")
+    ap.add_argument("--out", default="",
+                    help="also write the rows JSON here (CI artifact)")
     args = ap.parse_args(argv)
-    header, rows = run(quick=args.quick)
+    speedups: dict = {}
+    header, rows = run(quick=args.quick, smoke=args.smoke, out=args.out,
+                       speedups=speedups)
     print(header)
     for r in rows:
         print(",".join(map(str, r)))
+    if args.check:
+        bad = {m: x for m, x in speedups.items() if x <= 1.0}
+        if bad:
+            print(f"FAIL: batched backend slower than loop: {bad}")
+            raise SystemExit(1)
+        print("check: batched backend faster than loop at every M")
 
 
 if __name__ == "__main__":

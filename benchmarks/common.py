@@ -13,6 +13,7 @@ import numpy as np
 from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
 from repro.core import defl, delay, kkt
 from repro.data import BatchIterator, make_cifar_like, make_mnist_like
+from repro.federated import scenarios
 from repro.federated.partition import partition_dirichlet, partition_sizes
 from repro.federated.simulation import FLSimulation, SimResult
 from repro.models import cnn
@@ -60,6 +61,7 @@ def make_cnn_sim(
     impl: str = "xla",
     with_eval: bool = True,
     cnn_cfg: Optional[cnn.CNNConfig] = None,
+    scenario=None,  # scenarios.Scenario | registered name | None
 ) -> FLSimulation:
     """The CNN-FL harness (Figs. 1-2): data, partitions, population, sim.
 
@@ -67,7 +69,9 @@ def make_cnn_sim(
     the default) or the per-client reference loop ('loop'); M scales with
     fed.n_devices well past the paper's 10 — small partitions resample
     with replacement. `cnn_cfg` overrides the paper model (e.g.
-    cnn.mnist_cnn_small() for overhead-dominated benching)."""
+    cnn.mnist_cnn_small() for overhead-dominated benching). `scenario`
+    draws the device population from a registered edge scenario and runs
+    its per-round participation/channel stream through the simulator."""
     make = make_mnist_like if dataset == "mnist" else make_cifar_like
     data = make(n_train, seed=seed)
     cfg = cnn_cfg or (cnn.mnist_cnn() if dataset == "mnist" else cnn.cifar_cnn())
@@ -75,7 +79,19 @@ def make_cnn_sim(
     parts = partition_dirichlet(data, fed.n_devices, alpha=1.0, seed=seed)
     iters = [BatchIterator(data, p, fed.batch_size, seed=seed + i)
              for i, p in enumerate(parts)]
-    pop = paper_population(fed.n_devices)
+    if scenario is not None:
+        scenario = scenarios.get(scenario)
+        pop = scenario.population(
+            fed.n_devices, CALIBRATED_COMPUTE, WirelessConfig(), seed)
+        # One seed governs population draw, realization stream (seeded
+        # from fed.seed inside FLSimulation) and any plan_for_scenario
+        # call made with the same seed — passing seed != fed.seed would
+        # otherwise time a different population than the one planned for.
+        if fed.seed != seed:
+            import dataclasses
+            fed = dataclasses.replace(fed, seed=seed)
+    else:
+        pop = paper_population(fed.n_devices)
     eval_fn = None
     if with_eval:
         test = make(n_test, seed=seed + 1)
@@ -91,7 +107,8 @@ def make_cnn_sim(
     return FLSimulation(
         functools.partial(cnn.cnn_loss, cfg), params, iters,
         partition_sizes(parts), fed, sgd(fed.lr), pop,
-        eval_fn=eval_fn, label=label, backend=backend, impl=impl)
+        eval_fn=eval_fn, label=label, backend=backend, impl=impl,
+        scenario=scenario)
 
 
 def run_cnn_fl(
@@ -106,11 +123,19 @@ def run_cnn_fl(
     seed: int = 0,
     backend: str = "batched",
     impl: str = "xla",
+    scenario=None,
 ) -> SimResult:
     sim = make_cnn_sim(dataset, fed, label, n_train=n_train, n_test=n_test,
-                       seed=seed, backend=backend, impl=impl)
-    return sim.run(max_rounds=rounds, eval_every=eval_every,
-                   target_acc=target_acc)
+                       seed=seed, backend=backend, impl=impl,
+                       scenario=scenario)
+    res = sim.run(max_rounds=rounds, eval_every=eval_every,
+                  target_acc=target_acc)
+    # The masked/per-scenario path must not cost recompilation: one trace
+    # per (scenario, backend) — the donation + deferred-sync story holds.
+    if backend == "batched":
+        assert sim.trace_count == 1, (
+            f"round step retraced {sim.trace_count}x for {label}")
+    return res
 
 
 def emit(rows, header=None):

@@ -1,13 +1,18 @@
 """Benchmark entry point: one function per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1a,...]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1a,...] \
+      [--scenario <name>]
 
-Emits ``name,...`` CSV blocks per benchmark. The roofline table reads the
-dry-run dumps in experiments/dryrun (run launch/dryrun.py first for the
-full 40-pair baseline)."""
+Emits ``name,...`` CSV blocks per benchmark. ``--scenario`` restricts the
+scenario-aware benchmarks (fig2, straggler) to one registered edge
+scenario (federated/scenarios.py); benchmarks that don't take a scenario
+run unchanged, with a note. The roofline table reads the dry-run dumps in
+experiments/dryrun (run launch/dryrun.py first for the full 40-pair
+baseline)."""
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
@@ -24,6 +29,7 @@ from benchmarks import (  # noqa: E402
     fig2_defl_vs_fedavg,
     roofline_table,
 )
+from repro.federated import scenarios  # noqa: E402
 
 BENCHES = {
     "fig1a": fig1a_epsilon.run,
@@ -43,11 +49,22 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced round budgets (single-core CPU container)")
     ap.add_argument("--only", default="")
+    ap.add_argument("--scenario", default="", choices=("",) + scenarios.names(),
+                    help="restrict scenario-aware benchmarks to one "
+                         "registered edge scenario")
     args = ap.parse_args(argv)
     names = args.only.split(",") if args.only else list(BENCHES)
     for name in names:
+        fn = BENCHES[name]
+        kw = {"quick": args.quick}
+        if args.scenario:
+            if "scenario" in inspect.signature(fn).parameters:
+                kw["scenario"] = args.scenario
+            else:
+                print(f"# === {name}: not scenario-aware; running as-is ===",
+                      flush=True)
         t0 = time.time()
-        header, rows = BENCHES[name](quick=args.quick)
+        header, rows = fn(**kw)
         print(f"# === {name} ({time.time() - t0:.1f}s) ===", flush=True)
         print(header)
         for r in rows:

@@ -1,22 +1,28 @@
 """End-to-end driver (deliverable b): DEFL vs FedAvg vs Rand on the
 paper's CNN task with real training + simulated delay accounting —
-reproduces Fig. 2 qualitatively.
+reproduces Fig. 2 qualitatively, per edge scenario.
 
-  PYTHONPATH=src python examples/defl_vs_fedavg.py [--rounds 12]
-"""
+  PYTHONPATH=src python examples/defl_vs_fedavg.py [--quick] \
+      [--scenario stragglers]
+
+Without --scenario the full registered table (uniform, stragglers,
+cell_edge, dropout, drifting) is swept."""
 import argparse
 import sys
 
 sys.path.insert(0, __file__.rsplit("/", 2)[0])
 
 from benchmarks.fig2_defl_vs_fedavg import run  # noqa: E402
+from repro.federated import scenarios  # noqa: E402
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--scenario", default="",
+                    choices=("",) + scenarios.names())
     args = ap.parse_args()
-    header, rows = run(quick=args.quick)
+    header, rows = run(quick=args.quick, scenario=args.scenario)
     print(header)
     for r in rows:
         print(",".join(map(str, r)))

@@ -7,7 +7,7 @@ Every assigned architecture gets a ``configs/<id>.py`` exporting
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import numpy as np

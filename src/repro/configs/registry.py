@@ -1,7 +1,7 @@
 """Architecture registry: --arch <id> resolution."""
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict
 
 from repro.configs import (
     falcon_mamba_7b,

@@ -13,7 +13,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
+from repro.configs.base import FedConfig, WirelessConfig
 from repro.core import delay, kkt
 
 
@@ -40,19 +40,26 @@ def make_plan(
     update_bits: float,
     wireless: Optional[WirelessConfig] = None,
     method: str = "closed_form",
+    participation: float = 1.0,
 ) -> DEFLPlan:
     """Solve the paper's optimization for a device population.
 
     update_bits: local model update size s in bits (actual parameter bytes
     unless FedConfig overrides; compression shrinks it).
+    participation: expected fraction of clients whose update arrives each
+    round (scenarios with Bernoulli dropout / link failure). The Eq. 12
+    round-count model sees the effective M = round(participation * M) >= 1
+    — fewer arriving updates per round means more rounds to the target,
+    which moves the optimal talk/work point.
     """
     wireless = wireless or WirelessConfig()
     if fed.compress_updates:
         update_bits = update_bits / 4.0  # fp32 -> int8 quantized updates
     T_cm = delay.round_comm_time(update_bits, wireless, pop.p, pop.h)
     g = float(max(pop.G / pop.f))  # bottleneck compute slope (s per batch unit)
+    M_eff = max(1, int(round(fed.n_devices * participation)))
     prob = kkt.DelayProblem(
-        T_cm=T_cm, g=g, M=fed.n_devices, eps=fed.epsilon, nu=fed.nu, c=fed.c)
+        T_cm=T_cm, g=g, M=M_eff, eps=fed.epsilon, nu=fed.nu, c=fed.c)
     sol = kkt.solve(prob, method=method).quantized(prob)
     return DEFLPlan(
         b=int(sol.b),

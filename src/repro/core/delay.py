@@ -40,9 +40,16 @@ def local_compute_time(b: float, G_m: float, f_m: float) -> float:
     return G_m * b / f_m
 
 
+def per_client_compute_time(
+    b: float, G: Sequence[float], f: Sequence[float],
+) -> np.ndarray:
+    """Vectorized Eq. 4: T_cp^m for every device, shape (M,)."""
+    return np.asarray(G, np.float64) * b / np.asarray(f, np.float64)
+
+
 def round_compute_time(b: float, G: Sequence[float], f: Sequence[float]) -> float:
     """Eq. 5: synchronous straggler bound T_cp = max_m T_cp^m."""
-    return float(max(local_compute_time(b, g, fm) for g, fm in zip(G, f)))
+    return float(np.max(per_client_compute_time(b, G, f)))
 
 
 # ---------------------------------------------------------------------------
@@ -63,12 +70,24 @@ def uplink_time(update_bits: float, wc: WirelessConfig, p_m: float, h_m: float) 
     return update_bits / uplink_rate(wc, p_m, h_m)
 
 
+def per_client_uplink_time(
+    update_bits: float, wc: WirelessConfig,
+    p: Sequence[float], h: Sequence[float],
+) -> np.ndarray:
+    """Vectorized Eq. 6: T_cm^m for every device, shape (M,).
+
+    uplink_rate already broadcasts over arrays (np.log2), so this is one
+    vector expression instead of an M-long Python loop."""
+    return update_bits / uplink_rate(
+        wc, np.asarray(p, np.float64), np.asarray(h, np.float64))
+
+
 def round_comm_time(
     update_bits: float, wc: WirelessConfig,
     p: Sequence[float], h: Sequence[float],
 ) -> float:
     """Eq. 7: synchronous T_cm = max_m T_cm^m."""
-    return float(max(uplink_time(update_bits, wc, pm, hm) for pm, hm in zip(p, h)))
+    return float(np.max(per_client_uplink_time(update_bits, wc, p, h)))
 
 
 # ---------------------------------------------------------------------------
@@ -79,6 +98,26 @@ def round_comm_time(
 def round_time(T_cm: float, T_cp: float, V: int) -> float:
     """Eq. 8: T = T_cm + V * T_cp."""
     return T_cm + V * T_cp
+
+
+def masked_round_times(
+    t_cp: Sequence[float], t_cm: Sequence[float], mask: Sequence[bool],
+) -> tuple[float, float]:
+    """(T_cm, T_cp) as the straggler max over *participating* clients.
+
+    Eq. 5/7 semantics restricted to the round's realized population: absent
+    clients neither compute nor upload, so they cannot be the straggler.
+    A zero-participation round falls back to the full-population max — the
+    server's synchronous wait times out at the slowest possible client, so
+    the wall clock still advances even though no update arrives (the
+    in-graph twin of this rule lives in mesh_rounds._masked_clock).
+    """
+    t_cp = np.asarray(t_cp, np.float64)
+    t_cm = np.asarray(t_cm, np.float64)
+    mask = np.asarray(mask, bool)
+    if not mask.any():
+        return float(np.max(t_cm)), float(np.max(t_cp))
+    return float(np.max(t_cm[mask])), float(np.max(t_cp[mask]))
 
 
 def overall_time(H: float, T: float) -> float:

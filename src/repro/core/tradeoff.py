@@ -8,7 +8,6 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Sequence
 
-import numpy as np
 
 from repro.core import kkt
 from repro.core.convergence import communication_rounds, local_rounds

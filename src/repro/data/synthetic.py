@@ -8,7 +8,6 @@ serve the LM architectures.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
 
 import numpy as np
 

@@ -3,6 +3,7 @@ from repro.federated import (
     compression,
     mesh_rounds,
     partition,
+    scenarios,
     server,
     simulation,
 )

@@ -7,7 +7,7 @@ trade-off point moves toward 'talking' more often).
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp

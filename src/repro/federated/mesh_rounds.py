@@ -20,8 +20,7 @@ Aggregation modes:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +42,69 @@ def local_steps_fn(loss_fn: Callable, opt: Optimizer):
         return params, opt_state, jnp.mean(losses)
 
     return run
+
+
+def _get_shard_map():
+    """shard_map + its replication-check kwarg across jax versions: the
+    top-level export with check_vma (jax >= 0.8) or the experimental one
+    with check_rep (jax < 0.8, e.g. the 0.4.x CPU container)."""
+    try:
+        from jax import shard_map as sm
+        return sm, {"check_vma": False}
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
+        return sm, {"check_rep": False}
+
+
+def _participation_weights(weights, mask):
+    """FedAvg weights renormalized over the round's participating clients.
+
+    mask is a traced (C,) array (1.0 = update arrived). Dropped clients get
+    exactly-zero weight (their rows are also reset to finite pre-round
+    values before the contraction, so x * 0.0 contributes an exact +0.0
+    and a masked client can never perturb the aggregate bits). A zero-
+    participation round divides by 1 instead of 0; the caller keeps the old
+    params via `_keep_old_params`. Returns (weights', any_participant)."""
+    wm = weights.astype(jnp.float32) * mask.astype(jnp.float32)
+    s = jnp.sum(wm)
+    any_p = s > 0
+    return wm / jnp.where(any_p, s, 1.0), any_p
+
+
+def _keep_old_params(agg_p, old_params, any_p):
+    """Zero-participation guard: no update arrived -> params unchanged."""
+    return jax.tree.map(
+        lambda a, o: jnp.where(any_p, a, o.astype(a.dtype)), agg_p, old_params)
+
+
+def _select_participating_state(new_s, old_s, mask):
+    """Per-client opt-state select: dropped clients keep their pre-round
+    state (the loop backend never runs them, so momentum etc. must not
+    advance). mask broadcasts from (C,) over each leaf's trailing dims."""
+    def sel(n, o):
+        m = mask.reshape((mask.shape[0],) + (1,) * (n.ndim - 1))
+        return jnp.where(m > 0, n, o)
+
+    return jax.tree.map(sel, new_s, old_s)
+
+
+def _masked_clock(t_cp, t_cm, clock_mask, V):
+    """Eq. 8 round clock as the straggler max over *participating* clients,
+    computed in-graph from traced per-client delay inputs (seconds).
+
+    Zero participation falls back to the full-population max: the
+    synchronous server's wait times out at the slowest possible client, so
+    the wall clock advances even though no update arrives (host twin:
+    core.delay.masked_round_times)."""
+    any_p = jnp.any(clock_mask > 0)
+
+    def mmax(t):
+        t = t.astype(jnp.float32)
+        masked = jnp.max(jnp.where(clock_mask > 0, t, -jnp.inf))
+        return jnp.where(any_p, masked, jnp.max(t))
+
+    T_cm, T_cp = mmax(t_cm), mmax(t_cp)
+    return {"T_cm": T_cm, "T_cp": T_cp, "T_round": T_cm + V * T_cp}
 
 
 def _weighted_mean_bcast(stacked, weights):
@@ -115,7 +177,7 @@ def _int8_shardmap_sync(mesh, param_specs_tree, client_axes):
     all-reduce at one extra rounding step (unbiased via the stochastic
     quantizer semantics; deterministic rounding here since the round-step
     PRNG lives outside the sync)."""
-    from jax import shard_map as _shard_map  # jax >= 0.8
+    _shard_map, _sm_kw = _get_shard_map()
 
     axis = client_axes if len(client_axes) > 1 else client_axes[0]
 
@@ -142,7 +204,7 @@ def _int8_shardmap_sync(mesh, param_specs_tree, client_axes):
 
             in_specs = (spec, spec, jax.sharding.PartitionSpec())
             return _shard_map(body, mesh=mesh, in_specs=in_specs,
-                              out_specs=spec, check_vma=False)(
+                              out_specs=spec, **_sm_kw)(
                 new, old, weights)
 
         return jax.tree.map(leaf, new_p, old_p, param_specs_tree)
@@ -159,7 +221,7 @@ def _psum_shardmap_sync(mesh, param_specs_tree, client_axes):
     client-axis contraction as a FULL all-gather of the stacked fp32
     weights (measured 197 GB/leaf on llava-next-34b — EXPERIMENTS.md
     §Perf B). A pinned psum moves 2x the leaf shard instead."""
-    from jax import shard_map as _shard_map
+    _shard_map, _sm_kw = _get_shard_map()
 
     axes = tuple(client_axes)
 
@@ -177,7 +239,7 @@ def _psum_shardmap_sync(mesh, param_specs_tree, client_axes):
 
             in_specs = (spec, jax.sharding.PartitionSpec())
             return _shard_map(body, mesh=mesh, in_specs=in_specs,
-                              out_specs=spec, check_vma=False)(new, weights)
+                              out_specs=spec, **_sm_kw)(new, weights)
 
         return jax.tree.map(leaf, new_p, param_specs_tree)
 
@@ -194,8 +256,9 @@ def build_round_step(
     client_axes=None,
     impl: str = "xla",
 ):
-    """Build round_step(params_C, opt_C, batches, weights, keys=None) with
-    leaves stacked on a leading client axis C and batches (C, V, ...).
+    """Build round_step(params_C, opt_C, batches, weights, keys=None,
+    mask=None, clock_mask=None, t_cp=None, t_cm=None) with leaves stacked
+    on a leading client axis C and batches (C, V, ...).
 
     aggregation in ('allreduce_shardmap', 'int8_shardmap') needs
     (mesh, param_specs_tree, client_axes) for the explicit-collective path;
@@ -203,7 +266,23 @@ def build_round_step(
     'int8_stochastic' additionally takes keys (C, 2) — one quantizer PRNG
     key per client — and honors impl ('xla' | 'pallas') for the quantize
     kernel. metrics carries both the weighted loss and the raw per-client
-    losses so callers can match the host loop's unweighted mean."""
+    losses so callers can match the host loop's unweighted mean.
+
+    Scenario inputs (all traced (C,) arrays — per-round values change
+    without retracing, and nothing here forces a host sync):
+      mask        participation mask; weights are renormalized over the
+                  participating clients (`_participation_weights`) and
+                  dropped clients keep their pre-round opt state. With no
+                  participants at all, params pass through unchanged.
+                  mask=None is the legacy full-participation path and is
+                  bit-identical to it (mask of ones multiplies weights by
+                  exactly 1.0 and the zero-guard selects are no-ops).
+      clock_mask  clients the synchronous server waits for (defaults to
+                  mask); with t_cp/t_cm (per-client seconds, Eqs. 4/6)
+                  metrics gains the in-graph Eq. 8 round clock
+                  ('T_cm', 'T_cp', 'T_round') as the straggler max over
+                  waiting clients.
+    """
     local = local_steps_fn(loss_fn, opt)
     int8_sync = psum_sync = None
     if aggregation == "int8_shardmap":
@@ -211,8 +290,20 @@ def build_round_step(
     if aggregation == "allreduce_shardmap":
         psum_sync = _psum_shardmap_sync(mesh, param_specs_tree, client_axes)
 
-    def round_step(params_C, opt_C, batches, weights, keys=None):
+    def round_step(params_C, opt_C, batches, weights, keys=None,
+                   mask=None, clock_mask=None, t_cp=None, t_cm=None):
         new_p, new_s, losses = jax.vmap(local)(params_C, opt_C, batches)
+        any_p = None
+        if mask is not None:
+            weights, any_p = _participation_weights(weights, mask)
+            # Replace dropped clients' rows with their pre-round state (and
+            # zero their loss) BEFORE the contraction: weight-0 alone is
+            # not enough if a never-aggregated client diverged to inf/NaN
+            # (0 * inf = NaN would poison the weighted mean, which the
+            # loop backend — never running that client — cannot hit).
+            new_p = _select_participating_state(new_p, params_C, mask)
+            new_s = _select_participating_state(new_s, opt_C, mask)
+            losses = jnp.where(mask > 0, losses, 0.0)
         if aggregation == "allreduce":
             agg_p = _weighted_mean_bcast(new_p, weights)
         elif aggregation == "allreduce_shardmap":
@@ -228,9 +319,17 @@ def build_round_step(
             agg_p = int8_sync(new_p, params_C, weights)
         else:
             raise ValueError(aggregation)
+        if any_p is not None:
+            agg_p = _keep_old_params(agg_p, params_C, any_p)
         metrics = {"loss": jnp.tensordot(weights.astype(jnp.float32),
                                          losses, axes=(0, 0)),
                    "per_client_loss": losses}
+        if mask is not None:
+            metrics["n_participants"] = jnp.sum(mask.astype(jnp.float32))
+        if t_cp is not None and t_cm is not None:
+            cmask = mask if clock_mask is None else clock_mask
+            assert cmask is not None, "in-graph clock needs a clock_mask/mask"
+            metrics.update(_masked_clock(t_cp, t_cm, cmask, V))
         return agg_p, new_s, metrics
 
     return round_step

@@ -1,0 +1,266 @@
+"""Scenario engine: named edge-population scenarios for the FL simulator.
+
+The paper's talk/work trade-off is governed by *heterogeneous* device
+compute and *unreliable* wireless links (Eqs. 3-8, Fig. 2), but a single
+`draw_population` knob can't express the populations that matter: compute-
+skewed straggler cohorts, cell-edge devices with attenuated channels,
+partial participation (per-round Bernoulli dropout and link failure), and
+channels that drift over rounds. A `Scenario` bundles
+
+  1. a *population draw* — per-device (G_m, f_m, p_m, h_m) with named
+     skew knobs, feeding `core.delay` and `core.defl.make_plan`; and
+  2. a *per-round realization stream* — participation masks and realized
+     channel gains, consumed by `FLSimulation` on the host and fed to the
+     compiled batched round step as traced array inputs (fixed shapes:
+     no retrace, no host sync — see mesh_rounds.build_round_step).
+
+Registry access is by name (`scenarios.get("stragglers")`), shared by the
+simulator, the benchmarks (`benchmarks/run.py --scenario <name>`), and
+the tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
+from repro.core import defl, delay
+
+
+# ---------------------------------------------------------------------------
+# Per-round realization
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RoundRealization:
+    """What one round of the scenario actually looked like.
+
+    mask        (M,) bool — clients whose update reaches the aggregator
+                (present AND upload succeeded). Drives the FedAvg weights.
+    clock_mask  (M,) bool — clients the synchronous server waits for
+                (present, whether or not their upload then fails). Drives
+                the Eq. 8 straggler max. mask is always a subset.
+    h           (M,) float — realized channel gains this round (drift
+                applied), feeding the vectorized Eq. 6 uplink times.
+    """
+
+    mask: np.ndarray
+    clock_mask: np.ndarray
+    h: np.ndarray
+
+    @property
+    def n_participants(self) -> int:
+        return int(self.mask.sum())
+
+
+class ScenarioStream:
+    """Stateful per-round realization generator (host-side, numpy only).
+
+    Owns the dropout/link-failure draws and the AR(1) log-drift state of
+    the channel. One stream per simulation run; seeded so loop and batched
+    backends (and reruns) see identical realizations.
+    """
+
+    def __init__(self, scenario: "Scenario", pop: delay.DevicePopulation,
+                 seed: int = 0):
+        self.scenario = scenario
+        self.pop = pop
+        self._rng = np.random.default_rng(np.random.SeedSequence([seed, 0xED6E]))
+        self._log_drift = np.zeros(pop.n)
+
+    def next_round(self) -> RoundRealization:
+        s, M = self.scenario, self.pop.n
+        present = np.ones(M, bool)
+        if s.dropout > 0:
+            present = self._rng.random(M) >= s.dropout
+        uploaded = present.copy()
+        if s.link_failure > 0:
+            uploaded &= self._rng.random(M) >= s.link_failure
+        h = self.pop.h
+        if s.drift_sigma > 0:
+            self._log_drift = (s.drift_rho * self._log_drift
+                               + self._rng.normal(0.0, s.drift_sigma, M))
+            h = h * np.exp(self._log_drift)
+        return RoundRealization(mask=uploaded, clock_mask=present, h=h)
+
+
+# ---------------------------------------------------------------------------
+# Scenario definition
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A named edge-population scenario (all knobs default to 'off').
+
+    Population knobs (one draw per simulation):
+      compute_sigma        lognormal jitter on per-device G_m and f_m
+      channel_sigma        lognormal jitter on per-device channel gain h_m
+      straggler_frac       fraction of devices in the slow cohort
+      straggler_slowdown   f_m divisor for the slow cohort (>1 = slower)
+      cell_edge_frac       fraction of devices at the cell edge
+      cell_edge_attenuation  h_m multiplier for the cell-edge cohort (<1)
+
+    Per-round knobs (one realization per round):
+      dropout        P(client absent this round)         — Bernoulli
+      link_failure   P(upload lost | client present)     — Bernoulli
+      drift_sigma    AR(1) innovation std of log channel drift
+      drift_rho      AR(1) coefficient of the drift (persistence)
+    """
+
+    name: str
+    description: str
+    compute_sigma: float = 0.0
+    channel_sigma: float = 0.0
+    straggler_frac: float = 0.0
+    straggler_slowdown: float = 1.0
+    cell_edge_frac: float = 0.0
+    cell_edge_attenuation: float = 1.0
+    dropout: float = 0.0
+    link_failure: float = 0.0
+    drift_sigma: float = 0.0
+    drift_rho: float = 0.9
+
+    # -- population -------------------------------------------------------
+    def population(
+        self,
+        n_devices: int,
+        cc: Optional[ComputeConfig] = None,
+        wc: Optional[WirelessConfig] = None,
+        seed: int = 0,
+    ) -> delay.DevicePopulation:
+        """Draw the scenario's device population (Eqs. 3-4 parameters).
+
+        Cohorts (stragglers, cell-edge) are the leading ceil(frac*M)
+        devices of the draw — deterministic given the seed, so plans and
+        realizations line up across reruns."""
+        cc = cc or ComputeConfig()
+        wc = wc or WirelessConfig()
+        rng = np.random.default_rng(np.random.SeedSequence([seed, 0x5CE9]))
+        G0 = delay.cycles_per_iteration(cc)
+        f0 = delay.gpu_frequency(cc)
+        jit = lambda sig: np.exp(rng.normal(0.0, sig, n_devices))  # noqa: E731
+        G = G0 * (jit(self.compute_sigma) if self.compute_sigma else 1.0)
+        f = f0 / (jit(self.compute_sigma) if self.compute_sigma else 1.0)
+        h = wc.mean_channel_gain * (
+            jit(self.channel_sigma) if self.channel_sigma else 1.0)
+        G = np.broadcast_to(np.asarray(G, float), (n_devices,)).copy()
+        f = np.broadcast_to(np.asarray(f, float), (n_devices,)).copy()
+        h = np.broadcast_to(np.asarray(h, float), (n_devices,)).copy()
+        if self.straggler_frac > 0 and self.straggler_slowdown != 1.0:
+            k = int(np.ceil(self.straggler_frac * n_devices))
+            f[:k] /= self.straggler_slowdown
+        if self.cell_edge_frac > 0 and self.cell_edge_attenuation != 1.0:
+            k = int(np.ceil(self.cell_edge_frac * n_devices))
+            h[:k] *= self.cell_edge_attenuation
+        return delay.DevicePopulation(
+            G=G, f=f, p=np.full(n_devices, wc.tx_power_w), h=h)
+
+    # -- per-round stream -------------------------------------------------
+    def stream(self, pop: delay.DevicePopulation, seed: int = 0) -> ScenarioStream:
+        return ScenarioStream(self, pop, seed)
+
+    @property
+    def expected_participation(self) -> float:
+        """E[fraction of clients whose update arrives] per round."""
+        return (1.0 - self.dropout) * (1.0 - self.link_failure)
+
+    def replace(self, **kw) -> "Scenario":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Scenario] = {}
+
+
+def register(scenario: Scenario) -> Scenario:
+    if scenario.name in _REGISTRY:
+        raise ValueError(f"scenario {scenario.name!r} already registered")
+    _REGISTRY[scenario.name] = scenario
+    return scenario
+
+
+def get(name: Union[str, Scenario]) -> Scenario:
+    if isinstance(name, Scenario):
+        return name
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; registered: {names()}") from None
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+register(Scenario(
+    "uniform",
+    "Paper baseline: homogeneous devices, ideal links, full participation.",
+))
+register(Scenario(
+    "stragglers",
+    "Compute-skewed: 20% of devices run 4x slower (plus mild lognormal "
+    "compute jitter) — the Eq. 5 straggler max binds on the slow cohort.",
+    compute_sigma=0.2, straggler_frac=0.2, straggler_slowdown=4.0,
+))
+register(Scenario(
+    "cell_edge",
+    "Channel-skewed: 30% of devices sit at the cell edge with ~13 dB "
+    "pathloss penalty — the Eq. 7 uplink max binds on the edge cohort.",
+    channel_sigma=0.3, cell_edge_frac=0.3, cell_edge_attenuation=0.05,
+))
+register(Scenario(
+    "dropout",
+    "Partial participation: per-round Bernoulli absence (30%) and upload "
+    "loss (5%) over a mildly heterogeneous population.",
+    compute_sigma=0.2, channel_sigma=0.2, dropout=0.3, link_failure=0.05,
+))
+register(Scenario(
+    "drifting",
+    "Drifting channel: per-round AR(1) log-drift of every uplink gain "
+    "(rho=0.9, sigma=0.2) — T_cm varies round to round.",
+    channel_sigma=0.3, drift_sigma=0.2, drift_rho=0.9,
+))
+register(Scenario(
+    "hetero_storm",
+    "Everything at once: straggler cohort, cell-edge cohort, dropout, "
+    "link failure and channel drift — the stress population.",
+    compute_sigma=0.3, channel_sigma=0.3,
+    straggler_frac=0.2, straggler_slowdown=3.0,
+    cell_edge_frac=0.2, cell_edge_attenuation=0.1,
+    dropout=0.2, link_failure=0.05, drift_sigma=0.15, drift_rho=0.9,
+))
+
+
+# ---------------------------------------------------------------------------
+# DEFL re-planning against the realized population
+# ---------------------------------------------------------------------------
+
+
+def plan_for_scenario(
+    fed: FedConfig,
+    scenario: Union[str, Scenario],
+    update_bits: float,
+    cc: Optional[ComputeConfig] = None,
+    wc: Optional[WirelessConfig] = None,
+    seed: int = 0,
+    method: str = "closed_form",
+) -> defl.DEFLPlan:
+    """Solve Alg. 1 against the scenario's realized population.
+
+    The straggler maxes (Eqs. 5/7) are taken over the drawn population —
+    a straggler or cell-edge cohort shifts (b*, theta*) — and expected
+    partial participation shrinks the effective M in the Eq. 12 round-
+    count model (fewer updates per round average into the global model)."""
+    scenario = get(scenario)
+    pop = scenario.population(fed.n_devices, cc, wc, seed)
+    return defl.make_plan(fed, pop, update_bits, wireless=wc, method=method,
+                          participation=scenario.expected_participation)

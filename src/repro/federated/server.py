@@ -3,7 +3,6 @@ from __future__ import annotations
 
 from typing import Any, List, Sequence
 
-import jax
 import numpy as np
 
 from repro.optim.api import apply_updates

@@ -3,7 +3,13 @@
 Runs real training (JAX) while advancing a *simulated* wall clock from the
 paper's delay models (Eqs. 5, 7, 8) — exactly how the paper reports
 "overall time" for DEFL vs FedAvg vs Rand (Fig. 2). Heterogeneous device
-populations, non-IID partitions and update compression are supported.
+populations, non-IID partitions and update compression are supported, and
+a named `scenario` (federated/scenarios.py) layers per-round partial
+participation (Bernoulli dropout / link failure) and channel drift on top:
+the round clock becomes the straggler max over *participating* clients,
+dropped clients are masked out of the FedAvg, and on the batched backend
+all of it rides the one compiled round step as traced inputs (one trace
+per run, no extra host syncs — see FLSimulation.trace_count).
 
 Two execution backends share the same math:
 
@@ -23,8 +29,7 @@ Two execution backends share the same math:
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -33,7 +38,7 @@ import numpy as np
 
 from repro.configs.base import FedConfig, WirelessConfig
 from repro.core import delay
-from repro.federated import compression, mesh_rounds
+from repro.federated import compression, mesh_rounds, scenarios
 from repro.federated.client import (
     client_round,
     make_local_update,
@@ -54,6 +59,9 @@ class RoundRecord:
     train_loss: float  # may hold a device scalar until the next host sync
     test_acc: Optional[float] = None
     test_loss: Optional[float] = None
+    # Scenario rounds: how many client updates reached the aggregator
+    # (None on the no-scenario path — implicitly all M).
+    n_participants: Optional[int] = None
 
 
 @dataclass
@@ -95,6 +103,7 @@ class FLSimulation:
         label: str = "defl",
         backend: str = "batched",
         impl: str = "xla",  # quantize kernel: 'xla' | 'pallas'
+        scenario: Optional[Any] = None,  # scenarios.Scenario | name | None
     ):
         assert len(client_iterators) == fed.n_devices == pop.n
         assert backend in ("batched", "loop"), backend
@@ -109,6 +118,17 @@ class FLSimulation:
         self.label = label
         self.backend = backend
         self.impl = impl
+        self.scenario = scenarios.get(scenario) if scenario is not None else None
+        # One realization stream per sim, seeded from the FedConfig: both
+        # backends (and reruns at the same seed) see identical per-round
+        # masks and channel draws.
+        self._stream = (self.scenario.stream(pop, fed.seed)
+                        if self.scenario is not None else None)
+        # Static per-client compute times (Eq. 4); uplink times depend on
+        # the realized per-round channel and are computed per round.
+        self._t_cp_clients = delay.per_client_compute_time(
+            fed.batch_size, pop.G, pop.f)
+        self._bits_cache: Optional[float] = None
         self._key = jax.random.PRNGKey(fed.seed)
         if backend == "loop":
             self._params = init_params
@@ -120,7 +140,11 @@ class FLSimulation:
                 jax.tree.map(jnp.asarray, init_params), M)
             self._opt_C = jax.vmap(lambda _: opt.init(init_params))(jnp.arange(M))
             w = jnp.asarray(np.asarray(data_sizes), jnp.float32)
+            # Legacy path: host-normalized FedAvg weights. The scenario path
+            # instead ships the raw sizes and renormalizes in-graph over the
+            # round's participation mask (mesh_rounds._participation_weights).
             self._weights = w / jnp.sum(w)
+            self._sizes_f32 = w
             self._round_fn = self._build_batched_round()
 
     # -- state views --------------------------------------------------------
@@ -139,14 +163,19 @@ class FLSimulation:
 
     # -- delay accounting ---------------------------------------------------
     def _update_bits(self) -> float:
-        if self.fed.update_bytes is not None:
-            return self.fed.update_bytes * 8.0
-        if self.fed.compress_updates:
-            # Exact wire accounting for the int8 quantizer: 8-bit payload
-            # plus one fp32 scale per 1024-chunk (compression.compressed_bits),
-            # not the old bits/4 approximation.
-            return float(compression.compressed_bits(self.params))
-        return float(tree_bytes(self.params) * 8.0)
+        # Memoized: depends only on the (static) param structure, and the
+        # scenario path needs it every round for the realized uplink times.
+        if self._bits_cache is None:
+            if self.fed.update_bytes is not None:
+                self._bits_cache = self.fed.update_bytes * 8.0
+            elif self.fed.compress_updates:
+                # Exact wire accounting for the int8 quantizer: 8-bit payload
+                # plus one fp32 scale per 1024-chunk
+                # (compression.compressed_bits), not the bits/4 approximation.
+                self._bits_cache = float(compression.compressed_bits(self.params))
+            else:
+                self._bits_cache = float(tree_bytes(self.params) * 8.0)
+        return self._bits_cache
 
     def round_times(self) -> tuple:
         T_cm = delay.round_comm_time(
@@ -163,39 +192,93 @@ class FLSimulation:
         agg = "int8_stochastic" if compress else "allreduce"
         step = mesh_rounds.build_round_step(
             self.loss_fn, self.opt, V, aggregation=agg, impl=self.impl)
-        weights = self._weights
 
-        def round_fn(params_C, opt_C, key, batches):
-            keys_C = None
-            if compress:
-                key, keys_C = compression.sequential_client_keys(key, M)
-            new_p, new_s, metrics = step(
-                params_C, opt_C, batches, weights, keys=keys_C)
-            # Unweighted client mean, matching the loop backend's metric.
-            return new_p, new_s, key, jnp.mean(metrics["per_client_loss"])
+        if self.scenario is None:
+            weights = self._weights
+
+            def round_fn(params_C, opt_C, key, batches):
+                keys_C = None
+                if compress:
+                    key, keys_C = compression.sequential_client_keys(key, M)
+                new_p, new_s, metrics = step(
+                    params_C, opt_C, batches, weights, keys=keys_C)
+                # Unweighted client mean, matching the loop backend's metric.
+                return new_p, new_s, key, jnp.mean(metrics["per_client_loss"])
+        else:
+            sizes = self._sizes_f32
+
+            def round_fn(params_C, opt_C, key, batches,
+                         mask, clock_mask, t_cp, t_cm):
+                keys_C = None
+                if compress:
+                    key, keys_C = compression.sequential_client_keys(key, M)
+                new_p, new_s, metrics = step(
+                    params_C, opt_C, batches, sizes, keys=keys_C,
+                    mask=mask, clock_mask=clock_mask, t_cp=t_cp, t_cm=t_cm)
+                # Mean over *participating* clients (the loop backend never
+                # runs dropped clients); NaN on a zero-participation round.
+                n = jnp.sum(mask)
+                loss = (jnp.sum(metrics["per_client_loss"] * mask)
+                        / jnp.where(n > 0, n, 1.0))
+                loss = jnp.where(n > 0, loss, jnp.nan)
+                return new_p, new_s, key, loss
 
         # Donating the stacked params/opt/key buffers lets XLA write round
         # N+1's state into round N's memory: peak HBM stays ~1x the stacked
-        # state regardless of round count.
+        # state regardless of round count. The per-round scenario inputs
+        # (mask/clock_mask/t_cp/t_cm) are plain traced arrays of fixed
+        # shape: new values every round, ONE trace for the whole run.
         return jax.jit(round_fn, donate_argnums=(0, 1, 2))
 
-    def _run_round_batched(self) -> Dict:
+    @property
+    def trace_count(self) -> int:
+        """Number of round-step traces so far (batched backend). Scenario
+        masking must stay at 1 across a run — per-round masks and delay
+        inputs are traced values, never new shapes/constants."""
+        if self.backend != "batched":
+            return 0
+        return int(self._round_fn._cache_size())
+
+    def _run_round_batched(self, real=None, t_cm_clients=None) -> Dict:
         batches = stack_client_batches(self.iterators, self.fed.local_rounds)
+        if self.scenario is None:
+            self._params_C, self._opt_C, self._key, loss = self._round_fn(
+                self._params_C, self._opt_C, self._key, batches)
+            return {"train_loss": loss}  # device scalar; synced lazily
+        if t_cm_clients is None:  # direct run_round() callers; run() shares its vector
+            t_cm_clients = delay.per_client_uplink_time(
+                self._update_bits(), self.wireless, self.pop.p, real.h)
+        mask = jnp.asarray(real.mask, jnp.float32)
+        clock_mask = jnp.asarray(real.clock_mask, jnp.float32)
+        t_cp = jnp.asarray(self._t_cp_clients, jnp.float32)
+        t_cm = jnp.asarray(t_cm_clients, jnp.float32)
         self._params_C, self._opt_C, self._key, loss = self._round_fn(
-            self._params_C, self._opt_C, self._key, batches)
-        return {"train_loss": loss}  # device scalar; synced lazily
+            self._params_C, self._opt_C, self._key, batches,
+            mask, clock_mask, t_cp, t_cm)
+        return {"train_loss": loss, "n_participants": real.n_participants}
 
     # -- loop backend (reference) -------------------------------------------
-    def _run_round_loop(self) -> Dict:
+    def _run_round_loop(self, real=None) -> Dict:
         V = self.fed.local_rounds
-        deltas, losses = [], []
+        M = len(self.iterators)
+        deltas, sizes, losses = [], [], []
         keys_C = None
         if self.fed.compress_updates:
+            # Keys are drawn for all M clients regardless of participation
+            # (the batched backend must: vmap is shape-static), so the two
+            # backends' PRNG streams stay aligned under any mask.
             self._key, keys_C = compression.sequential_client_keys(
-                self._key, len(self.iterators))
+                self._key, M)
+        mask = np.ones(M, bool) if real is None else np.asarray(real.mask, bool)
         for m, it in enumerate(self.iterators):
-            batches = stack_batches([
-                jax.tree.map(jnp.asarray, it.next_batch()) for _ in range(V)])
+            # Data is drawn for every client every round — participating or
+            # not — matching stack_client_batches on the batched backend so
+            # both consume identical iterator streams.
+            raw = [it.next_batch() for _ in range(V)]
+            if not mask[m]:
+                continue
+            batches = stack_batches(
+                [jax.tree.map(jnp.asarray, b) for b in raw])
             delta, self.opt_states[m], loss_v = client_round(
                 self.local_update, self._params, self.opt_states[m], batches)
             if self.fed.compress_updates:
@@ -203,15 +286,26 @@ class FLSimulation:
                     compression.compress_update(delta, keys_C[m], impl=self.impl),
                     impl=self.impl)
             deltas.append(delta)
+            sizes.append(self.data_sizes[m])
             losses.append(float(jnp.mean(loss_v)))
-        self._params = aggregate_updates(self._params, deltas, self.data_sizes)
-        return {"train_loss": float(np.mean(losses))}
+        if deltas:  # zero-participation round: params unchanged
+            self._params = aggregate_updates(self._params, deltas, sizes)
+        out = {"train_loss": float(np.mean(losses)) if losses else float("nan")}
+        if real is not None:
+            out["n_participants"] = int(mask.sum())
+        return out
 
     # -- training -----------------------------------------------------------
-    def run_round(self) -> Dict:
+    def run_round(self, real=None, t_cm_clients=None) -> Dict:
+        """One communication round. `real` is the scenario's per-round
+        realization (drawn from the stream when omitted on a scenario sim;
+        ignored semantics-free on a plain sim). `t_cm_clients` lets run()
+        share its per-client uplink-time vector instead of recomputing."""
+        if self.scenario is not None and real is None:
+            real = self._stream.next_round()
         if self.backend == "batched":
-            return self._run_round_batched()
-        return self._run_round_loop()
+            return self._run_round_batched(real, t_cm_clients)
+        return self._run_round_loop(real)
 
     @staticmethod
     def _sync_history(history: List[RoundRecord]) -> None:
@@ -231,12 +325,25 @@ class FLSimulation:
         sim_time = 0.0
         T_cm, T_cp = self.round_times()
         V = self.fed.local_rounds
+        update_bits = self._update_bits()
         for r in range(1, max_rounds + 1):
-            metrics = self.run_round()
+            real = None
+            t_cm_clients = None
+            if self.scenario is not None:
+                # Realize the round (host-side numpy: mask + channel), take
+                # the Eq. 8 clock as the straggler max over participating
+                # clients, and feed the same realization to the round step.
+                real = self._stream.next_round()
+                t_cm_clients = delay.per_client_uplink_time(
+                    update_bits, self.wireless, self.pop.p, real.h)
+                T_cm, T_cp = delay.masked_round_times(
+                    self._t_cp_clients, t_cm_clients, real.clock_mask)
+            metrics = self.run_round(real, t_cm_clients)
             sim_time += delay.round_time(T_cm, T_cp, V)
             rec = RoundRecord(
                 round=r, sim_time=sim_time, T_cm=T_cm, T_cp=T_cp,
-                train_loss=metrics["train_loss"])
+                train_loss=metrics["train_loss"],
+                n_participants=metrics.get("n_participants"))
             history.append(rec)
             at_boundary = r % eval_every == 0 or r == max_rounds
             if self.eval_fn and at_boundary:

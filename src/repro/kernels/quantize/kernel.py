@@ -8,7 +8,6 @@ caller's PRNG and identical between interpret and compiled modes).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

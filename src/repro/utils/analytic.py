@@ -14,7 +14,6 @@ from __future__ import annotations
 
 from typing import Dict
 
-import numpy as np
 
 from repro.configs.base import InputShape, MeshConfig, ModelConfig
 from repro.models.moe import moe_capacity

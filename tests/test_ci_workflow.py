@@ -1,0 +1,81 @@
+"""CI plumbing: the workflow file is valid and wired to scripts/tier1.sh,
+and tier1.sh propagates pytest's exit code / forwards extra args (the
+'act-style dry check' of the CI pipeline, minus the network)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+WORKFLOW = os.path.join(REPO, ".github", "workflows", "ci.yml")
+TIER1 = os.path.join(REPO, "scripts", "tier1.sh")
+
+
+def _load_workflow():
+    yaml = pytest.importorskip("yaml")
+    with open(WORKFLOW) as f:
+        return yaml.safe_load(f)
+
+
+def test_workflow_parses_and_has_jobs():
+    wf = _load_workflow()
+    assert wf["name"] == "ci"
+    jobs = wf["jobs"]
+    for job in ("lint", "tier1", "bench-smoke", "slow"):
+        assert job in jobs, f"missing job {job}"
+        assert "runs-on" in jobs[job]
+        steps = jobs[job]["steps"]
+        assert any("checkout" in str(s.get("uses", "")) for s in steps)
+
+
+def test_workflow_triggers():
+    wf = _load_workflow()
+    # pyyaml parses the `on:` key as boolean True (YAML 1.1).
+    on = wf.get("on", wf.get(True))
+    assert "pull_request" in on
+    assert "workflow_dispatch" in on
+    assert "schedule" in on and on["schedule"][0]["cron"]
+
+
+def test_workflow_jobs_share_tier1_entrypoint():
+    wf = _load_workflow()
+    jobs = wf["jobs"]
+
+    def runs(job):
+        return " && ".join(s.get("run", "") for s in jobs[job]["steps"])
+
+    assert "scripts/tier1.sh" in runs("tier1")
+    # Nightly/dispatch job includes the slow markers via the same script.
+    assert 'tier1.sh -m ""' in runs("slow")
+    sched = jobs["slow"]["if"]
+    assert "schedule" in sched and "workflow_dispatch" in sched
+    # Default jobs must NOT run on the nightly schedule.
+    for job in ("lint", "tier1", "bench-smoke"):
+        assert "schedule" in jobs[job]["if"]
+    # Bench smoke guards the batched-vs-loop speedup and keeps an artifact.
+    smoke = runs("bench-smoke")
+    assert "bench_round_step.py" in smoke and "--check" in smoke
+    assert any("upload-artifact" in str(s.get("uses", ""))
+               for s in jobs["bench-smoke"]["steps"])
+
+
+def _tier1(*args):
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    return subprocess.run(["bash", TIER1, *args], env=env,
+                          capture_output=True, text=True, timeout=600)
+
+
+def test_tier1_propagates_failure_exit_code():
+    """With a -k filter that matches nothing, collect-only exits 5 (pytest
+    'no tests collected') — tier1.sh must forward a nonzero code, not
+    swallow it. Also proves extra args reach pytest."""
+    out = _tier1("--collect-only", "-k", "zz_no_such_test_zz", "-q")
+    assert out.returncode != 0, out.stdout + out.stderr
+
+
+def test_tier1_zero_exit_on_success():
+    """Collect-only over one fast file: arg passthrough narrows the run and
+    a successful pytest yields exit 0 through the script."""
+    out = _tier1("--collect-only", "-q", "tests/test_kkt.py")
+    assert out.returncode == 0, out.stdout + out.stderr

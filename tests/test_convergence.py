@@ -1,6 +1,5 @@
 """Convergence-model tests (Theorem 1 / Corollaries 1-2 / Remark 3)."""
 import numpy as np
-import pytest
 
 from repro.core import convergence as cv
 

@@ -1,22 +1,13 @@
 """Federated substrate tests: aggregation, local updates, partitioning,
 compression, mesh round-step equivalence."""
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
-from repro.core import delay
-from repro.data import BatchIterator, make_mnist_like
+from repro.data import make_mnist_like
 from repro.federated import compression
-from repro.federated.client import client_round, make_local_update, stack_batches
-from repro.federated.mesh_rounds import (
-    build_round_step,
-    local_steps_fn,
-    replicate_clients,
-)
+from repro.federated.client import client_round, make_local_update
+from repro.federated.mesh_rounds import build_round_step, replicate_clients
 from repro.federated.partition import (
     partition_dirichlet,
     partition_iid,
@@ -24,7 +15,6 @@ from repro.federated.partition import (
 )
 from repro.federated.server import aggregate_updates
 from repro.optim import sgd
-from repro.utils.tree import tree_allclose
 
 
 def _quadratic_loss(params, batch):

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
-from repro.core import defl, delay, kkt
+from repro.core import defl, delay
 from repro.data import BatchIterator, make_mnist_like
 from repro.federated.partition import partition_dirichlet, partition_sizes
 from repro.federated.simulation import FLSimulation

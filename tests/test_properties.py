@@ -6,9 +6,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import WirelessConfig
 from repro.core import delay, kkt
-from repro.core.convergence import communication_rounds, local_rounds
-from repro.data.synthetic import make_mnist_like
-from repro.federated.partition import partition_dirichlet, partition_iid
+from repro.core.convergence import communication_rounds
+from repro.federated.partition import partition_iid
 from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
 from repro.kernels.selective_scan.ref import (
     selective_scan_ref,

@@ -1,0 +1,260 @@
+"""Scenario engine: registry, masked aggregation parity between backends,
+straggler-max round clock, and the zero-participation edge case."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
+from repro.core import delay
+from repro.federated import scenarios
+from repro.federated.mesh_rounds import build_round_step, replicate_clients
+from repro.federated.simulation import FLSimulation
+from repro.optim import sgd
+
+
+def _quad_loss(params, batch):
+    diff = params["w"] - batch["target"]
+    return 0.5 * jnp.sum(diff * diff), {}
+
+
+class _TargetIterator:
+    def __init__(self, target, batch_size):
+        self.target = np.asarray(target, np.float32)
+        self.batch_size = batch_size
+
+    def next_batch(self):
+        return {"target": np.tile(self.target, (self.batch_size, 1))}
+
+
+def _quad_sim(backend, scenario, compress=True, momentum=0.9, seed=0):
+    M, d, b = 4, 16, 2
+    fed = FedConfig(n_devices=M, batch_size=b, lr=0.05, seed=seed,
+                    compress_updates=compress)
+    scen = scenarios.get(scenario) if scenario is not None else None
+    pop = (scen.population(M, seed=seed) if scen is not None else
+           delay.draw_population(M, ComputeConfig(), WirelessConfig(), 0, 0.0))
+    iters = [_TargetIterator(np.linspace(0.0, m, d) * 0.1, b)
+             for m in range(M)]
+    return FLSimulation(
+        _quad_loss, {"w": jnp.zeros(d)}, iters,
+        np.array([10, 20, 30, 40]), fed, sgd(fed.lr, momentum), pop,
+        backend=backend, scenario=scen)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_names_and_lookup():
+    names = scenarios.names()
+    for required in ("uniform", "stragglers", "cell_edge", "dropout",
+                     "drifting", "hetero_storm"):
+        assert required in names
+    s = scenarios.get("stragglers")
+    assert scenarios.get(s) is s  # idempotent on Scenario instances
+    with pytest.raises(KeyError):
+        scenarios.get("no_such_scenario")
+    with pytest.raises(ValueError):
+        scenarios.register(scenarios.Scenario("uniform", "dup"))
+
+
+def test_population_shapes_and_skew():
+    M = 20
+    pop = scenarios.get("stragglers").population(M, seed=0)
+    assert pop.n == M and all(
+        arr.shape == (M,) for arr in (pop.G, pop.f, pop.p, pop.h))
+    # The straggler cohort (leading 20%) is materially slower than the rest.
+    assert np.median(pop.f[:4]) < 0.5 * np.median(pop.f[4:])
+    edge = scenarios.get("cell_edge").population(M, seed=0)
+    assert np.median(edge.h[:6]) < 0.2 * np.median(edge.h[6:])
+    uni = scenarios.get("uniform").population(M, seed=0)
+    assert np.ptp(uni.f) == 0 and np.ptp(uni.h) == 0  # homogeneous
+
+
+def test_stream_dropout_and_drift():
+    scen = scenarios.get("hetero_storm")
+    pop = scen.population(10, seed=1)
+    stream = scen.stream(pop, seed=1)
+    reals = [stream.next_round() for _ in range(40)]
+    masks = np.stack([r.mask for r in reals])
+    clocks = np.stack([r.clock_mask for r in reals])
+    # mask (upload arrived) is always a subset of clock_mask (present).
+    assert not np.any(masks & ~clocks)
+    frac = masks.mean()
+    assert abs(frac - scen.expected_participation) < 0.15
+    # The drifting channel actually varies over rounds.
+    hs = np.stack([r.h for r in reals])
+    assert np.ptp(hs, axis=0).min() > 0
+    # Same seed -> identical realizations (backend parity relies on this).
+    stream2 = scen.stream(pop, seed=1)
+    r2 = [stream2.next_round() for _ in range(40)]
+    assert np.array_equal(masks, np.stack([r.mask for r in r2]))
+
+
+def test_plan_for_scenario_replans():
+    fed = FedConfig(n_devices=10, epsilon=0.01, nu=2.0, c=4.0)
+    bits = 1e6
+    base = scenarios.plan_for_scenario(fed, "uniform", bits)
+    slow = scenarios.plan_for_scenario(fed, "stragglers", bits)
+    edge = scenarios.plan_for_scenario(fed, "cell_edge", bits)
+    # Straggler cohort inflates the compute slope; cell edge inflates T_cm.
+    assert slow.T_cp > base.T_cp
+    assert edge.T_cm > base.T_cm
+    assert slow.overall_pred > base.overall_pred
+    # Partial participation shrinks effective M in the round-count model.
+    drop = scenarios.plan_for_scenario(fed, "dropout", bits)
+    assert drop.problem.M < base.problem.M
+
+
+# ---------------------------------------------------------------------------
+# Masked round step: backend parity
+# ---------------------------------------------------------------------------
+
+
+def _run_pair(scenario, rounds=6, **kw):
+    out = {}
+    for backend in ("loop", "batched"):
+        res = _quad_sim(backend, scenario, **kw).run(max_rounds=rounds)
+        out[backend] = res
+    return out
+
+
+@pytest.mark.parametrize("scenario", ["dropout", "hetero_storm"])
+def test_mask_parity_loop_vs_batched(scenario):
+    """Masked batched round == loop backend skipping dropped clients, under
+    the fixed seed's identical realization stream (params, losses, clock,
+    and participant counts)."""
+    out = _run_pair(scenario)
+    rl, rb = out["loop"], out["batched"]
+    for a, b in zip(jax.tree.leaves(rl.params), jax.tree.leaves(rb.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    np.testing.assert_allclose([r.train_loss for r in rl.history],
+                               [r.train_loss for r in rb.history], atol=1e-5)
+    np.testing.assert_allclose([r.sim_time for r in rl.history],
+                               [r.sim_time for r in rb.history], rtol=1e-9)
+    assert ([r.n_participants for r in rl.history]
+            == [r.n_participants for r in rb.history])
+    assert any(r.n_participants < 4 for r in rb.history)  # masking happened
+
+
+def test_full_mask_bit_compatible_with_legacy_batched():
+    """backend='batched' under the uniform scenario (full participation
+    mask through the new masked path) is bit-identical to the legacy
+    no-scenario batched path at the same seed."""
+    ra = _quad_sim("batched", None).run(max_rounds=5)
+    rb = _quad_sim("batched", "uniform").run(max_rounds=5)
+    for a, b in zip(jax.tree.leaves(ra.params), jax.tree.leaves(rb.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert ([r.train_loss for r in ra.history]
+            == [r.train_loss for r in rb.history])
+
+
+def test_scenario_run_single_trace():
+    """Per-round masks / channel drift are traced values: one compile for
+    the whole run (the donation/deferred-sync perf story is intact)."""
+    sim = _quad_sim("batched", "hetero_storm")
+    sim.run(max_rounds=8)
+    assert sim.trace_count == 1
+
+
+def test_mesh_round_step_mask_drops_client():
+    """A masked-out client influences neither the aggregate nor its own
+    opt state, and weights renormalize over the participants."""
+    C, d, V = 3, 4, 2
+    params = {"w": jnp.zeros(d)}
+    opt = sgd(0.1, momentum=0.9)
+    targets = [0.0, 1.0, 10.0]
+    batches = {"target": jnp.stack(
+        [jnp.tile(jnp.full(d, t)[None], (V, 1)) for t in targets])}
+    sizes = jnp.asarray([1.0, 1.0, 2.0])
+    step = build_round_step(_quad_loss, opt, V)
+    stacked = replicate_clients(params, C)
+    opt_c = jax.vmap(lambda _: opt.init(params))(jnp.arange(C))
+    mask = jnp.asarray([1.0, 1.0, 0.0])  # client 2 (target 10) dropped
+    new_p, new_s, metrics = jax.jit(step)(
+        stacked, opt_c, batches, sizes, mask=mask)
+    # Aggregate is the equal-weight mean over clients 0 and 1 only:
+    # far from 10, between 0 and 1.
+    agg = np.asarray(new_p["w"][0])
+    assert np.all(agg >= 0.0) and np.all(agg <= 1.0)
+    assert metrics["n_participants"] == 2
+    # Dropped client's momentum buffer stayed at init (zeros) while a
+    # participating client with nonzero gradient (target 1.0) advanced.
+    mom = jax.tree.leaves(new_s)
+    assert any(np.all(np.asarray(m)[2] == 0.0) for m in mom if np.ndim(m) > 0)
+    assert any(np.any(np.asarray(m)[1] != 0.0) for m in mom if np.ndim(m) > 0)
+
+
+# ---------------------------------------------------------------------------
+# Round clock (Eq. 8 over participating clients)
+# ---------------------------------------------------------------------------
+
+
+def test_masked_clock_property():
+    """Host (delay.masked_round_times) and in-graph (mesh_rounds) clocks
+    agree with the straggler max over participating clients, for random
+    populations and masks."""
+    rng = np.random.default_rng(0)
+    step = build_round_step(_quad_loss, sgd(0.1), 1)
+    for trial in range(25):
+        M = int(rng.integers(2, 9))
+        t_cp = rng.uniform(0.1, 5.0, M)
+        t_cm = rng.uniform(0.1, 5.0, M)
+        mask = rng.random(M) < 0.6
+        T_cm, T_cp = delay.masked_round_times(t_cp, t_cm, mask)
+        if mask.any():
+            assert T_cm == t_cm[mask].max() and T_cp == t_cp[mask].max()
+        else:
+            assert T_cm == t_cm.max() and T_cp == t_cp.max()
+        # in-graph twin
+        params = replicate_clients({"w": jnp.zeros(2)}, M)
+        batches = {"target": jnp.zeros((M, 1, 1, 2))}
+        _, _, metrics = jax.jit(step)(
+            params, (), batches, jnp.ones(M),
+            mask=jnp.asarray(mask, jnp.float32),
+            t_cp=jnp.asarray(t_cp, jnp.float32),
+            t_cm=jnp.asarray(t_cm, jnp.float32))
+        np.testing.assert_allclose(float(metrics["T_cm"]), T_cm, rtol=1e-6)
+        np.testing.assert_allclose(float(metrics["T_cp"]), T_cp, rtol=1e-6)
+        np.testing.assert_allclose(
+            float(metrics["T_round"]), T_cm + 1 * T_cp, rtol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["loop", "batched"])
+def test_zero_participation_round(backend):
+    """A round nobody attends: the wall clock still advances (server
+    timeout at the full-population straggler max) and params are unchanged."""
+    blackout = scenarios.get("dropout").replace(
+        name="blackout_tmp", dropout=1.0, link_failure=0.0)
+    sim = _quad_sim(backend, blackout)
+    before = jax.tree.map(np.asarray, sim.params)
+    res = sim.run(max_rounds=3)
+    assert all(r.n_participants == 0 for r in res.history)
+    times = [r.sim_time for r in res.history]
+    assert times[0] > 0 and all(b > a for a, b in zip(times, times[1:]))
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(res.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert all(np.isnan(r.train_loss) for r in res.history)
+
+
+def test_simulation_clock_matches_manual_accounting():
+    """RoundRecord sim_time accumulates Eq. 8 with the per-round realized
+    channel and participation (independent recomputation)."""
+    scen = scenarios.get("hetero_storm")
+    sim = _quad_sim("batched", scen, seed=3)
+    res = sim.run(max_rounds=5)
+    pop = sim.pop
+    stream = scen.stream(pop, sim.fed.seed)
+    bits = sim._update_bits()
+    t_cp = delay.per_client_compute_time(sim.fed.batch_size, pop.G, pop.f)
+    expect = 0.0
+    for rec in res.history:
+        real = stream.next_round()
+        t_cm = delay.per_client_uplink_time(
+            bits, sim.wireless, pop.p, real.h)
+        T_cm, T_cp = delay.masked_round_times(t_cp, t_cm, real.clock_mask)
+        expect += delay.round_time(T_cm, T_cp, sim.fed.local_rounds)
+        np.testing.assert_allclose(rec.sim_time, expect, rtol=1e-12)
+        assert rec.n_participants == real.n_participants

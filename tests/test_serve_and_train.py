@@ -1,5 +1,4 @@
 """Runnable-driver smoke tests (examples/launch entry points)."""
-import jax.numpy as jnp
 import numpy as np
 
 from repro.launch import serve, train
