@@ -1,11 +1,16 @@
-"""Round-step throughput: backend='loop' vs backend='batched'.
+"""Round-step throughput: backend='loop' vs 'batched' vs 'scan'.
 
-The tentpole perf path: one compiled, donated, vmapped round step versus
-the per-client host loop (one dispatch + host compress/decompress
-roundtrip + device->host sync per client per round). Runs the CNN-FL
-harness with int8 update compression at M in {10, 50, 200} and writes
-``BENCH_round_step.json`` (rows ``{m, backend, rounds_per_sec, round_ms}``)
-next to the repo root so the perf trajectory is tracked across PRs.
+The tentpole perf path, across PRs: one compiled, donated, vmapped round
+step versus the per-client host loop (PR 1), and now whole round-chunks
+fused into a single `lax.scan` dispatch (backend='scan') versus the
+per-round batched driver — one host touch per `eval_every` rounds instead
+of one dispatch + one host batch-feed per round. Runs the CNN-FL harness
+with int8 update compression at M in {10, 50, 200} and writes
+``BENCH_round_step.json`` next to the repo root so the perf trajectory is
+tracked across PRs: per-round rows ``{m, backend, rounds_per_sec,
+round_ms}`` plus eval-cadence rows for both 'batched' and 'scan' carrying
+an extra ``eval_every`` key (amortized ms/round through the real run()
+driver at that cadence — the equal-work comparison the --check gate uses).
 
   PYTHONPATH=src python -m benchmarks.run --only round_step [--quick]
   PYTHONPATH=src python benchmarks/bench_round_step.py [--quick]
@@ -34,44 +39,94 @@ JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_round_step.json
 # measurement; int8 compression exercises the full uplink path.
 BENCH_FED = dict(batch_size=4, theta=0.62, lr=0.01, compress_updates=True)
 
+# Chunk lengths for the chunked rows: eval_every=1 is the no-amortization
+# floor (scan overhead vs batched), 10 the CI gate point, 50 the long-
+# sweep regime (Fig. 2 style eval cadence). Both 'batched' and 'scan' get
+# eval_every rows so the gate compares equal work through the same run()
+# driver — a single 21 ms batched round sampled between host-side gaps
+# runs at burst (turbo) clocks while a 10-round scan chunk is sustained
+# load, so per-round-vs-chunk comparisons flatter the batched backend.
+SCAN_EVALS = (1, 10, 50)
+GATE_EVAL = 10
+# Noise band for the CI gate: at M=10 the two drivers are at parity
+# (overhead is small at 10 clients), so an exact >= 1.0 check would flake
+# on shared runners; regressions show up far below 0.9.
+GATE_TOL = 0.9
 
-def _time_backend(m: int, backend: str, timed_rounds: int) -> float:
-    """Best-of-timed-rounds seconds/round after a warmup round (the warmup
-    absorbs jit compilation for the batched backend; min is robust to CPU
-    contention on shared runners)."""
+
+def _make_sim(m: int, backend: str):
     fed = FedConfig(n_devices=m, **BENCH_FED)
-    sim = make_cnn_sim("mnist", fed, f"{backend}-m{m}", seed=0,
-                       backend=backend, with_eval=False,
-                       cnn_cfg=cnn.mnist_cnn_small())
-    sim.run_round()
-    sim.block_until_ready()
-    best = float("inf")
-    for _ in range(timed_rounds):
-        t0 = time.perf_counter()
+    return make_cnn_sim("mnist", fed, f"{backend}-m{m}", seed=0,
+                        backend=backend, with_eval=False,
+                        cnn_cfg=cnn.mnist_cnn_small())
+
+
+def _bench_m(m: int, reps: int) -> dict:
+    """Best-of-reps seconds/round for every backend at one M.
+
+    All sims are built and warmed first (warmup absorbs jit compilation),
+    then the timed samples are taken *interleaved* — one sample per
+    backend per rep, round-robin — so slow drift on a contended CPU
+    (frequency scaling, co-tenants) biases every backend equally instead
+    of whichever ran last; min-of-reps then drops the contended samples.
+    'loop'/'batched' samples are one run_round() + sync (the PR 1 rows,
+    kept for trajectory continuity); ('batched'|'scan', E) samples are E
+    rounds through run(max_rounds=E, eval_every=E) — the real driver at
+    eval cadence E, so async dispatch (batched), host-side chunk prep +
+    the single per-chunk device_get (scan), and history records are all
+    in the measurement — amortized to seconds/round."""
+    sample = {}
+    for backend in ("loop", "batched"):
+        sim = _make_sim(m, backend)
         sim.run_round()
         sim.block_until_ready()
-        best = min(best, time.perf_counter() - t0)
+
+        def one(sim=sim):
+            sim.run_round()
+            sim.block_until_ready()
+            return 1
+
+        sample[backend] = one
+    scan_sims = []
+    for backend in ("batched", "scan"):
+        for ev in SCAN_EVALS:
+            sim = _make_sim(m, backend)
+            sim.run(max_rounds=ev, eval_every=ev)  # compile + warm
+            if backend == "scan":
+                scan_sims.append(sim)
+            sample[(backend, ev)] = (
+                lambda sim=sim, ev=ev: sim.run(max_rounds=ev, eval_every=ev)
+                and ev)
+    best = {k: float("inf") for k in sample}
+    for _ in range(reps):
+        for k, fn in sample.items():
+            t0 = time.perf_counter()
+            rounds = fn()
+            best[k] = min(best[k], (time.perf_counter() - t0) / rounds)
+    for sim in scan_sims:
+        assert sim.trace_count == 1, f"scan retraced {sim.trace_count}x"
     return best
 
 
 def run(quick: bool = False, smoke: bool = False, out: str = "",
-        speedups: Optional[dict] = None):
+        speedups: Optional[dict] = None, scan_speedups: Optional[dict] = None):
     """smoke=True is the CI gate: tiny config (M=10 only). `out` gets the
-    timing rows plus per-M speedup rows as a CI artifact; pass a dict as
-    `speedups` to receive the raw {m: loop/batched} ratios (main --check
-    uses this — never the rounded CSV strings). smoke/quick runs never
-    clobber the tracked full-size BENCH_round_step.json trajectory, whose
-    rows keep the documented {m, backend, rounds_per_sec, round_ms} shape."""
+    timing rows plus speedup rows as a CI artifact; pass dicts as
+    `speedups` / `scan_speedups` to receive the raw {m: loop/batched} and
+    {m: batched/scan@GATE_EVAL} ratios (main --check uses these — never
+    the rounded CSV strings). smoke/quick runs never clobber the tracked
+    full-size BENCH_round_step.json trajectory; its per-round rows keep
+    the documented {m, backend, rounds_per_sec, round_ms} shape and scan
+    rows add an `eval_every` key."""
     ms = [10] if smoke else ([10, 50] if quick else [10, 50, 200])
-    timed = {10: 5, 50: 4, 200: 3}
+    reps = {10: 5, 50: 4, 200: 3}
     rows_json = []
     speedup_json = []
     rows_csv = []
-    per_m = {}
     for m in ms:
+        best = _bench_m(m, reps[m])
         for backend in ("loop", "batched"):
-            sec = _time_backend(m, backend, timed[m])
-            per_m.setdefault(m, {})[backend] = sec
+            sec = best[backend]
             rows_json.append({
                 "m": m,
                 "backend": backend,
@@ -80,11 +135,32 @@ def run(quick: bool = False, smoke: bool = False, out: str = "",
             })
             rows_csv.append((f"round_step_m{m}_{backend}",
                              f"{sec * 1e6:.0f}", f"{1.0 / sec:.3f}"))
-        speedup = per_m[m]["loop"] / per_m[m]["batched"]
+        speedup = best["loop"] / best["batched"]
         if speedups is not None:
             speedups[m] = speedup
         speedup_json.append({"m": m, "speedup_x": speedup})
-        rows_csv.append((f"round_step_m{m}_speedup", "", f"{speedup:.2f}"))
+        rows_csv.append((f"round_step_m{m}_loop_over_batched", "",
+                         f"{speedup:.2f}"))
+        for backend in ("batched", "scan"):
+            for ev in SCAN_EVALS:
+                sec = best[(backend, ev)]
+                rows_json.append({
+                    "m": m,
+                    "backend": backend,
+                    "eval_every": ev,
+                    "rounds_per_sec": 1.0 / sec,
+                    "round_ms": sec * 1e3,
+                })
+                rows_csv.append((f"round_step_m{m}_{backend}_e{ev}",
+                                 f"{sec * 1e6:.0f}", f"{1.0 / sec:.3f}"))
+        for ev in SCAN_EVALS:
+            scan_x = best[("batched", ev)] / best[("scan", ev)]
+            speedup_json.append(
+                {"m": m, "eval_every": ev, "scan_speedup_x": scan_x})
+            rows_csv.append((f"round_step_m{m}_batched_over_scan_e{ev}", "",
+                             f"{scan_x:.2f}"))
+            if ev == GATE_EVAL and scan_speedups is not None:
+                scan_speedups[m] = scan_x
     if not (quick or smoke):
         # Only full runs update the tracked artifact: a reduced sweep must
         # not clobber the M=200 rows of the cross-PR perf trajectory.
@@ -105,14 +181,18 @@ def main(argv=None):
                     help="CI-sized run: M=10 only, no tracked-artifact write")
     ap.add_argument("--check", action="store_true",
                     help="exit 1 if the batched backend is not faster than "
-                         "the loop backend at any M (guards the PR 1 "
-                         "speedup)")
+                         "the loop backend at any M (the PR 1 speedup), or "
+                         "if the scan backend falls below the batched "
+                         f"driver at eval_every={GATE_EVAL} by more than "
+                         f"the {GATE_TOL} noise band (equal-work run() "
+                         "comparison; the chunk-fusion speedup)")
     ap.add_argument("--out", default="",
                     help="also write the rows JSON here (CI artifact)")
     args = ap.parse_args(argv)
     speedups: dict = {}
+    scan_speedups: dict = {}
     header, rows = run(quick=args.quick, smoke=args.smoke, out=args.out,
-                       speedups=speedups)
+                       speedups=speedups, scan_speedups=scan_speedups)
     print(header)
     for r in rows:
         print(",".join(map(str, r)))
@@ -122,6 +202,13 @@ def main(argv=None):
             print(f"FAIL: batched backend slower than loop: {bad}")
             raise SystemExit(1)
         print("check: batched backend faster than loop at every M")
+        bad = {m: x for m, x in scan_speedups.items() if x < GATE_TOL}
+        if bad:
+            print(f"FAIL: scan backend slower than batched at "
+                  f"eval_every={GATE_EVAL} (tol {GATE_TOL}): {bad}")
+            raise SystemExit(1)
+        print(f"check: scan backend >= batched at eval_every={GATE_EVAL} "
+              f"(tol {GATE_TOL}) at every M")
 
 
 if __name__ == "__main__":

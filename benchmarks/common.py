@@ -57,7 +57,7 @@ def make_cnn_sim(
     n_train: int = 1500,
     n_test: int = 400,
     seed: int = 0,
-    backend: str = "batched",
+    backend: str = "scan",
     impl: str = "xla",
     with_eval: bool = True,
     cnn_cfg: Optional[cnn.CNNConfig] = None,
@@ -65,8 +65,9 @@ def make_cnn_sim(
 ) -> FLSimulation:
     """The CNN-FL harness (Figs. 1-2): data, partitions, population, sim.
 
-    `backend` selects the compiled stacked-client round step ('batched',
-    the default) or the per-client reference loop ('loop'); M scales with
+    `backend` selects the chunk-fused scan driver ('scan', the default),
+    the per-round compiled round step ('batched'), or the per-client
+    reference loop ('loop'); M scales with
     fed.n_devices well past the paper's 10 — small partitions resample
     with replacement. `cnn_cfg` overrides the paper model (e.g.
     cnn.mnist_cnn_small() for overhead-dominated benching). `scenario`
@@ -121,7 +122,7 @@ def run_cnn_fl(
     eval_every: int = 3,
     target_acc: Optional[float] = None,
     seed: int = 0,
-    backend: str = "batched",
+    backend: str = "scan",
     impl: str = "xla",
     scenario=None,
 ) -> SimResult:
@@ -130,9 +131,11 @@ def run_cnn_fl(
                        scenario=scenario)
     res = sim.run(max_rounds=rounds, eval_every=eval_every,
                   target_acc=target_acc)
-    # The masked/per-scenario path must not cost recompilation: one trace
-    # per (scenario, backend) — the donation + deferred-sync story holds.
-    if backend == "batched":
+    # The masked/per-scenario/chunked path must not cost recompilation:
+    # one trace per (scenario, backend) run — for 'scan' that covers every
+    # chunk including a ragged final one — so the donation + deferred-sync
+    # story holds.
+    if backend in ("batched", "scan"):
         assert sim.trace_count == 1, (
             f"round step retraced {sim.trace_count}x for {label}")
     return res

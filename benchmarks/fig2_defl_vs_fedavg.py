@@ -7,9 +7,10 @@ Paper settings: FedAvg (b=10, V=20); Rand (b=16, V=15) for MNIST and
 scenario's realized population (straggler/cell-edge cohorts shift the
 Eq. 5/7 maxes; expected dropout shrinks the effective M in Eq. 12).
 
-Every sim runs on the compiled batched backend; run_cnn_fl asserts one
-trace per (scenario, method) — per-round participation masks and drifting
-channels ride the same compiled round step."""
+Every sim runs on the chunk-fused scan backend (whole eval_every-round
+chunks per compiled dispatch); run_cnn_fl asserts one trace per
+(scenario, method) — per-round participation masks and drifting channels
+ride the same compiled chunk as traced scan inputs."""
 from __future__ import annotations
 
 import numpy as np

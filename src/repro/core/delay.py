@@ -120,6 +120,31 @@ def masked_round_times(
     return float(np.max(t_cm[mask])), float(np.max(t_cp[mask]))
 
 
+def chunk_round_times(
+    t_cp: Sequence[float], t_cm: Sequence[float], mask: Sequence[bool],
+) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized `masked_round_times` over a leading round axis.
+
+    t_cp is (M,) (static per-client compute times) or (R, M); t_cm and
+    mask are (R, M). Returns (T_cm, T_cp), each (R,) float64 — per-round
+    straggler maxes over the participating clients, with the same
+    zero-participation fallback to the full-population max. np.max over a
+    boolean-selected subset is exact selection, so each row is
+    bit-identical to a per-round `masked_round_times` call (the scan
+    backend's clock accounting relies on this for parity with the
+    per-round backends)."""
+    mask = np.asarray(mask, bool)
+    t_cp = np.broadcast_to(np.asarray(t_cp, np.float64), mask.shape)
+    t_cm = np.broadcast_to(np.asarray(t_cm, np.float64), mask.shape)
+    any_p = mask.any(axis=1)
+
+    def mmax(t):
+        masked = np.where(mask, t, -np.inf).max(axis=1)
+        return np.where(any_p, masked, t.max(axis=1))
+
+    return mmax(t_cm), mmax(t_cp)
+
+
 def overall_time(H: float, T: float) -> float:
     """Eq. 13: 𝒯 = H * T."""
     return H * T

@@ -9,7 +9,16 @@ from repro.data.synthetic import ClassificationData
 
 
 class BatchIterator:
-    """Infinite shuffled mini-batch iterator over index-selected data."""
+    """Infinite shuffled mini-batch iterator over index-selected data.
+
+    Two consumption styles share one RNG stream: `next_batch` gathers the
+    sample arrays on the host (loop/batched backends), while
+    `next_indices` returns only the drawn *global* row indices so the
+    scan backend can keep the dataset device-resident and gather batches
+    in-graph (`device_arrays` + `batch_from`). Interleaving the two styles
+    keeps the draws aligned — `next_batch` is exactly
+    `batch_from(host arrays, next_indices())`.
+    """
 
     def __init__(
         self, data: ClassificationData, indices: np.ndarray, batch_size: int,
@@ -22,21 +31,36 @@ class BatchIterator:
         self._order = self.rng.permutation(self.indices)
         self._ptr = 0
 
-    def next_batch(self) -> Dict[str, np.ndarray]:
-        """Always returns exactly batch_size samples (fixed shapes keep one
-        jit compilation across heterogeneous clients); small partitions
-        sample with replacement."""
+    def next_indices(self) -> np.ndarray:
+        """Global row indices of the next mini-batch, always exactly
+        batch_size of them (fixed shapes keep one jit compilation across
+        heterogeneous clients); small partitions sample with replacement."""
         n = len(self._order)
         bs = self.batch_size
         if n < bs:
-            idx = self.rng.choice(self.indices, size=bs, replace=True)
-            return {"x": self.data.x[idx], "y": self.data.y[idx]}
+            return self.rng.choice(self.indices, size=bs, replace=True)
         if self._ptr + bs > n:
             self._order = self.rng.permutation(self.indices)
             self._ptr = 0
         idx = self._order[self._ptr : self._ptr + bs]
         self._ptr += bs
-        return {"x": self.data.x[idx], "y": self.data.y[idx]}
+        return idx
+
+    def device_arrays(self) -> Dict[str, np.ndarray]:
+        """The full backing arrays for in-graph gathering. All iterators
+        over the same dataset return views of the same arrays, so the
+        simulator uploads them once per run, not once per client."""
+        return {"x": self.data.x, "y": self.data.y}
+
+    @staticmethod
+    def batch_from(arrays: Dict, idx) -> Dict:
+        """Gather a batch from (possibly device-resident) backing arrays by
+        global indices. Works under jit/vmap/scan: with idx shaped
+        (..., B) the leaves come out (..., B, sample...)."""
+        return {"x": arrays["x"][idx], "y": arrays["y"][idx]}
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        return self.batch_from(self.device_arrays(), self.next_indices())
 
     def batches(self, count: int) -> Iterator[Dict[str, np.ndarray]]:
         for _ in range(count):

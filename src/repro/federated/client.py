@@ -58,3 +58,28 @@ def stack_client_batches(iterators: List, V: int) -> Dict:
         batches = [it.next_batch() for _ in range(V)]
         per_client.append(jax.tree.map(lambda *xs: np.stack(xs), *batches))
     return jax.tree.map(lambda *xs: np.stack(xs), *per_client)
+
+
+def stack_chunk_batches(iterators: List, rounds: int, V: int) -> Dict:
+    """A whole chunk of rounds -> pytree with leading (R, M, V) axes: the
+    scan backend's generic data path (one transfer per chunk). Consumes
+    each iterator round-by-round in `stack_client_batches` order, so a
+    chunked run sees the same batch stream as R per-round runs."""
+    per_round = [stack_client_batches(iterators, V) for _ in range(rounds)]
+    return jax.tree.map(lambda *xs: np.stack(xs), *per_round)
+
+
+def stack_chunk_indices(iterators: List, rounds: int, V: int) -> np.ndarray:
+    """A whole chunk of batch *indices* -> (R, M, V, B) int32: the scan
+    backend's device-resident data path. Only the indices cross the
+    host->device boundary; the samples are gathered in-graph from the
+    uploaded dataset (BatchIterator.batch_from). Same per-round iterator
+    consumption order as stack_client_batches, so the drawn batches are
+    identical to the host-gathered path's."""
+    out = np.empty(
+        (rounds, len(iterators), V, iterators[0].batch_size), np.int32)
+    for r in range(rounds):
+        for c, it in enumerate(iterators):
+            for v in range(V):
+                out[r, c, v] = it.next_indices()
+    return out

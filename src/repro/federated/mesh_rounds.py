@@ -335,6 +335,108 @@ def build_round_step(
     return round_step
 
 
+def build_round_chunk(
+    loss_fn: Callable,
+    opt: Optimizer,
+    V: int,
+    n_clients: int,
+    aggregation: str = "allreduce",
+    impl: str = "xla",
+    scenario: bool = False,
+    batch_from: Callable = None,
+    update_bits: float = None,
+):
+    """Fuse a whole chunk of rounds into one `jax.lax.scan` over the round
+    step: the host touches the device once per chunk instead of once per
+    round (one stacked input transfer in, one stacked metrics fetch out).
+
+    Returns chunk_step(params_C, opt_C, key, weights, t_cp, data, xs)
+    -> (params_C', opt_C', key', ys) where xs is the per-round scanned
+    input pytree, every leaf stacked on a leading R axis:
+
+      batches  (R, C, V, ...) pre-stacked batch pytree (generic path), OR
+      idx      (R, C, V, B) int32 global sample indices, gathered in-graph
+               from the device-resident `data` arrays via `batch_from`
+               (zero per-round batch bytes over PCIe/host memory)
+      valid    (R,) bool — padding flag for a ragged final chunk. Invalid
+               rounds run (shapes are static) but their state writes and
+               PRNG-key advance are masked out, so a chunk padded from n
+               to R rounds leaves params/opt/key exactly as n rounds would
+               — and every chunk of a run reuses ONE trace.
+      mask, clock_mask, t_cm   (R, C) scenario inputs (scenario=True),
+               with t_cp the static (C,) compute times (Eq. 4).
+
+    ys stacks per-round metrics: 'loss' (and with scenario=True
+    'n_participants', the in-graph Eq. 8 clocks 'T_cm'/'T_cp'/'T_round');
+    with update_bits set, 'uplink_bits' = participants x bits-per-update
+    (compression.compressed_bits accounting, computed in-graph in fp32 —
+    callers needing exact counts multiply on the host). The caller fetches
+    ys with a single device_get per chunk. Note FLSimulation's history
+    records rebuild clocks/bits from the f64 host twin of the same inputs
+    (delay.chunk_round_times — bit parity with the per-round backends);
+    the fp32 in-graph copies exist for device-side consumers that must
+    not touch the host (custom in-graph stopping rules, on-device logs).
+
+    aggregation='int8_stochastic' draws per-client quantizer keys inside
+    the scan body through compression.sequential_client_keys — the same
+    schedule as the per-round backends, so the stochastic-rounding noise
+    stream is bit-identical to theirs.
+    """
+    from repro.federated import compression
+
+    step = build_round_step(loss_fn, opt, V, aggregation=aggregation,
+                            impl=impl)
+    compress = aggregation == "int8_stochastic"
+
+    def chunk_step(params_C, opt_C, key, weights, t_cp, data, xs):
+        def body(carry, x):
+            params, opt_state, k = carry
+            if batch_from is not None:
+                batches = batch_from(data, x["idx"])
+            else:
+                batches = x["batches"]
+            new_key, keys_C = k, None
+            if compress:
+                new_key, keys_C = compression.sequential_client_keys(
+                    k, n_clients)
+            if scenario:
+                new_p, new_s, m = step(
+                    params, opt_state, batches, weights, keys=keys_C,
+                    mask=x["mask"], clock_mask=x["clock_mask"],
+                    t_cp=t_cp, t_cm=x["t_cm"])
+                # Mean over participating clients; NaN on a zero-
+                # participation round (same formula as the per-round
+                # backends, for bit parity).
+                n = jnp.sum(x["mask"])
+                loss = (jnp.sum(m["per_client_loss"] * x["mask"])
+                        / jnp.where(n > 0, n, 1.0))
+                loss = jnp.where(n > 0, loss, jnp.nan)
+                ys = {"loss": loss, "n_participants": n,
+                      "T_cm": m["T_cm"], "T_cp": m["T_cp"],
+                      "T_round": m["T_round"]}
+                if update_bits is not None:
+                    ys["uplink_bits"] = n * jnp.float32(update_bits)
+            else:
+                new_p, new_s, m = step(
+                    params, opt_state, batches, weights, keys=keys_C)
+                ys = {"loss": jnp.mean(m["per_client_loss"])}
+                if update_bits is not None:
+                    ys["uplink_bits"] = jnp.float32(
+                        n_clients * update_bits)
+            valid = x["valid"]
+            keep = lambda nw, old: jnp.where(valid, nw, old.astype(nw.dtype))  # noqa: E731
+            new_p = jax.tree.map(keep, new_p, params)
+            new_s = jax.tree.map(keep, new_s, opt_state)
+            new_key = jnp.where(valid, new_key, k)
+            return (new_p, new_s, new_key), ys
+
+        (params_C, opt_C, key), ys = jax.lax.scan(
+            body, (params_C, opt_C, key), xs)
+        return params_C, opt_C, key, ys
+
+    return chunk_step
+
+
 def replicate_clients(tree: Any, n_clients: int) -> Any:
     """Stack identical client copies on a new leading axis."""
     return jax.tree.map(

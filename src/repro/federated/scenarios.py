@@ -57,12 +57,37 @@ class RoundRealization:
         return int(self.mask.sum())
 
 
+@dataclass(frozen=True)
+class ChunkRealization:
+    """A chunk of R consecutive round realizations, stacked on a leading
+    round axis: mask/clock_mask (R, M) bool, h (R, M) float. This is the
+    host-side source for the scan backend's device-resident scenario
+    stream — one (R, M) transfer per chunk instead of R per-round ones.
+    """
+
+    mask: np.ndarray
+    clock_mask: np.ndarray
+    h: np.ndarray
+
+    def __len__(self) -> int:
+        return self.mask.shape[0]
+
+    @property
+    def n_participants(self) -> np.ndarray:
+        """(R,) int — updates that reached the aggregator each round."""
+        return self.mask.sum(axis=1).astype(int)
+
+    def round(self, i: int) -> RoundRealization:
+        return RoundRealization(
+            mask=self.mask[i], clock_mask=self.clock_mask[i], h=self.h[i])
+
+
 class ScenarioStream:
     """Stateful per-round realization generator (host-side, numpy only).
 
     Owns the dropout/link-failure draws and the AR(1) log-drift state of
-    the channel. One stream per simulation run; seeded so loop and batched
-    backends (and reruns) see identical realizations.
+    the channel. One stream per simulation run; seeded so all backends
+    (and reruns) see identical realizations.
     """
 
     def __init__(self, scenario: "Scenario", pop: delay.DevicePopulation,
@@ -72,7 +97,14 @@ class ScenarioStream:
         self._rng = np.random.default_rng(np.random.SeedSequence([seed, 0xED6E]))
         self._log_drift = np.zeros(pop.n)
 
-    def next_round(self) -> RoundRealization:
+    def _draw_round(self):
+        """One round's raw draws: (uploaded, present, h).
+
+        The draw order (dropout, link failure, drift — each an M-vector
+        from the shared RNG) is the stream's wire format: draw_chunk must
+        consume the generator in exactly this per-round interleaving so a
+        chunked run is bit-identical to a per-round run and the two call
+        styles can be mixed on one stream."""
         s, M = self.scenario, self.pop.n
         present = np.ones(M, bool)
         if s.dropout > 0:
@@ -85,7 +117,27 @@ class ScenarioStream:
             self._log_drift = (s.drift_rho * self._log_drift
                                + self._rng.normal(0.0, s.drift_sigma, M))
             h = h * np.exp(self._log_drift)
+        return uploaded, present, h
+
+    def next_round(self) -> RoundRealization:
+        uploaded, present, h = self._draw_round()
         return RoundRealization(mask=uploaded, clock_mask=present, h=h)
+
+    def draw_chunk(self, rounds: int) -> ChunkRealization:
+        """Materialize the next `rounds` realizations as stacked (R, M)
+        arrays (the scan backend's per-chunk scenario input).
+
+        Per round the draws are vectorized across clients; across rounds
+        the RNG is consumed in the same interleaved order as `next_round`
+        (the AR(1) drift recursion is inherently sequential), so
+        `draw_chunk(R)` equals R sequential `next_round()` calls bit for
+        bit — property-tested in tests/test_scenarios.py — and advances
+        the stream state identically."""
+        draws = [self._draw_round() for _ in range(rounds)]
+        return ChunkRealization(
+            mask=np.stack([d[0] for d in draws]),
+            clock_mask=np.stack([d[1] for d in draws]),
+            h=np.stack([d[2] for d in draws]))
 
 
 # ---------------------------------------------------------------------------

@@ -11,20 +11,33 @@ dropped clients are masked out of the FedAvg, and on the batched backend
 all of it rides the one compiled round step as traced inputs (one trace
 per run, no extra host syncs — see FLSimulation.trace_count).
 
-Two execution backends share the same math:
+Three execution backends share the same math:
 
-  backend='batched' (default): all M clients live on a stacked leading C
-      axis and one jit-compiled round step (mesh_rounds.build_round_step)
-      runs V vmapped local steps + weighted FedAvg + optional in-graph
-      int8 stochastic quantization per round. The stacked params/opt-state
-      /PRNG-key buffers are donated, so round N+1 reuses round N's memory.
-      Host syncs happen only at `eval_every` boundaries — train losses stay
-      on device in between.
+  backend='scan' (default): an entire `eval_every`-round chunk is one
+      compiled `jax.lax.scan` over the batched round step
+      (mesh_rounds.build_round_chunk). The host touches the device once
+      per chunk — scenario masks/clocks ride in as stacked (R, C) arrays
+      (ScenarioStream.draw_chunk), batches either pre-stack to
+      (R, C, V, ...) or, when the client iterators share one dataset
+      (data.BatchIterator), stay device-resident and are gathered
+      in-graph from (R, C, V, B) index arrays — and per-round metrics
+      come back as stacked scan outputs in a single device_get. Carry
+      buffers (params/opt/PRNG key) are donated across chunks; ragged
+      final chunks are padded under a `valid` flag so a whole run costs
+      exactly one trace (FLSimulation.trace_count).
+  backend='batched': all M clients live on a stacked leading C axis and
+      one jit-compiled round step (mesh_rounds.build_round_step) runs V
+      vmapped local steps + weighted FedAvg + optional in-graph int8
+      stochastic quantization per round — one dispatch and one host
+      batch-feed per round. Host syncs happen only at `eval_every`
+      boundaries — train losses stay on device in between. Kept as the
+      per-round parity reference for 'scan' (bit-identical under a fixed
+      seed — tests/test_scan_backend.py).
   backend='loop': the original per-client Python loop (one jitted
       local_update dispatch per client, host-side compress/decompress
       roundtrip, per-client host sync). Kept as the reference
-      implementation; the two backends agree to fp32 tolerance under a
-      fixed seed (bit-for-bit on the quantizer noise — see
+      implementation; backends agree to fp32 tolerance under a fixed
+      seed (bit-for-bit on the quantizer noise — see
       compression.sequential_client_keys).
 """
 from __future__ import annotations
@@ -43,6 +56,8 @@ from repro.federated.client import (
     client_round,
     make_local_update,
     stack_batches,
+    stack_chunk_batches,
+    stack_chunk_indices,
     stack_client_batches,
 )
 from repro.federated.server import aggregate_updates
@@ -62,6 +77,9 @@ class RoundRecord:
     # Scenario rounds: how many client updates reached the aggregator
     # (None on the no-scenario path — implicitly all M).
     n_participants: Optional[int] = None
+    # Total uplink bits the round actually carried (participants x bits
+    # per update, exact compression.compressed_bits accounting).
+    uplink_bits: Optional[float] = None
 
 
 @dataclass
@@ -101,12 +119,12 @@ class FLSimulation:
         wireless: Optional[WirelessConfig] = None,
         eval_fn: Optional[Callable] = None,  # (params) -> {'acc','loss'}
         label: str = "defl",
-        backend: str = "batched",
+        backend: str = "scan",
         impl: str = "xla",  # quantize kernel: 'xla' | 'pallas'
         scenario: Optional[Any] = None,  # scenarios.Scenario | name | None
     ):
         assert len(client_iterators) == fed.n_devices == pop.n
-        assert backend in ("batched", "loop"), backend
+        assert backend in ("scan", "batched", "loop"), backend
         self.loss_fn = loss_fn
         self.iterators = client_iterators
         self.data_sizes = data_sizes
@@ -128,6 +146,10 @@ class FLSimulation:
         # the realized per-round channel and are computed per round.
         self._t_cp_clients = delay.per_client_compute_time(
             fed.batch_size, pop.G, pop.f)
+        # Shape-only view of the global model: _update_bits computes wire
+        # sizes from this, so delay accounting never dispatches a device op
+        # or blocks the async queue (see the _update_bits docstring).
+        self._param_struct = jax.eval_shape(lambda p: p, init_params)
         self._bits_cache: Optional[float] = None
         self._key = jax.random.PRNGKey(fed.seed)
         if backend == "loop":
@@ -146,25 +168,49 @@ class FLSimulation:
             self._weights = w / jnp.sum(w)
             self._sizes_f32 = w
             self._round_fn = self._build_batched_round()
+        if backend == "scan":
+            # Device-resident data path: when every client iterator draws
+            # from one shared dataset and speaks the index protocol
+            # (data.BatchIterator), upload the backing arrays once and
+            # gather batches in-graph — per chunk only (R, C, V, B) int32
+            # indices cross the host->device boundary. Anything else falls
+            # back to pre-stacked (R, C, V, ...) host batches per chunk.
+            self._data_dev = self._batch_from = None
+            its = client_iterators
+            if (its
+                    and all(hasattr(it, "next_indices")
+                            and hasattr(it, "device_arrays") for it in its)
+                    and getattr(its[0], "data", None) is not None
+                    and len({id(getattr(it, "data", None))
+                             for it in its}) == 1):
+                self._data_dev = jax.tree.map(
+                    jnp.asarray, its[0].device_arrays())
+                self._batch_from = type(its[0]).batch_from
+            self._t_cp_dev = jnp.asarray(self._t_cp_clients, jnp.float32)
+            self._chunk_fn = self._build_scan_chunk()
 
     # -- state views --------------------------------------------------------
     @property
     def params(self) -> Any:
         """The global model (post-aggregation every client row is equal, so
         row 0 of the stacked state is the global model)."""
-        if self.backend == "batched":
-            return jax.tree.map(lambda x: x[0], self._params_C)
-        return self._params
+        if self.backend == "loop":
+            return self._params
+        return jax.tree.map(lambda x: x[0], self._params_C)
 
     def block_until_ready(self) -> None:
         """Drain the async dispatch queue (benchmarking / checkpoint use)."""
-        state = self._params_C if self.backend == "batched" else self._params
+        state = self._params if self.backend == "loop" else self._params_C
         jax.block_until_ready(state)
 
     # -- delay accounting ---------------------------------------------------
     def _update_bits(self) -> float:
-        # Memoized: depends only on the (static) param structure, and the
-        # scenario path needs it every round for the realized uplink times.
+        # Memoized, and computed from the shape-only _param_struct captured
+        # at init: wire accounting is a pure function of the (static) param
+        # structure, so it must never slice device buffers or enqueue work —
+        # on the scenario path it feeds every round's realized uplink times,
+        # and any device touch here would sit between dispatches and defeat
+        # the async round pipeline.
         if self._bits_cache is None:
             if self.fed.update_bytes is not None:
                 self._bits_cache = self.fed.update_bytes * 8.0
@@ -172,9 +218,10 @@ class FLSimulation:
                 # Exact wire accounting for the int8 quantizer: 8-bit payload
                 # plus one fp32 scale per 1024-chunk
                 # (compression.compressed_bits), not the bits/4 approximation.
-                self._bits_cache = float(compression.compressed_bits(self.params))
+                self._bits_cache = float(
+                    compression.compressed_bits(self._param_struct))
             else:
-                self._bits_cache = float(tree_bytes(self.params) * 8.0)
+                self._bits_cache = float(tree_bytes(self._param_struct) * 8.0)
         return self._bits_cache
 
     def round_times(self) -> tuple:
@@ -230,14 +277,141 @@ class FLSimulation:
         # shape: new values every round, ONE trace for the whole run.
         return jax.jit(round_fn, donate_argnums=(0, 1, 2))
 
+    # -- scan backend -------------------------------------------------------
+    def _build_scan_chunk(self):
+        fed = self.fed
+        agg = "int8_stochastic" if fed.compress_updates else "allreduce"
+        chunk = mesh_rounds.build_round_chunk(
+            self.loss_fn, self.opt, fed.local_rounds, fed.n_devices,
+            aggregation=agg, impl=self.impl,
+            scenario=self.scenario is not None,
+            batch_from=self._batch_from,
+            update_bits=self._update_bits())
+        # Same donation contract as the batched round step, amortized over
+        # a whole chunk: XLA reuses the carry buffers across chunks. All
+        # per-chunk inputs are traced arrays of fixed (R, ...) shape and a
+        # ragged final chunk pads to R under the valid flag, so the whole
+        # run compiles exactly once (trace_count).
+        return jax.jit(chunk, donate_argnums=(0, 1, 2))
+
+    @staticmethod
+    def _pad_rounds(a: np.ndarray, R: int) -> np.ndarray:
+        """Pad a round-stacked array to R rounds with zeros (ragged final
+        chunk; the padded tail is masked out in-graph via `valid`)."""
+        n = a.shape[0]
+        if n == R:
+            return a
+        return np.concatenate([a, np.zeros((R - n, *a.shape[1:]), a.dtype)])
+
+    def _chunk_inputs(self, R: int, n: int, update_bits: float):
+        """Host-side prep for one chunk: draw n rounds of data (+ scenario
+        realizations), pad to R, and return (xs pytree for the scan, host
+        dict with the f64 clock accounting for the history records)."""
+        V = self.fed.local_rounds
+        pad = self._pad_rounds
+        if self._data_dev is not None:
+            idx = stack_chunk_indices(self.iterators, n, V)
+            xs = {"idx": jnp.asarray(pad(idx, R))}
+        else:
+            batches = stack_chunk_batches(self.iterators, n, V)
+            xs = {"batches": jax.tree.map(
+                lambda a: jnp.asarray(pad(np.asarray(a), R)), batches)}
+        valid = np.zeros(R, bool)
+        valid[:n] = True
+        xs["valid"] = jnp.asarray(valid)
+        host = {}
+        if self.scenario is not None:
+            chunk = self._stream.draw_chunk(n)
+            t_cm = delay.per_client_uplink_time(
+                update_bits, self.wireless, self.pop.p, chunk.h)
+            # f64 host twin of the in-graph clock: bit-identical to the
+            # per-round backends' accounting (delay.chunk_round_times).
+            T_cm, T_cp = delay.chunk_round_times(
+                self._t_cp_clients, t_cm, chunk.clock_mask)
+            host = {"T_cm": T_cm, "T_cp": T_cp,
+                    "n_participants": chunk.n_participants}
+            xs["mask"] = jnp.asarray(
+                pad(chunk.mask.astype(np.float32), R))
+            xs["clock_mask"] = jnp.asarray(
+                pad(chunk.clock_mask.astype(np.float32), R))
+            xs["t_cm"] = jnp.asarray(pad(t_cm.astype(np.float32), R))
+        return xs, host
+
+    def _run_scan(self, max_rounds, target_acc, eval_every, max_sim_time,
+                  ) -> SimResult:
+        """Chunked driver: one compiled scan call + one device_get per
+        eval_every rounds. Chunk boundaries coincide exactly with the
+        per-round driver's eval boundaries (r % eval_every == 0 or the
+        final round). On a max_sim_time stop the history is truncated at
+        the first exceeding round, matching the per-round backends; the
+        device state is end-of-chunk (documented deviation — the chunk is
+        already in flight)."""
+        history: List[RoundRecord] = []
+        sim_time = 0.0
+        V = self.fed.local_rounds
+        update_bits = self._update_bits()
+        M = self.fed.n_devices
+        if self.scenario is None:
+            T_cm_const, T_cp_const = self.round_times()
+            weights = self._weights
+            t_cp_arg = None
+        else:
+            weights = self._sizes_f32
+            t_cp_arg = self._t_cp_dev
+        R = max(1, min(eval_every, max_rounds))
+        r, stop = 0, False
+        while r < max_rounds and not stop:
+            n = min(R, max_rounds - r)
+            xs, host = self._chunk_inputs(R, n, update_bits)
+            self._params_C, self._opt_C, self._key, ys = self._chunk_fn(
+                self._params_C, self._opt_C, self._key,
+                weights, t_cp_arg, self._data_dev, xs)
+            # The chunk's only device->host sync: one stacked fetch of all
+            # per-round scan outputs.
+            ys = jax.device_get(ys)
+            for i in range(n):
+                r += 1
+                if self.scenario is None:
+                    T_cm, T_cp, n_part = T_cm_const, T_cp_const, None
+                    bits = float(M * update_bits)
+                else:
+                    T_cm = float(host["T_cm"][i])
+                    T_cp = float(host["T_cp"][i])
+                    n_part = int(host["n_participants"][i])
+                    bits = float(n_part * update_bits)
+                sim_time += delay.round_time(T_cm, T_cp, V)
+                history.append(RoundRecord(
+                    round=r, sim_time=sim_time, T_cm=T_cm, T_cp=T_cp,
+                    train_loss=float(ys["loss"][i]),
+                    n_participants=n_part, uplink_bits=bits))
+                if max_sim_time and sim_time >= max_sim_time:
+                    stop = True
+                    break
+            rec = history[-1]
+            at_boundary = rec.round % eval_every == 0 or rec.round == max_rounds
+            if self.eval_fn and at_boundary:
+                ev = self.eval_fn(self.params)
+                rec.test_acc = float(ev.get("acc", np.nan))
+                rec.test_loss = float(ev.get("loss", np.nan))
+                if (target_acc and rec.test_acc is not None
+                        and rec.test_acc >= target_acc):
+                    stop = True
+        return SimResult(history=history, params=self.params,
+                         label=self.label, fed=self.fed)
+
     @property
     def trace_count(self) -> int:
-        """Number of round-step traces so far (batched backend). Scenario
-        masking must stay at 1 across a run — per-round masks and delay
-        inputs are traced values, never new shapes/constants."""
-        if self.backend != "batched":
+        """Number of compiled traces so far (batched: the round step; scan:
+        the chunk step plus any direct run_round calls). Scenario masking
+        and chunking must stay at 1 across a run — per-round masks, delay
+        inputs and the ragged-final-chunk padding are traced values, never
+        new shapes/constants."""
+        if self.backend == "loop":
             return 0
-        return int(self._round_fn._cache_size())
+        count = int(self._round_fn._cache_size())
+        if self.backend == "scan":
+            count += int(self._chunk_fn._cache_size())
+        return count
 
     def _run_round_batched(self, real=None, t_cm_clients=None) -> Dict:
         batches = stack_client_batches(self.iterators, self.fed.local_rounds)
@@ -300,12 +474,14 @@ class FLSimulation:
         """One communication round. `real` is the scenario's per-round
         realization (drawn from the stream when omitted on a scenario sim;
         ignored semantics-free on a plain sim). `t_cm_clients` lets run()
-        share its per-client uplink-time vector instead of recomputing."""
+        share its per-client uplink-time vector instead of recomputing.
+        The scan backend shares the batched backend's per-round step here
+        (same stacked state layout); chunking only applies inside run()."""
         if self.scenario is not None and real is None:
             real = self._stream.next_round()
-        if self.backend == "batched":
-            return self._run_round_batched(real, t_cm_clients)
-        return self._run_round_loop(real)
+        if self.backend == "loop":
+            return self._run_round_loop(real)
+        return self._run_round_batched(real, t_cm_clients)
 
     @staticmethod
     def _sync_history(history: List[RoundRecord]) -> None:
@@ -321,6 +497,9 @@ class FLSimulation:
         eval_every: int = 1,
         max_sim_time: Optional[float] = None,
     ) -> SimResult:
+        if self.backend == "scan":
+            return self._run_scan(max_rounds, target_acc, eval_every,
+                                  max_sim_time)
         history: List[RoundRecord] = []
         sim_time = 0.0
         T_cm, T_cp = self.round_times()
@@ -340,10 +519,14 @@ class FLSimulation:
                     self._t_cp_clients, t_cm_clients, real.clock_mask)
             metrics = self.run_round(real, t_cm_clients)
             sim_time += delay.round_time(T_cm, T_cp, V)
+            n_part = metrics.get("n_participants")
             rec = RoundRecord(
                 round=r, sim_time=sim_time, T_cm=T_cm, T_cp=T_cp,
                 train_loss=metrics["train_loss"],
-                n_participants=metrics.get("n_participants"))
+                n_participants=n_part,
+                uplink_bits=float(
+                    (self.fed.n_devices if n_part is None else n_part)
+                    * update_bits))
             history.append(rec)
             at_boundary = r % eval_every == 0 or r == max_rounds
             if self.eval_fn and at_boundary:

@@ -60,6 +60,27 @@ def test_workflow_jobs_share_tier1_entrypoint():
                for s in jobs["bench-smoke"]["steps"])
 
 
+def test_workflow_caches_jax_install_keyed_on_pin():
+    """Every wheel-installing job restores a venv via actions/cache keyed
+    on the JAX_PIN env var, installs only on a cache miss, and pins the
+    jax[cpu] wheel to JAX_PIN — so bumping the pin invalidates every job's
+    cache at once and a warm run skips the install entirely."""
+    wf = _load_workflow()
+    assert wf["env"]["JAX_PIN"]
+    for job in ("tier1", "bench-smoke", "slow"):
+        steps = wf["jobs"][job]["steps"]
+        caches = [s for s in steps if "actions/cache" in str(s.get("uses", ""))]
+        assert caches, f"{job}: no actions/cache step"
+        key = caches[0]["with"]["key"]
+        assert "env.JAX_PIN" in key, f"{job}: cache key not on the JAX pin"
+        installs = [s for s in steps
+                    if "pip install" in s.get("run", "") and "jax" in s["run"]]
+        assert installs, f"{job}: no jax install step"
+        assert "cache-hit" in str(installs[0].get("if", "")), (
+            f"{job}: install must be skipped on a cache hit")
+        assert "JAX_PIN" in installs[0]["run"], f"{job}: wheel not pinned"
+
+
 def _tier1(*args):
     env = dict(os.environ, JAX_PLATFORMS="cpu")
     return subprocess.run(["bash", TIER1, *args], env=env,

@@ -54,3 +54,19 @@ def test_population_homogeneous_vs_heterogeneous():
     # Straggler bound: heterogeneous max time >= homogeneous.
     assert delay.round_compute_time(8, het.G, het.f) >= \
         delay.round_compute_time(8, hom.G, hom.f) * 0.5
+
+
+def test_chunk_round_times_matches_per_round():
+    """Vectorized chunk clocks == per-round masked_round_times bit for bit,
+    for random populations/masks including zero-participation rounds."""
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        R, M = int(rng.integers(1, 9)), int(rng.integers(2, 7))
+        t_cp = rng.uniform(0.1, 5.0, M)
+        t_cm = rng.uniform(0.1, 5.0, (R, M))
+        mask = rng.random((R, M)) < 0.5
+        T_cm, T_cp = delay.chunk_round_times(t_cp, t_cm, mask)
+        assert T_cm.shape == (R,) and T_cp.shape == (R,)
+        for r in range(R):
+            cm, cp = delay.masked_round_times(t_cp, t_cm[r], mask[r])
+            assert T_cm[r] == cm and T_cp[r] == cp
