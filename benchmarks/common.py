@@ -1,31 +1,25 @@
 """Shared benchmark scaffolding: the paper's calibrated system settings and
-the CNN-FL harness used by Figs. 1-2."""
+the CNN-FL harness used by Figs. 1-2, now thin wrappers over the
+declarative experiment API (repro.federated.experiment.ExperimentSpec)."""
 from __future__ import annotations
 
-import functools
-import time
-from typing import Dict, Optional
+import dataclasses
+from typing import List, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.configs.base import FedConfig, WirelessConfig
+from repro.core import delay, kkt
+from repro.federated.experiment import (
+    CALIBRATED_C,
+    CALIBRATED_COMPUTE,
+    ExperimentSpec,
+)
+from repro.federated.simulation import SimResult, Simulator
 
-from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
-from repro.core import defl, delay, kkt
-from repro.data import BatchIterator, make_cifar_like, make_mnist_like
-from repro.federated import scenarios
-from repro.federated.partition import partition_dirichlet, partition_sizes
-from repro.federated.simulation import FLSimulation, SimResult
-from repro.models import cnn
-from repro.optim import sgd
-from repro.utils.tree import tree_bytes
-
-# Calibration (see EXPERIMENTS.md §Claims): per-sample compute ~10 ms at
-# b=1 on the 2 GHz edge GPU pins theta* ~= 0.13-0.15 (the paper's reported
-# operating point, independent of c), and c ~= 4.0 then pins b* ~= 32
-# (the paper's "rounded off" batch size) at eps = 0.01.
-CALIBRATED_COMPUTE = ComputeConfig(bits_per_sample=6.8e5)
-CALIBRATED_C = 4.0
+__all__ = [
+    "CALIBRATED_C", "CALIBRATED_COMPUTE", "paper_population",
+    "paper_problem", "cnn_update_bits", "make_cnn_spec", "make_cnn_sim",
+    "run_cnn_fl", "run_cnn_fleet", "emit",
+]
 
 
 def paper_population(M: int = 10, heterogeneity: float = 0.0,
@@ -45,12 +39,11 @@ def paper_problem(update_bits: float, M: int = 10, eps: float = 0.01,
 
 
 def cnn_update_bits(dataset: str = "mnist") -> float:
-    cfg = cnn.mnist_cnn() if dataset == "mnist" else cnn.cifar_cnn()
-    params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
-    return tree_bytes(params) * 8.0
+    model = "mnist_cnn" if dataset == "mnist" else "cifar_cnn"
+    return ExperimentSpec(model=model, dataset=dataset).update_bits()
 
 
-def make_cnn_sim(
+def make_cnn_spec(
     dataset: str,
     fed: FedConfig,
     label: str,
@@ -60,56 +53,32 @@ def make_cnn_sim(
     backend: str = "scan",
     impl: str = "xla",
     with_eval: bool = True,
-    cnn_cfg: Optional[cnn.CNNConfig] = None,
-    scenario=None,  # scenarios.Scenario | registered name | None
-) -> FLSimulation:
-    """The CNN-FL harness (Figs. 1-2): data, partitions, population, sim.
+    cnn_cfg=None,  # model registry name | cnn.CNNConfig | None (default per dataset)
+    scenario=None,  # registered scenario name | None
+) -> ExperimentSpec:
+    """The CNN-FL harness (Figs. 1-2) as an ExperimentSpec: data,
+    partitions, population and model wiring all live in the spec;
+    `spec.build()` returns the functional-core Simulator.
 
-    `backend` selects the chunk-fused scan driver ('scan', the default),
-    the per-round compiled round step ('batched'), or the per-client
-    reference loop ('loop'); M scales with
-    fed.n_devices well past the paper's 10 — small partitions resample
-    with replacement. `cnn_cfg` overrides the paper model (e.g.
-    cnn.mnist_cnn_small() for overhead-dominated benching). `scenario`
-    draws the device population from a registered edge scenario and runs
-    its per-round participation/channel stream through the simulator."""
-    make = make_mnist_like if dataset == "mnist" else make_cifar_like
-    data = make(n_train, seed=seed)
-    cfg = cnn_cfg or (cnn.mnist_cnn() if dataset == "mnist" else cnn.cifar_cnn())
-    params = cnn.init_cnn(cfg, jax.random.PRNGKey(seed))
-    parts = partition_dirichlet(data, fed.n_devices, alpha=1.0, seed=seed)
-    iters = [BatchIterator(data, p, fed.batch_size, seed=seed + i)
-             for i, p in enumerate(parts)]
-    if scenario is not None:
-        scenario = scenarios.get(scenario)
-        pop = scenario.population(
-            fed.n_devices, CALIBRATED_COMPUTE, WirelessConfig(), seed)
-        # One seed governs population draw, realization stream (seeded
-        # from fed.seed inside FLSimulation) and any plan_for_scenario
-        # call made with the same seed — passing seed != fed.seed would
-        # otherwise time a different population than the one planned for.
-        if fed.seed != seed:
-            import dataclasses
-            fed = dataclasses.replace(fed, seed=seed)
-    else:
-        pop = paper_population(fed.n_devices)
-    eval_fn = None
-    if with_eval:
-        test = make(n_test, seed=seed + 1)
-        xb, yb = jnp.asarray(test.x), jnp.asarray(test.y)
+    One seed governs everything: the dataset/partition/population draw,
+    and — by syncing fed.seed to `seed` — the default `init()` run state
+    (PRNG key, batch order, realization stream), so `run_cnn_fl(...,
+    seed=3)` actually runs at seed 3 and a scenario run is timed on the
+    population it was planned for (plan_for_scenario at the same seed)."""
+    if fed.seed != seed:
+        fed = dataclasses.replace(fed, seed=seed)
+    model = cnn_cfg if cnn_cfg is not None else (
+        "mnist_cnn" if dataset == "mnist" else "cifar_cnn")
+    return ExperimentSpec(
+        fed=fed, model=model, dataset=dataset, n_train=n_train,
+        n_test=n_test, seed=seed, scenario=scenario, backend=backend,
+        impl=impl, with_eval=with_eval, label=label)
 
-        @jax.jit
-        def eval_acc(p):
-            logits = cnn.cnn_forward(cfg, p, xb)
-            return jnp.mean((jnp.argmax(logits, -1) == yb).astype(jnp.float32))
 
-        eval_fn = lambda p: {"acc": float(eval_acc(p))}  # noqa: E731
-
-    return FLSimulation(
-        functools.partial(cnn.cnn_loss, cfg), params, iters,
-        partition_sizes(parts), fed, sgd(fed.lr), pop,
-        eval_fn=eval_fn, label=label, backend=backend, impl=impl,
-        scenario=scenario)
+def make_cnn_sim(*args, **kw) -> Simulator:
+    """`make_cnn_spec(...).build()` — returns the state-in/state-out
+    Simulator (call `sim.init(seed)` for a run state)."""
+    return make_cnn_spec(*args, **kw).build()
 
 
 def run_cnn_fl(
@@ -129,8 +98,8 @@ def run_cnn_fl(
     sim = make_cnn_sim(dataset, fed, label, n_train=n_train, n_test=n_test,
                        seed=seed, backend=backend, impl=impl,
                        scenario=scenario)
-    res = sim.run(max_rounds=rounds, eval_every=eval_every,
-                  target_acc=target_acc)
+    _, res = sim.run(sim.init(), max_rounds=rounds, eval_every=eval_every,
+                     target_acc=target_acc)
     # The masked/per-scenario/chunked path must not cost recompilation:
     # one trace per (scenario, backend) run — for 'scan' that covers every
     # chunk including a ragged final one — so the donation + deferred-sync
@@ -139,6 +108,28 @@ def run_cnn_fl(
         assert sim.trace_count == 1, (
             f"round step retraced {sim.trace_count}x for {label}")
     return res
+
+
+def run_cnn_fleet(
+    dataset: str,
+    fed: FedConfig,
+    label: str,
+    seeds,
+    rounds: int = 15,
+    n_train: int = 1500,
+    n_test: int = 400,
+    eval_every: int = 3,
+    seed: int = 0,
+    scenario=None,
+) -> List[SimResult]:
+    """Multi-seed fleet run (scan backend): one vmapped dispatch per chunk
+    executes every seed — the confidence-band workload (mean ± std over
+    realizations) at roughly the cost of one member's wall-clock."""
+    sim = make_cnn_sim(dataset, fed, label, n_train=n_train, n_test=n_test,
+                       seed=seed, backend="scan", scenario=scenario)
+    fleet = sim.run_fleet(seeds=seeds, max_rounds=rounds,
+                          eval_every=eval_every)
+    return fleet.results
 
 
 def emit(rows, header=None):

@@ -1,14 +1,16 @@
 """Benchmark entry point: one function per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1a,...] \
-      [--scenario <name>]
+      [--scenario <name>] [--seeds N]
 
 Emits ``name,...`` CSV blocks per benchmark. ``--scenario`` restricts the
 scenario-aware benchmarks (fig2, straggler) to one registered edge
-scenario (federated/scenarios.py); benchmarks that don't take a scenario
-run unchanged, with a note. The roofline table reads the dry-run dumps in
-experiments/dryrun (run launch/dryrun.py first for the full 40-pair
-baseline)."""
+scenario (federated/scenarios.py); ``--seeds N`` runs seed-aware
+benchmarks (fig2) as a vmapped N-seed fleet per method and reports
+mean +/- std confidence bands instead of single-run numbers. Benchmarks
+that don't take a flag run unchanged, with a note. The roofline table
+reads the dry-run dumps in experiments/dryrun (run launch/dryrun.py
+first for the full 40-pair baseline)."""
 from __future__ import annotations
 
 import argparse
@@ -52,6 +54,9 @@ def main(argv=None) -> None:
     ap.add_argument("--scenario", default="", choices=("",) + scenarios.names(),
                     help="restrict scenario-aware benchmarks to one "
                          "registered edge scenario")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="run seed-aware benchmarks as a vmapped N-seed "
+                         "fleet per configuration (mean +/- std bands)")
     args = ap.parse_args(argv)
     names = args.only.split(",") if args.only else list(BENCHES)
     for name in names:
@@ -62,6 +67,12 @@ def main(argv=None) -> None:
                 kw["scenario"] = args.scenario
             else:
                 print(f"# === {name}: not scenario-aware; running as-is ===",
+                      flush=True)
+        if args.seeds > 1:
+            if "seeds" in inspect.signature(fn).parameters:
+                kw["seeds"] = args.seeds
+            else:
+                print(f"# === {name}: not seed-aware; running as-is ===",
                       flush=True)
         t0 = time.time()
         header, rows = fn(**kw)

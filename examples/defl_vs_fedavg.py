@@ -3,10 +3,12 @@ paper's CNN task with real training + simulated delay accounting —
 reproduces Fig. 2 qualitatively, per edge scenario.
 
   PYTHONPATH=src python examples/defl_vs_fedavg.py [--quick] \
-      [--scenario stragglers]
+      [--scenario stragglers] [--seeds 8]
 
 Without --scenario the full registered table (uniform, stragglers,
-cell_edge, dropout, drifting) is swept."""
+cell_edge, dropout, drifting) is swept; --seeds N runs every method as a
+vmapped N-seed fleet (one dispatch per chunk executes all seeds) and
+reports mean +/- std confidence bands over the realizations."""
 import argparse
 import sys
 
@@ -21,8 +23,10 @@ def main():
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--scenario", default="",
                     choices=("",) + scenarios.names())
+    ap.add_argument("--seeds", type=int, default=1)
     args = ap.parse_args()
-    header, rows = run(quick=args.quick, scenario=args.scenario)
+    header, rows = run(quick=args.quick, scenario=args.scenario,
+                       seeds=args.seeds)
     print(header)
     for r in rows:
         print(",".join(map(str, r)))

@@ -1,58 +1,50 @@
-"""Quickstart: DEFL in ~60 lines.
+"""Quickstart: DEFL through the declarative experiment API.
 
-1. Build the paper's delay problem from a device population.
-2. Solve for (b*, theta*) with the closed-form KKT solution (Eq. 29).
-3. Run federated training with V = nu*log(1/theta*) local steps per round,
-   tracking the simulated wall clock.
+1. Describe the experiment as a frozen `ExperimentSpec` (model, data,
+   population, wireless — and `plan=True` to solve the paper's (b*,
+   theta*) against the realized population, Alg. 1 line 0).
+2. `spec.build()` -> a pure functional `Simulator`; `sim.init(seed)` ->
+   an immutable `SimState`; `sim.run(state, ...)` threads it through real
+   training while tracking the simulated wall clock (Eq. 8).
+3. `sim.run_fleet(seeds=...)` runs a multi-seed fleet in ONE vmapped
+   dispatch per round-chunk — the confidence-band workload.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import functools
+import sys
 
-import jax
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/src")
 
-from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
-from repro.core import defl, delay
-from repro.data import BatchIterator, make_mnist_like
-from repro.federated.partition import partition_dirichlet, partition_sizes
-from repro.federated.simulation import FLSimulation
-from repro.models import cnn
-from repro.optim import sgd
-from repro.utils.tree import tree_bytes
+from repro.configs.base import FedConfig  # noqa: E402
+from repro.federated.experiment import ExperimentSpec  # noqa: E402
 
 
 def main():
-    # --- system: 10 edge devices, 2 GHz GPUs, 20 MHz uplink --------------
-    fed = FedConfig(n_devices=10, epsilon=0.01, nu=2.0, c=0.4, lr=0.05)
-    pop = delay.draw_population(
-        fed.n_devices, ComputeConfig(bits_per_sample=6.8e5),
-        WirelessConfig(), seed=0, heterogeneity=0.2)
+    # --- the experiment, declaratively ------------------------------------
+    spec = ExperimentSpec(
+        fed=FedConfig(n_devices=10, epsilon=0.01, nu=2.0, c=0.4, lr=0.05),
+        model="mnist_cnn", dataset="mnist", n_train=1000,
+        heterogeneity=0.2, plan=True, with_eval=False, label="defl")
 
-    # --- model + data -----------------------------------------------------
-    cfg = cnn.mnist_cnn()
-    params = cnn.init_cnn(cfg, jax.random.PRNGKey(0))
-    data = make_mnist_like(1000, seed=0)
-
-    # --- DEFL plan (Algorithm 1, line 0) ----------------------------------
-    plan = defl.make_plan(fed, pop, tree_bytes(params) * 8)
-    fed = defl.plan_to_fedconfig(plan, fed)
-    fed = FedConfig(**{**fed.__dict__, "batch_size": min(fed.batch_size, 32),
-                       "update_bytes": None})
+    plan = spec.resolve_plan()
     print(f"DEFL plan: b*={plan.b} theta*={plan.theta:.3f} V={plan.V} "
           f"H_pred={plan.H_pred:.1f} T_round={plan.T_round:.3f}s "
           f"overall_pred={plan.overall_pred:.1f}s")
 
-    # --- run ---------------------------------------------------------------
-    parts = partition_dirichlet(data, fed.n_devices, alpha=1.0, seed=0)
-    iters = [BatchIterator(data, p, fed.batch_size, seed=i)
-             for i, p in enumerate(parts)]
-    sim = FLSimulation(
-        functools.partial(cnn.cnn_loss, cfg), params, iters,
-        partition_sizes(parts), fed, sgd(fed.lr), pop, label="defl")
-    res = sim.run(max_rounds=5)
+    # --- one run: state-in / state-out ------------------------------------
+    sim = spec.build()
+    state, res = sim.run(sim.init(), max_rounds=5)
     for r in res.history:
         print(f"round {r.round}: sim_time={r.sim_time:7.2f}s "
               f"loss={r.train_loss:.4f}")
+
+    # --- a 4-seed fleet: one vmapped dispatch per chunk -------------------
+    fleet = sim.run_fleet(seeds=range(4), max_rounds=5, eval_every=5)
+    s = fleet.summary()
+    print(f"fleet over 4 seeds: final loss "
+          f"{s['final_loss_mean']:.4f} +- {s['final_loss_std']:.4f}, "
+          f"overall time {s['total_time_mean']:.1f}s "
+          f"+- {s['total_time_std']:.1f}s")
 
 
 if __name__ == "__main__":

@@ -31,6 +31,21 @@ class BatchIterator:
         self._order = self.rng.permutation(self.indices)
         self._ptr = 0
 
+    # -- snapshot / restore (SimState checkpointing) ------------------------
+    def state(self) -> Dict:
+        """Value snapshot of the draw position (RNG state, current epoch
+        permutation, cursor). Restoring it via `set_state` — on this
+        iterator or a freshly constructed one over the same data/partition
+        — continues the batch stream bit-identically; the FL simulator's
+        SimState carries these snapshots for save/resume."""
+        return {"rng": self.rng.bit_generator.state,
+                "order": self._order.copy(), "ptr": self._ptr}
+
+    def set_state(self, state: Dict) -> None:
+        self.rng.bit_generator.state = state["rng"]
+        self._order = np.asarray(state["order"]).copy()
+        self._ptr = int(state["ptr"])
+
     def next_indices(self) -> np.ndarray:
         """Global row indices of the next mini-batch, always exactly
         batch_size of them (fixed shapes keep one jit compilation across

@@ -1,6 +1,7 @@
 from repro.federated import (
     client,
     compression,
+    experiment,
     mesh_rounds,
     partition,
     scenarios,

@@ -1,0 +1,262 @@
+"""Declarative experiment API: `ExperimentSpec.build() -> Simulator`.
+
+The paper's results are *comparisons* — DEFL vs FedAvg vs Rand across
+heterogeneous populations (Fig. 2), swept over epsilon/batch/theta/rounds
+(Fig. 1) — and every benchmark/example/test used to hand-wire the same
+13-argument simulator constructor to express one of them. An
+`ExperimentSpec` is the frozen value form of that wiring: model, data +
+partition, population, wireless, plan-or-fed, scenario, compression and
+backend, with `build()` materializing the `Simulator` and a small
+registry for named configurations:
+
+    spec = experiment.ExperimentSpec(
+        fed=FedConfig(n_devices=10, epsilon=0.01, c=4.0, lr=0.05),
+        model="mnist_cnn", dataset="mnist", scenario="stragglers",
+        plan=True)                      # solve (b*, theta*) before running
+    sim = spec.build()
+    state, res = sim.run(sim.init(), max_rounds=100, eval_every=10)
+    fleet = sim.run_fleet(seeds=range(8), max_rounds=100, eval_every=10)
+
+Specs are plain frozen dataclasses: `replace(...)` derives sweeps, the
+registry (`experiment.register/get/names`) shares baseline configurations
+between benchmarks, examples and tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
+from repro.core import defl, delay
+from repro.data import BatchIterator, make_cifar_like, make_mnist_like
+from repro.federated import scenarios
+from repro.federated.partition import partition_dirichlet, partition_sizes
+from repro.federated.simulation import Simulator
+from repro.models import cnn
+from repro.optim import sgd
+from repro.utils.tree import tree_bytes
+
+# Calibration (see EXPERIMENTS.md §Claims): per-sample compute ~10 ms at
+# b=1 on the 2 GHz edge GPU pins theta* ~= 0.13-0.15 (the paper's reported
+# operating point, independent of c), and c ~= 4.0 then pins b* ~= 32
+# (the paper's "rounded off" batch size) at eps = 0.01.
+CALIBRATED_COMPUTE = ComputeConfig(bits_per_sample=6.8e5)
+CALIBRATED_C = 4.0
+
+# Model registry: named CNN configurations the spec can reference (a
+# literal CNNConfig is also accepted for one-off model sweeps).
+MODELS = {
+    "mnist_cnn": cnn.mnist_cnn,
+    "mnist_cnn_small": cnn.mnist_cnn_small,
+    "mnist_cnn_tiny": cnn.mnist_cnn_tiny,
+    "cifar_cnn": cnn.cifar_cnn,
+}
+
+DATASETS = {"mnist": make_mnist_like, "cifar": make_cifar_like}
+
+
+@dataclass(frozen=True)
+class ExperimentSpec:
+    """One experiment, declaratively. All fields have paper-faithful
+    defaults; `replace()` derives variants.
+
+    fed            the federated/DEFL configuration (M, b, theta, lr,
+                   compression, ...). When `plan=True`, b/theta/V are
+                   re-solved against the realized population and `fed`
+                   provides the problem constants (epsilon, nu, c, M).
+    model          registry name (MODELS) or a literal cnn.CNNConfig.
+    dataset        'mnist' | 'cifar' (synthetic *-like tasks).
+    n_train/n_test dataset sizes; alpha the Dirichlet non-IID knob.
+    seed           draw seed for dataset, partition and population —
+                   fixed per experiment; *run* seeds (PRNG key, scenario
+                   stream, batch order) are chosen at `Simulator.init` /
+                   `run_fleet` time, which is what multi-seed confidence
+                   bands vary.
+    scenario       registered edge-scenario name (scenarios.py) or None;
+                   draws the population and the per-round
+                   participation/channel stream.
+    heterogeneity  population lognormal spread when no scenario is given.
+    plan           solve Alg. 1 for (b*, theta*) against the population
+                   before building (plan-or-fed: False runs `fed` as-is).
+    batch_cap      dataset-bounded cap applied to a planned b* (paper
+                   §VI-B discussion); None disables.
+    backend        'scan' (default) | 'batched' | 'loop'.
+    """
+
+    fed: FedConfig = FedConfig()
+    model: Union[str, cnn.CNNConfig] = "mnist_cnn"
+    dataset: str = "mnist"
+    n_train: int = 1500
+    n_test: int = 400
+    alpha: float = 1.0
+    seed: int = 0
+    scenario: Optional[str] = None
+    heterogeneity: float = 0.0
+    compute: ComputeConfig = CALIBRATED_COMPUTE
+    wireless: WirelessConfig = WirelessConfig()
+    plan: bool = False
+    plan_method: str = "closed_form"
+    batch_cap: Optional[int] = 32
+    backend: str = "scan"
+    impl: str = "xla"
+    with_eval: bool = True
+    label: str = ""
+
+    def replace(self, **kw) -> "ExperimentSpec":
+        return dataclasses.replace(self, **kw)
+
+    # -- resolution ---------------------------------------------------------
+    def model_config(self) -> cnn.CNNConfig:
+        if isinstance(self.model, str):
+            try:
+                return MODELS[self.model]()
+            except KeyError:
+                raise KeyError(
+                    f"unknown model {self.model!r}; registered: "
+                    f"{tuple(MODELS)}") from None
+        return self.model
+
+    def population(self) -> delay.DevicePopulation:
+        if self.scenario is not None:
+            return scenarios.get(self.scenario).population(
+                self.fed.n_devices, self.compute, self.wireless, self.seed)
+        return delay.draw_population(
+            self.fed.n_devices, self.compute, self.wireless, self.seed,
+            self.heterogeneity)
+
+    def update_bits(self) -> float:
+        """Raw wire size of one model update (plan input; the simulator
+        separately applies compression accounting at run time)."""
+        cfg = self.model_config()
+        params = jax.eval_shape(
+            lambda k: cnn.init_cnn(cfg, k), jax.random.PRNGKey(0))
+        return tree_bytes(params) * 8.0
+
+    def _solve_plan(self, pop: delay.DevicePopulation,
+                    ) -> Optional[defl.DEFLPlan]:
+        if not self.plan:
+            return None
+        bits = self.update_bits()
+        if self.scenario is not None:
+            return scenarios.plan_for_scenario(
+                self.fed, self.scenario, bits, cc=self.compute,
+                wc=self.wireless, seed=self.seed, method=self.plan_method)
+        return defl.make_plan(self.fed, pop, bits, wireless=self.wireless,
+                              method=self.plan_method)
+
+    def _fed_with_plan(self, plan: Optional[defl.DEFLPlan]) -> FedConfig:
+        if plan is None:
+            return self.fed
+        fed = defl.plan_to_fedconfig(plan, self.fed)
+        b = fed.batch_size if self.batch_cap is None else min(
+            fed.batch_size, self.batch_cap)
+        return dataclasses.replace(fed, batch_size=b, update_bytes=None)
+
+    def resolve_plan(self) -> Optional[defl.DEFLPlan]:
+        """The DEFL plan this spec runs under (None when plan=False)."""
+        return self._solve_plan(self.population())
+
+    def resolve_fed(self) -> FedConfig:
+        """Plan-or-fed: `fed` with the solved (b*, theta*) applied when
+        plan=True (batch capped at `batch_cap`, wire size left to the
+        simulator's exact accounting), `fed` unchanged otherwise."""
+        return self._fed_with_plan(self.resolve_plan())
+
+    # -- materialization ----------------------------------------------------
+    def build(self) -> Simulator:
+        """Materialize the Simulator: draw data/partition/population at
+        `self.seed`, wire model/loss/eval, and hand the per-client data
+        factory to the functional core (each `init(seed)` / fleet member
+        gets its own independently-seeded batch streams over the shared
+        dataset — keeping the device-resident one-upload data path).
+        The population is drawn once and the DEFL plan solved once per
+        build (both are seed-deterministic, but redundancy here would
+        double every plan=True build's KKT solve)."""
+        make = DATASETS[self.dataset]
+        pop = self.population()
+        fed = self._fed_with_plan(self._solve_plan(pop))
+        cfg = self.model_config()
+        data = make(self.n_train, seed=self.seed)
+        params = cnn.init_cnn(cfg, jax.random.PRNGKey(self.seed))
+        parts = partition_dirichlet(data, fed.n_devices, alpha=self.alpha,
+                                    seed=self.seed)
+
+        def data_factory(seed: int):
+            return [BatchIterator(data, p, fed.batch_size, seed=seed + i)
+                    for i, p in enumerate(parts)]
+
+        eval_fn = None
+        if self.with_eval:
+            test = make(self.n_test, seed=self.seed + 1)
+            xb, yb = jnp.asarray(test.x), jnp.asarray(test.y)
+
+            @jax.jit
+            def eval_acc(p):
+                logits = cnn.cnn_forward(cfg, p, xb)
+                return jnp.mean(
+                    (jnp.argmax(logits, -1) == yb).astype(jnp.float32))
+
+            eval_fn = lambda p: {"acc": float(eval_acc(p))}  # noqa: E731
+
+        label = self.label or (
+            f"{self.dataset}@{self.scenario}" if self.scenario
+            else self.dataset)
+        return Simulator(
+            functools.partial(cnn.cnn_loss, cfg), params, data_factory,
+            partition_sizes(parts), fed, sgd(fed.lr), pop,
+            wireless=self.wireless, eval_fn=eval_fn, label=label,
+            backend=self.backend, impl=self.impl, scenario=self.scenario)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, ExperimentSpec] = {}
+
+
+def register(name: str, spec: ExperimentSpec) -> ExperimentSpec:
+    if name in _REGISTRY:
+        raise ValueError(f"experiment {name!r} already registered")
+    _REGISTRY[name] = spec
+    return spec
+
+
+def get(name: Union[str, ExperimentSpec]) -> ExperimentSpec:
+    if isinstance(name, ExperimentSpec):
+        return name
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown experiment {name!r}; registered: {names()}") from None
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+register("mnist_paper", ExperimentSpec(
+    fed=FedConfig(n_devices=10, epsilon=0.01, nu=2.0, c=CALIBRATED_C,
+                  lr=0.05),
+    model="mnist_cnn", dataset="mnist", plan=True,
+    label="mnist_paper"))
+register("cifar_paper", ExperimentSpec(
+    fed=FedConfig(n_devices=10, epsilon=0.01, nu=2.0, c=CALIBRATED_C,
+                  lr=0.05),
+    model="cifar_cnn", dataset="cifar", plan=True,
+    label="cifar_paper"))
+register("mnist_smoke", ExperimentSpec(
+    fed=FedConfig(n_devices=3, batch_size=8, theta=0.62, lr=0.05),
+    model="mnist_cnn_small", dataset="mnist", n_train=240, n_test=80,
+    label="mnist_smoke"))
+register("mnist_storm", ExperimentSpec(
+    fed=FedConfig(n_devices=10, epsilon=0.01, nu=2.0, c=CALIBRATED_C,
+                  lr=0.05),
+    model="mnist_cnn", dataset="mnist", scenario="hetero_storm", plan=True,
+    label="mnist_storm"))

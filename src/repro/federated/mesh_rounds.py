@@ -107,13 +107,27 @@ def _masked_clock(t_cp, t_cm, clock_mask, V):
     return {"T_cm": T_cm, "T_cp": T_cp, "T_round": T_cm + V * T_cp}
 
 
+def _weighted_client_sum(weights, x):
+    """sum_c w_c x_c over the leading client axis, as an explicit
+    multiply + reduce rather than a tensordot/dot_general contraction.
+
+    Deliberate: XLA lowers a dot_general differently once an extra
+    leading batch dimension appears (the fleet vmap in
+    `build_fleet_chunk`), reassociating the fp32 accumulation and
+    breaking bit-identity between a vmapped fleet member and the same
+    seed run alone. A reduce keeps the per-output-element accumulation
+    order over C fixed regardless of leading batch dims, which is what
+    the run_fleet == sequential-run bit-parity contract rests on."""
+    w = weights.astype(jnp.float32).reshape(
+        (weights.shape[0],) + (1,) * (x.ndim - 1))
+    return jnp.sum(w * x.astype(jnp.float32), axis=0)
+
+
 def _weighted_mean_bcast(stacked, weights):
     """sum_c w_c x_c, broadcast back to all C rows (keeps leaves (C, ...))."""
-    C = weights.shape[0]
 
     def agg(x):
-        w = weights.astype(jnp.float32)
-        mean = jnp.tensordot(w, x.astype(jnp.float32), axes=(0, 0))
+        mean = _weighted_client_sum(weights, x)
         return jnp.broadcast_to(mean[None].astype(x.dtype), x.shape)
 
     return jax.tree.map(agg, stacked)
@@ -157,7 +171,8 @@ def _int8_stochastic_mean_bcast(new_params, old_params, weights, keys, impl):
 
     def agg(r, old):
         flat = r.reshape(r.shape[0], -1).astype(jnp.float32)
-        mean = jnp.tensordot(weights.astype(jnp.float32), flat, axes=(0, 0))
+        # multiply+reduce, not tensordot: see _weighted_client_sum.
+        mean = _weighted_client_sum(weights, flat)
         out = old[0].reshape(-1).astype(jnp.float32) + mean
         return jnp.broadcast_to(
             out.reshape(old.shape[1:])[None].astype(old.dtype), old.shape)
@@ -435,6 +450,28 @@ def build_round_chunk(
         return params_C, opt_C, key, ys
 
     return chunk_step
+
+
+def build_fleet_chunk(chunk_step: Callable) -> Callable:
+    """vmap a `build_round_chunk` step over a leading fleet axis S.
+
+    The chunk step is pure and closure-free over run state (everything it
+    touches rides in as arguments), so a whole fleet — S seeds, or S arms
+    sharing one (model, b, V, M) shape signature — executes as ONE
+    dispatch per chunk instead of S sequential chunk calls:
+
+      carry (params_C, opt_C, key)  (S, C, ...) / (S, 2)   mapped, axis 0
+      weights, t_cp, data           shared, broadcast (in_axes=None) —
+                                    one population / one device-resident
+                                    dataset upload serves the whole fleet
+      xs                            every leaf (S, R, ...), mapped axis 0
+
+    ys leaves come back stacked (S, R). Per-member math is exactly the
+    single-chunk graph batched over S (vmap is a compile-time transform,
+    not a loop), which is what makes the per-seed results bit-identical to
+    sequential runs — asserted in tests/test_experiment_api.py.
+    """
+    return jax.vmap(chunk_step, in_axes=(0, 0, 0, None, None, None, 0))
 
 
 def replicate_clients(tree: Any, n_clients: int) -> Any:

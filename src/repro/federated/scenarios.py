@@ -10,9 +10,11 @@ channels that drift over rounds. A `Scenario` bundles
   1. a *population draw* — per-device (G_m, f_m, p_m, h_m) with named
      skew knobs, feeding `core.delay` and `core.defl.make_plan`; and
   2. a *per-round realization stream* — participation masks and realized
-     channel gains, consumed by `FLSimulation` on the host and fed to the
-     compiled batched round step as traced array inputs (fixed shapes:
-     no retrace, no host sync — see mesh_rounds.build_round_step).
+     channel gains, consumed by the simulator (`simulation.Simulator`) on
+     the host and fed to the compiled batched round step as traced array
+     inputs (fixed shapes: no retrace, no host sync — see
+     mesh_rounds.build_round_step). Stream position snapshots
+     (`state`/`set_state`) ride in `SimState` for checkpoint/resume.
 
 Registry access is by name (`scenarios.get("stragglers")`), shared by the
 simulator, the benchmarks (`benchmarks/run.py --scenario <name>`), and
@@ -96,6 +98,20 @@ class ScenarioStream:
         self.pop = pop
         self._rng = np.random.default_rng(np.random.SeedSequence([seed, 0xED6E]))
         self._log_drift = np.zeros(pop.n)
+
+    # -- snapshot / restore (SimState checkpointing) ------------------------
+    def state(self) -> dict:
+        """Value snapshot of the stream position: the RNG bit-generator
+        state plus the AR(1) drift carry. A stream restored from this via
+        `set_state` continues the realization sequence bit-identically —
+        the simulator's SimState carries these snapshots so a saved run
+        resumes on the exact mask/channel stream it left."""
+        return {"rng": self._rng.bit_generator.state,
+                "log_drift": self._log_drift.copy()}
+
+    def set_state(self, state: dict) -> None:
+        self._rng.bit_generator.state = state["rng"]
+        self._log_drift = np.asarray(state["log_drift"], float).copy()
 
     def _draw_round(self):
         """One round's raw draws: (uploaded, present, h).

@@ -5,11 +5,48 @@ paper's delay models (Eqs. 5, 7, 8) — exactly how the paper reports
 "overall time" for DEFL vs FedAvg vs Rand (Fig. 2). Heterogeneous device
 populations, non-IID partitions and update compression are supported, and
 a named `scenario` (federated/scenarios.py) layers per-round partial
-participation (Bernoulli dropout / link failure) and channel drift on top:
-the round clock becomes the straggler max over *participating* clients,
-dropped clients are masked out of the FedAvg, and on the batched backend
-all of it rides the one compiled round step as traced inputs (one trace
-per run, no extra host syncs — see FLSimulation.trace_count).
+participation (Bernoulli dropout / link failure) and channel drift on top.
+
+The public API is two layers:
+
+  `Simulator` — a pure functional core. All run state (stacked client
+      params/opt, PRNG key, sim clock, round cursor, scenario-stream and
+      data-iterator positions) lives in an immutable `SimState` pytree;
+      every method is state-in/state-out:
+
+          sim   = Simulator(loss_fn, params, data, sizes, fed, opt, pop)
+          state = sim.init(seed)
+          state, result  = sim.run(state, max_rounds=100, eval_every=10)
+          state, records = sim.run_chunk(state, rounds=10)
+          fleet = sim.run_fleet(seeds=range(8), max_rounds=100)
+
+      Because `SimState` is a pytree and the compiled chunk function is
+      pure, `run_fleet` vmaps the existing scan chunk over an extra
+      leading axis: S seeds execute in ONE dispatch per chunk instead of
+      S sequential runs, bit-identical per seed to sequential `run()`
+      calls. `SimState` round-trips through `jax.device_get` and
+      `save_state`/`load_state` for checkpoint/resume — a restored state
+      continues the loss/clock/participation history bit-identically.
+
+      One caveat to the value semantics: the compiled steps DONATE the
+      input state's device buffers (the peak-memory contract of the
+      batched/scan backends), so passing a state into
+      run/run_round/run_chunk/run_fleet CONSUMES it — always rebind to
+      the returned state; a reused input fails with JAX's
+      deleted-buffer error. To branch several runs off one state,
+      snapshot it first: `jax.device_get(state)` (host copies are
+      re-uploaded, never donated away from you) or
+      `save_state`/`load_state`.
+
+  `repro.federated.experiment.ExperimentSpec` — a frozen declarative
+      description (model, data/partition, population, wireless,
+      plan-or-fed, scenario, compression, backend) whose `build()`
+      returns a `Simulator`; replaces hand-wiring this constructor at
+      every call site.
+
+`FLSimulation` remains as a thin deprecated shim (one `DeprecationWarning`
+per process) holding a (Simulator, SimState) pair behind the old mutable
+interface.
 
 Three execution backends share the same math:
 
@@ -24,7 +61,7 @@ Three execution backends share the same math:
       come back as stacked scan outputs in a single device_get. Carry
       buffers (params/opt/PRNG key) are donated across chunks; ragged
       final chunks are padded under a `valid` flag so a whole run costs
-      exactly one trace (FLSimulation.trace_count).
+      exactly one trace (Simulator.trace_count).
   backend='batched': all M clients live on a stacked leading C axis and
       one jit-compiled round step (mesh_rounds.build_round_step) runs V
       vmapped local steps + weighted FedAvg + optional in-graph int8
@@ -42,8 +79,12 @@ Three execution backends share the same math:
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
+import pickle
+import warnings
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -104,14 +145,176 @@ class SimResult:
         return None
 
 
-class FLSimulation:
-    """One FL system: M clients with data iterators + a delay model."""
+# ---------------------------------------------------------------------------
+# SimState: the immutable run state
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SimState:
+    """Everything a run mutates, as one immutable value.
+
+    Device leaves (pytree children — what `run_fleet` stacks and vmaps,
+    and what `jax.device_get` materializes):
+      params_C  stacked (C, ...) client params ('batched'/'scan'); the
+                plain global param tree on 'loop'
+      opt_C     stacked per-client optimizer state ('batched'/'scan'); a
+                tuple of per-client states on 'loop'
+      key       the run's PRNG key (compression noise schedule)
+
+    Host fields (pytree aux data — position of the host-side streams):
+      seed      the seed `Simulator.init` was called with; rebuilds the
+                data iterators / scenario stream that `data` / `stream`
+                snapshots are restored into
+      round     global round cursor (continues across run() calls — a
+                resumed run numbers its history after the saved one)
+      sim_time  cumulative Eq. 8 simulated seconds
+      stream    ScenarioStream.state() snapshot. None = "fresh at
+                `seed`": a freshly-seeded stream with no fast-forward
+                (initial states; also any scenario-less sim).
+      data      per-client BatchIterator.state() snapshots. None =
+                "factory-fresh at `seed`" (initial states), and also
+                what a post-run state stores when the iterators don't
+                expose the snapshot protocol (then the data source is
+                assumed stateless/deterministic).
+
+    States are produced by `Simulator.init` and threaded through
+    state-in/state-out methods; `save_state`/`load_state` round-trip one
+    through disk for checkpoint/resume.
+
+    NOTE: the value is immutable, but its device buffers are donated to
+    the compiled step — a state passed into run/run_round/run_chunk/
+    run_fleet is consumed. Rebind to the returned state; to keep a
+    branch point, take a host snapshot first (`jax.device_get(state)`
+    or `save_state`).
+
+    Pytree support is intentionally shallow: the host fields live in
+    aux_data (so `jax.device_get`, `tree.map` over ONE state, and
+    serialization work), but aux holds numpy-laden snapshot dicts —
+    multi-tree ops (`tree.map(f, state_a, state_b)`) and passing a
+    SimState across a jit boundary are unsupported; operate on
+    `(params_C, opt_C, key)` directly for that.
+    """
+
+    params_C: Any
+    opt_C: Any
+    key: Any
+    seed: int = 0
+    round: int = 0
+    sim_time: float = 0.0
+    stream: Optional[dict] = None
+    data: Optional[tuple] = None
+
+
+def _simstate_flatten(s: SimState):
+    return ((s.params_C, s.opt_C, s.key),
+            (s.seed, s.round, s.sim_time, s.stream, s.data))
+
+
+def _simstate_unflatten(aux, children):
+    params_C, opt_C, key = children
+    seed, rnd, sim_time, stream, data = aux
+    return SimState(params_C=params_C, opt_C=opt_C, key=key, seed=seed,
+                    round=rnd, sim_time=sim_time, stream=stream, data=data)
+
+
+jax.tree_util.register_pytree_node(
+    SimState, _simstate_flatten, _simstate_unflatten)
+
+
+def save_state(path: str, state: SimState) -> None:
+    """Checkpoint a SimState: device leaves are fetched with
+    `jax.device_get` and the whole value (host stream/iterator snapshots
+    included) is serialized. `load_state` + `Simulator.run` continues the
+    run bit-identically (tests/test_checkpoint_resume.py)."""
+    with open(path, "wb") as f:
+        pickle.dump(jax.device_get(state), f)
+
+
+def load_state(path: str) -> SimState:
+    """Restore a `save_state` checkpoint. Leaves come back as numpy; the
+    first compiled step re-uploads them (and re-donates from there)."""
+    with open(path, "rb") as f:
+        state = pickle.load(f)
+    if not isinstance(state, SimState):
+        raise ValueError(f"{path!r} does not hold a SimState")
+    return state
+
+
+@dataclass
+class FleetResult:
+    """`run_fleet` output: per-member final states and SimResults, in
+    input order (member s = seed/state s)."""
+
+    states: List[SimState]
+    results: List[SimResult]
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __iter__(self):
+        return iter(self.results)
+
+    def loss_history(self) -> np.ndarray:
+        """(S, R) train-loss matrix across the fleet."""
+        return np.asarray(
+            [[r.train_loss for r in res.history] for res in self.results])
+
+    def total_times(self) -> np.ndarray:
+        return np.asarray([res.total_time for res in self.results])
+
+    def summary(self) -> Dict[str, float]:
+        """Mean/std over the fleet of final train loss and overall time —
+        the confidence-band numbers multi-seed FL papers report."""
+        losses = self.loss_history()[:, -1]
+        times = self.total_times()
+        return {"final_loss_mean": float(np.nanmean(losses)),
+                "final_loss_std": float(np.nanstd(losses)),
+                "total_time_mean": float(times.mean()),
+                "total_time_std": float(times.std())}
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def _unstack_members(tree, S: int):
+    """Split stacked (S, ...) fleet buffers into S per-member trees in ONE
+    compiled dispatch (eager per-member indexing costs S x leaves separate
+    device ops — measurable against a whole fleet chunk)."""
+    return tuple(
+        jax.tree.map(lambda x, s=s: x[s], tree) for s in range(S))
+
+
+def _validate_run_args(max_rounds: int, eval_every: int) -> None:
+    """Up-front validation on every backend (no silent clamping)."""
+    if not isinstance(max_rounds, (int, np.integer)) or max_rounds < 1:
+        raise ValueError(
+            f"max_rounds must be an int >= 1, got {max_rounds!r}")
+    if not isinstance(eval_every, (int, np.integer)) or eval_every < 1:
+        raise ValueError(
+            f"eval_every must be an int >= 1, got {eval_every!r}")
+
+
+# ---------------------------------------------------------------------------
+# Simulator: the pure functional core
+# ---------------------------------------------------------------------------
+
+
+class Simulator:
+    """One FL system: M clients with data + a delay model, as pure
+    state-in/state-out methods over `SimState`.
+
+    `data` is either a list of per-client batch iterators (shared, legacy
+    style) or a factory `seed -> list of iterators` — the factory form is
+    what makes `init(seed)` / `run_fleet(seeds=...)` give every member its
+    own independently-seeded data stream. Everything else (population,
+    wireless, compiled step functions, the device-resident dataset upload)
+    is immutable and shared across all states and fleet members.
+    """
 
     def __init__(
         self,
         loss_fn: Callable,  # (params, batch) -> (loss, metrics)
         init_params: Any,
-        client_iterators: List,  # per-client .next_batch() sources
+        data: Any,  # List[iterator] | Callable[[int], List[iterator]]
         data_sizes: np.ndarray,  # D_m
         fed: FedConfig,
         opt: Optimizer,
@@ -123,10 +326,10 @@ class FLSimulation:
         impl: str = "xla",  # quantize kernel: 'xla' | 'pallas'
         scenario: Optional[Any] = None,  # scenarios.Scenario | name | None
     ):
-        assert len(client_iterators) == fed.n_devices == pop.n
-        assert backend in ("scan", "batched", "loop"), backend
+        if backend not in ("scan", "batched", "loop"):
+            raise ValueError(f"unknown backend {backend!r}")
         self.loss_fn = loss_fn
-        self.iterators = client_iterators
+        self._data_src = data
         self.data_sizes = data_sizes
         self.fed = fed
         self.opt = opt
@@ -137,11 +340,9 @@ class FLSimulation:
         self.backend = backend
         self.impl = impl
         self.scenario = scenarios.get(scenario) if scenario is not None else None
-        # One realization stream per sim, seeded from the FedConfig: both
-        # backends (and reruns at the same seed) see identical per-round
-        # masks and channel draws.
-        self._stream = (self.scenario.stream(pop, fed.seed)
-                        if self.scenario is not None else None)
+        probe = self._make_iters(fed.seed)
+        assert len(probe) == fed.n_devices == pop.n
+        self._init_params = jax.tree.map(jnp.asarray, init_params)
         # Static per-client compute times (Eq. 4); uplink times depend on
         # the realized per-round channel and are computed per round.
         self._t_cp_clients = delay.per_client_compute_time(
@@ -151,16 +352,11 @@ class FLSimulation:
         # or blocks the async queue (see the _update_bits docstring).
         self._param_struct = jax.eval_shape(lambda p: p, init_params)
         self._bits_cache: Optional[float] = None
-        self._key = jax.random.PRNGKey(fed.seed)
+        self._fleet_fn = None
+        self._fleet_base = None
         if backend == "loop":
-            self._params = init_params
             self.local_update = make_local_update(loss_fn, opt)
-            self.opt_states = [opt.init(init_params) for _ in range(fed.n_devices)]
         else:
-            M = fed.n_devices
-            self._params_C = mesh_rounds.replicate_clients(
-                jax.tree.map(jnp.asarray, init_params), M)
-            self._opt_C = jax.vmap(lambda _: opt.init(init_params))(jnp.arange(M))
             w = jnp.asarray(np.asarray(data_sizes), jnp.float32)
             # Legacy path: host-normalized FedAvg weights. The scenario path
             # instead ships the raw sizes and renormalizes in-graph over the
@@ -176,7 +372,7 @@ class FLSimulation:
             # indices cross the host->device boundary. Anything else falls
             # back to pre-stacked (R, C, V, ...) host batches per chunk.
             self._data_dev = self._batch_from = None
-            its = client_iterators
+            its = probe
             if (its
                     and all(hasattr(it, "next_indices")
                             and hasattr(it, "device_arrays") for it in its)
@@ -187,21 +383,107 @@ class FLSimulation:
                     jnp.asarray, its[0].device_arrays())
                 self._batch_from = type(its[0]).batch_from
             self._t_cp_dev = jnp.asarray(self._t_cp_clients, jnp.float32)
-            self._chunk_fn = self._build_scan_chunk()
+            self._chunk_raw = self._build_scan_chunk()
+            # Same donation contract as the batched round step, amortized
+            # over a whole chunk: XLA reuses the carry buffers across
+            # chunks. All per-chunk inputs are traced arrays of fixed
+            # (R, ...) shape and a ragged final chunk pads to R under the
+            # valid flag, so a whole run compiles exactly once.
+            self._chunk_fn = jax.jit(self._chunk_raw, donate_argnums=(0, 1, 2))
+
+    # -- state construction -------------------------------------------------
+    def init(self, seed: Optional[int] = None) -> SimState:
+        """A fresh run state at `seed` (default: fed.seed): replicated
+        client params/opt, PRNGKey(seed), round 0, clock 0, and the
+        seed's scenario-stream / data-iterator start positions.
+
+        Data-stream caveat for the legacy fixed-list form: when the
+        Simulator was built with a list of live iterators (instead of a
+        `seed -> iterators` factory), `seed` cannot reseed the data —
+        init() snapshots the shared iterators' CURRENT position, so a
+        second init() after a run starts where the run left off (the
+        deprecated FLSimulation's semantics, which constructs one state
+        per instance). For reproducible multi-state/multi-seed work,
+        build with a factory (ExperimentSpec does)."""
+        seed = int(self.fed.seed if seed is None else seed)
+        M = self.fed.n_devices
+        if self.backend == "loop":
+            params = self._init_params
+            opt_C: Any = tuple(self.opt.init(params) for _ in range(M))
+        else:
+            params = mesh_rounds.replicate_clients(self._init_params, M)
+            opt_C = jax.vmap(
+                lambda _: self.opt.init(self._init_params))(jnp.arange(M))
+        # stream/data stay None — "factory-fresh at `seed`", which is
+        # exactly what _materialize constructs with no fast-forward, so
+        # init() never has to build (and immediately discard) the
+        # iterators/stream just to snapshot their start position.
+        return SimState(params_C=params, opt_C=opt_C,
+                        key=jax.random.PRNGKey(seed), seed=seed)
+
+    def _make_iters(self, seed: int) -> List:
+        if callable(self._data_src):
+            return list(self._data_src(seed))
+        return list(self._data_src)
+
+    @staticmethod
+    def _snapshot_iters(iters: List) -> Optional[tuple]:
+        if all(hasattr(it, "state") and hasattr(it, "set_state")
+               for it in iters):
+            return tuple(it.state() for it in iters)
+        return None
+
+    def _materialize(self, state: SimState):
+        """Live host-side streams positioned at `state`: data iterators
+        (factory-fresh, then fast-forwarded from the state's snapshots)
+        and the scenario realization stream."""
+        iters = self._make_iters(state.seed)
+        if state.data is not None:
+            for it, s in zip(iters, state.data):
+                it.set_state(s)
+        stream = None
+        if self.scenario is not None:
+            stream = self.scenario.stream(self.pop, state.seed)
+            if state.stream is not None:
+                stream.set_state(state.stream)
+        return iters, stream
+
+    def _rebuild_state(self, state, params_C, opt_C, key, rnd, sim_time,
+                       iters, stream) -> SimState:
+        return dataclasses.replace(
+            state, params_C=params_C, opt_C=opt_C, key=key, round=int(rnd),
+            sim_time=float(sim_time),
+            stream=stream.state() if stream is not None else None,
+            data=self._snapshot_iters(iters))
 
     # -- state views --------------------------------------------------------
-    @property
-    def params(self) -> Any:
-        """The global model (post-aggregation every client row is equal, so
-        row 0 of the stacked state is the global model)."""
+    def params(self, state: SimState) -> Any:
+        """The global model in `state` (post-aggregation every client row
+        is equal, so row 0 of the stacked state is the global model)."""
         if self.backend == "loop":
-            return self._params
-        return jax.tree.map(lambda x: x[0], self._params_C)
+            return state.params_C
+        return jax.tree.map(lambda x: x[0], state.params_C)
 
-    def block_until_ready(self) -> None:
+    @staticmethod
+    def block_until_ready(state: SimState) -> None:
         """Drain the async dispatch queue (benchmarking / checkpoint use)."""
-        state = self._params if self.backend == "loop" else self._params_C
-        jax.block_until_ready(state)
+        jax.block_until_ready(state.params_C)
+
+    @property
+    def trace_count(self) -> int:
+        """Number of compiled traces so far (batched: the round step; scan:
+        the chunk step plus any direct run_round calls; +1 once a fleet fn
+        is compiled). Scenario masking and chunking must stay at 1 across
+        a run — per-round masks, delay inputs and the ragged-final-chunk
+        padding are traced values, never new shapes/constants."""
+        if self.backend == "loop":
+            return 0
+        count = int(self._round_fn._cache_size())
+        if self.backend == "scan":
+            count += int(self._chunk_fn._cache_size())
+            if self._fleet_fn is not None:
+                count += int(self._fleet_fn._cache_size())
+        return count
 
     # -- delay accounting ---------------------------------------------------
     def _update_bits(self) -> float:
@@ -231,7 +513,7 @@ class FLSimulation:
             self.fed.batch_size, self.pop.G, self.pop.f)
         return T_cm, T_cp
 
-    # -- batched backend ----------------------------------------------------
+    # -- compiled step builders ---------------------------------------------
     def _build_batched_round(self):
         fed = self.fed
         M, V = fed.n_devices, fed.local_rounds
@@ -277,23 +559,127 @@ class FLSimulation:
         # shape: new values every round, ONE trace for the whole run.
         return jax.jit(round_fn, donate_argnums=(0, 1, 2))
 
-    # -- scan backend -------------------------------------------------------
     def _build_scan_chunk(self):
+        """The pure chunk fn (mesh_rounds.build_round_chunk): closure-free
+        over run state — params/opt/key and all per-round inputs ride in
+        as arguments, which is what lets run_fleet vmap it over a fleet
+        axis (mesh_rounds.build_fleet_chunk)."""
         fed = self.fed
         agg = "int8_stochastic" if fed.compress_updates else "allreduce"
-        chunk = mesh_rounds.build_round_chunk(
+        return mesh_rounds.build_round_chunk(
             self.loss_fn, self.opt, fed.local_rounds, fed.n_devices,
             aggregation=agg, impl=self.impl,
             scenario=self.scenario is not None,
             batch_from=self._batch_from,
             update_bits=self._update_bits())
-        # Same donation contract as the batched round step, amortized over
-        # a whole chunk: XLA reuses the carry buffers across chunks. All
-        # per-chunk inputs are traced arrays of fixed (R, ...) shape and a
-        # ragged final chunk pads to R under the valid flag, so the whole
-        # run compiles exactly once (trace_count).
-        return jax.jit(chunk, donate_argnums=(0, 1, 2))
 
+    def _get_fleet_fn(self):
+        if self._fleet_fn is None:
+            self._fleet_fn = jax.jit(
+                mesh_rounds.build_fleet_chunk(self._chunk_raw),
+                donate_argnums=(0, 1, 2))
+        return self._fleet_fn
+
+    def _fleet_init_base(self):
+        """The (params_C, opt_C) every fresh member starts from, cached —
+        never donated itself (run_fleet broadcasts a new stacked buffer
+        out of it per call), so reuse across calls is safe."""
+        if self._fleet_base is None:
+            M = self.fed.n_devices
+            self._fleet_base = (
+                mesh_rounds.replicate_clients(self._init_params, M),
+                jax.vmap(lambda _: self.opt.init(self._init_params))(
+                    jnp.arange(M)))
+        return self._fleet_base
+
+    # -- per-round execution ------------------------------------------------
+    def run_round(self, state: SimState, real=None, t_cm_clients=None):
+        """One communication round: (state, metrics-dict). `real` is the
+        scenario's per-round realization (drawn from the state's stream
+        when omitted); passing it on a scenario-less simulation raises —
+        there is no participation/channel semantics to apply it to.
+        `t_cm_clients` lets run() share its per-client uplink-time vector
+        instead of recomputing. The scan backend shares the batched
+        backend's per-round step here (same stacked state layout);
+        chunking only applies inside run()."""
+        if real is not None and self.scenario is None:
+            raise ValueError(
+                "run_round(real=...) was given a scenario realization but "
+                "this simulation has no scenario — the mask/channel inputs "
+                "would be silently ignored. Construct the Simulator with "
+                "scenario=... or drop the argument.")
+        iters, stream = self._materialize(state)
+        if self.scenario is not None and real is None:
+            real = stream.next_round()
+        if self.backend == "loop":
+            params, opt_C, key, metrics = self._round_loop(
+                state.params_C, state.opt_C, state.key, iters, real)
+        else:
+            params, opt_C, key, metrics = self._round_batched(
+                state.params_C, state.opt_C, state.key, iters, real,
+                t_cm_clients)
+        new_state = self._rebuild_state(
+            state, params, opt_C, key, state.round + 1, state.sim_time,
+            iters, stream)
+        return new_state, metrics
+
+    def _round_batched(self, params_C, opt_C, key, iters, real,
+                       t_cm_clients=None):
+        batches = stack_client_batches(iters, self.fed.local_rounds)
+        if self.scenario is None:
+            params_C, opt_C, key, loss = self._round_fn(
+                params_C, opt_C, key, batches)
+            return params_C, opt_C, key, {"train_loss": loss}  # device scalar
+        if t_cm_clients is None:  # direct run_round callers; run() shares its vector
+            t_cm_clients = delay.per_client_uplink_time(
+                self._update_bits(), self.wireless, self.pop.p, real.h)
+        mask = jnp.asarray(real.mask, jnp.float32)
+        clock_mask = jnp.asarray(real.clock_mask, jnp.float32)
+        t_cp = jnp.asarray(self._t_cp_clients, jnp.float32)
+        t_cm = jnp.asarray(t_cm_clients, jnp.float32)
+        params_C, opt_C, key, loss = self._round_fn(
+            params_C, opt_C, key, batches, mask, clock_mask, t_cp, t_cm)
+        return params_C, opt_C, key, {
+            "train_loss": loss, "n_participants": real.n_participants}
+
+    def _round_loop(self, params, opt_states, key, iters, real):
+        V = self.fed.local_rounds
+        M = len(iters)
+        deltas, sizes, losses = [], [], []
+        keys_C = None
+        if self.fed.compress_updates:
+            # Keys are drawn for all M clients regardless of participation
+            # (the batched backend must: vmap is shape-static), so the two
+            # backends' PRNG streams stay aligned under any mask.
+            key, keys_C = compression.sequential_client_keys(key, M)
+        mask = np.ones(M, bool) if real is None else np.asarray(real.mask, bool)
+        opt_states = list(opt_states)
+        for m, it in enumerate(iters):
+            # Data is drawn for every client every round — participating or
+            # not — matching stack_client_batches on the batched backend so
+            # both consume identical iterator streams.
+            raw = [it.next_batch() for _ in range(V)]
+            if not mask[m]:
+                continue
+            batches = stack_batches(
+                [jax.tree.map(jnp.asarray, b) for b in raw])
+            delta, opt_states[m], loss_v = client_round(
+                self.local_update, params, opt_states[m], batches)
+            if self.fed.compress_updates:
+                delta = compression.decompress_update(
+                    compression.compress_update(delta, keys_C[m], impl=self.impl),
+                    impl=self.impl)
+            deltas.append(delta)
+            sizes.append(self.data_sizes[m])
+            losses.append(float(jnp.mean(loss_v)))
+        if deltas:  # zero-participation round: params unchanged
+            params = aggregate_updates(params, deltas, sizes)
+        out = {"train_loss": float(np.mean(losses)) if losses else float("nan")}
+        if real is not None:
+            out["n_participants"] = int(mask.sum())
+        return params, tuple(opt_states), key, out
+
+    # -- chunked execution (scan backend) -----------------------------------
     @staticmethod
     def _pad_rounds(a: np.ndarray, R: int) -> np.ndarray:
         """Pad a round-stacked array to R rounds with zeros (ragged final
@@ -303,186 +689,192 @@ class FLSimulation:
             return a
         return np.concatenate([a, np.zeros((R - n, *a.shape[1:]), a.dtype)])
 
-    def _chunk_inputs(self, R: int, n: int, update_bits: float):
+    def _chunk_inputs(self, iters, stream, R: int, n: int):
         """Host-side prep for one chunk: draw n rounds of data (+ scenario
-        realizations), pad to R, and return (xs pytree for the scan, host
-        dict with the f64 clock accounting for the history records)."""
+        realizations), pad to R, and return (xs pytree for the scan — all
+        numpy leaves so run_fleet can stack members before the single
+        upload — plus a host dict with the f64 clock accounting for the
+        history records)."""
         V = self.fed.local_rounds
         pad = self._pad_rounds
         if self._data_dev is not None:
-            idx = stack_chunk_indices(self.iterators, n, V)
-            xs = {"idx": jnp.asarray(pad(idx, R))}
+            idx = stack_chunk_indices(iters, n, V)
+            xs = {"idx": pad(idx, R)}
         else:
-            batches = stack_chunk_batches(self.iterators, n, V)
+            batches = stack_chunk_batches(iters, n, V)
             xs = {"batches": jax.tree.map(
-                lambda a: jnp.asarray(pad(np.asarray(a), R)), batches)}
+                lambda a: pad(np.asarray(a), R), batches)}
         valid = np.zeros(R, bool)
         valid[:n] = True
-        xs["valid"] = jnp.asarray(valid)
+        xs["valid"] = valid
         host = {}
         if self.scenario is not None:
-            chunk = self._stream.draw_chunk(n)
+            chunk = stream.draw_chunk(n)
             t_cm = delay.per_client_uplink_time(
-                update_bits, self.wireless, self.pop.p, chunk.h)
+                self._update_bits(), self.wireless, self.pop.p, chunk.h)
             # f64 host twin of the in-graph clock: bit-identical to the
             # per-round backends' accounting (delay.chunk_round_times).
             T_cm, T_cp = delay.chunk_round_times(
                 self._t_cp_clients, t_cm, chunk.clock_mask)
             host = {"T_cm": T_cm, "T_cp": T_cp,
                     "n_participants": chunk.n_participants}
-            xs["mask"] = jnp.asarray(
-                pad(chunk.mask.astype(np.float32), R))
-            xs["clock_mask"] = jnp.asarray(
-                pad(chunk.clock_mask.astype(np.float32), R))
-            xs["t_cm"] = jnp.asarray(pad(t_cm.astype(np.float32), R))
+            xs["mask"] = pad(chunk.mask.astype(np.float32), R)
+            xs["clock_mask"] = pad(chunk.clock_mask.astype(np.float32), R)
+            xs["t_cm"] = pad(t_cm.astype(np.float32), R)
         return xs, host
 
-    def _run_scan(self, max_rounds, target_acc, eval_every, max_sim_time,
-                  ) -> SimResult:
+    def _rewind_chunk(self, iters, stream, pre_data, pre_stream, t: int):
+        """Reposition the host streams as if only the first t rounds of
+        the just-drawn chunk had been consumed: restore the pre-chunk
+        snapshots and replay t rounds in chunk order. Iterators without
+        the snapshot protocol can't be rewound — acceptable only if they
+        are stateless (the same assumption checkpointing makes)."""
+        V = self.fed.local_rounds
+        if pre_data is not None:
+            for it, s in zip(iters, pre_data):
+                it.set_state(s)
+            if self._data_dev is not None:
+                stack_chunk_indices(iters, t, V)
+            else:
+                stack_chunk_batches(iters, t, V)
+        if stream is not None:
+            stream.set_state(pre_stream)
+            stream.draw_chunk(t)
+
+    def _chunk_args(self):
+        """(weights, t_cp) chunk-fn arguments for this configuration."""
+        if self.scenario is None:
+            return self._weights, None
+        return self._sizes_f32, self._t_cp_dev
+
+    def _chunk_records(self, ys, host, n: int, r0: int, t0: float,
+                       ) -> List[RoundRecord]:
+        """Build the n RoundRecords of one chunk from the fetched scan
+        outputs `ys` (host numpy, leaves (R,)) and the f64 host-twin clock
+        dict, starting at global round r0 and clock t0."""
+        update_bits = self._update_bits()
+        V = self.fed.local_rounds
+        M = self.fed.n_devices
+        if self.scenario is None:
+            T_cm_const, T_cp_const = self.round_times()
+        records = []
+        sim_time = t0
+        for i in range(n):
+            if self.scenario is None:
+                T_cm, T_cp, n_part = T_cm_const, T_cp_const, None
+                bits = float(M * update_bits)
+            else:
+                T_cm = float(host["T_cm"][i])
+                T_cp = float(host["T_cp"][i])
+                n_part = int(host["n_participants"][i])
+                bits = float(n_part * update_bits)
+            sim_time += delay.round_time(T_cm, T_cp, V)
+            records.append(RoundRecord(
+                round=r0 + i + 1, sim_time=sim_time, T_cm=T_cm, T_cp=T_cp,
+                train_loss=float(ys["loss"][i]),
+                n_participants=n_part, uplink_bits=bits))
+        return records
+
+    def run_chunk(self, state: SimState, rounds: int):
+        """Run `rounds` rounds as ONE compiled scan dispatch (scan backend
+        only): (state', [RoundRecord]). The building block `run()` drives
+        at eval_every cadence; exposed for custom drivers (schedulers,
+        in-graph stopping rules) that want chunk-level control."""
+        if self.backend != "scan":
+            raise ValueError(
+                f"run_chunk requires backend='scan', not {self.backend!r}")
+        _validate_run_args(rounds, 1)
+        iters, stream = self._materialize(state)
+        weights, t_cp_arg = self._chunk_args()
+        xs, host = self._chunk_inputs(iters, stream, rounds, rounds)
+        params_C, opt_C, key, ys = self._chunk_fn(
+            state.params_C, state.opt_C, state.key,
+            weights, t_cp_arg, self._data_dev, xs)
+        ys = jax.device_get(ys)
+        records = self._chunk_records(ys, host, rounds, state.round,
+                                      state.sim_time)
+        new_state = self._rebuild_state(
+            state, params_C, opt_C, key, state.round + rounds,
+            records[-1].sim_time, iters, stream)
+        return new_state, records
+
+    def _run_scan(self, state, max_rounds, target_acc, eval_every,
+                  max_sim_time):
         """Chunked driver: one compiled scan call + one device_get per
         eval_every rounds. Chunk boundaries coincide exactly with the
-        per-round driver's eval boundaries (r % eval_every == 0 or the
+        per-round driver's eval boundaries (k % eval_every == 0 or the
         final round). On a max_sim_time stop the history is truncated at
         the first exceeding round, matching the per-round backends; the
         device state is end-of-chunk (documented deviation — the chunk is
         already in flight)."""
+        iters, stream = self._materialize(state)
+        params_C, opt_C, key = state.params_C, state.opt_C, state.key
         history: List[RoundRecord] = []
-        sim_time = 0.0
-        V = self.fed.local_rounds
-        update_bits = self._update_bits()
-        M = self.fed.n_devices
-        if self.scenario is None:
-            T_cm_const, T_cp_const = self.round_times()
-            weights = self._weights
-            t_cp_arg = None
-        else:
-            weights = self._sizes_f32
-            t_cp_arg = self._t_cp_dev
-        R = max(1, min(eval_every, max_rounds))
-        r, stop = 0, False
-        while r < max_rounds and not stop:
-            n = min(R, max_rounds - r)
-            xs, host = self._chunk_inputs(R, n, update_bits)
-            self._params_C, self._opt_C, self._key, ys = self._chunk_fn(
-                self._params_C, self._opt_C, self._key,
-                weights, t_cp_arg, self._data_dev, xs)
+        sim_time = state.sim_time
+        r0 = state.round
+        weights, t_cp_arg = self._chunk_args()
+        R = min(eval_every, max_rounds)
+        done, stop = 0, False
+        while done < max_rounds and not stop:
+            n = min(R, max_rounds - done)
+            if max_sim_time:
+                # Pre-chunk host-stream positions: if the budget stop
+                # truncates mid-chunk, the streams are rewound to the
+                # truncation round so the returned state's snapshots
+                # agree with its round cursor (see below).
+                pre_data = self._snapshot_iters(iters)
+                pre_stream = stream.state() if stream is not None else None
+            xs, host = self._chunk_inputs(iters, stream, R, n)
+            params_C, opt_C, key, ys = self._chunk_fn(
+                params_C, opt_C, key, weights, t_cp_arg, self._data_dev, xs)
             # The chunk's only device->host sync: one stacked fetch of all
             # per-round scan outputs.
             ys = jax.device_get(ys)
-            for i in range(n):
-                r += 1
-                if self.scenario is None:
-                    T_cm, T_cp, n_part = T_cm_const, T_cp_const, None
-                    bits = float(M * update_bits)
-                else:
-                    T_cm = float(host["T_cm"][i])
-                    T_cp = float(host["T_cp"][i])
-                    n_part = int(host["n_participants"][i])
-                    bits = float(n_part * update_bits)
-                sim_time += delay.round_time(T_cm, T_cp, V)
-                history.append(RoundRecord(
-                    round=r, sim_time=sim_time, T_cm=T_cm, T_cp=T_cp,
-                    train_loss=float(ys["loss"][i]),
-                    n_participants=n_part, uplink_bits=bits))
-                if max_sim_time and sim_time >= max_sim_time:
-                    stop = True
-                    break
+            records = self._chunk_records(ys, host, n, r0 + done, sim_time)
+            if max_sim_time:
+                for j, rec in enumerate(records):
+                    if rec.sim_time >= max_sim_time:
+                        if j + 1 < n:
+                            # The host streams consumed the whole chunk
+                            # but the run stops after j+1 of its rounds:
+                            # restore the pre-chunk positions and replay
+                            # exactly j+1 rounds, so a resume from the
+                            # returned state draws round j+2's data and
+                            # realization (not round n+1's). The device
+                            # params remain end-of-chunk — the documented
+                            # deviation; the stream-driven accounting
+                            # (clocks, participation) stays exact.
+                            self._rewind_chunk(iters, stream, pre_data,
+                                               pre_stream, j + 1)
+                        records = records[:j + 1]
+                        stop = True
+                        break
+            history.extend(records)
+            done = history[-1].round - r0
+            sim_time = history[-1].sim_time
             rec = history[-1]
-            at_boundary = rec.round % eval_every == 0 or rec.round == max_rounds
+            k = rec.round - r0
+            at_boundary = k % eval_every == 0 or k == max_rounds
             if self.eval_fn and at_boundary:
-                ev = self.eval_fn(self.params)
+                ev = self.eval_fn(self._params_from(params_C))
                 rec.test_acc = float(ev.get("acc", np.nan))
                 rec.test_loss = float(ev.get("loss", np.nan))
                 if (target_acc and rec.test_acc is not None
                         and rec.test_acc >= target_acc):
                     stop = True
-        return SimResult(history=history, params=self.params,
-                         label=self.label, fed=self.fed)
+        new_state = self._rebuild_state(
+            state, params_C, opt_C, key, r0 + len(history), sim_time,
+            iters, stream)
+        return new_state, SimResult(
+            history=history, params=self._params_from(params_C),
+            label=self.label, fed=self.fed)
 
-    @property
-    def trace_count(self) -> int:
-        """Number of compiled traces so far (batched: the round step; scan:
-        the chunk step plus any direct run_round calls). Scenario masking
-        and chunking must stay at 1 across a run — per-round masks, delay
-        inputs and the ragged-final-chunk padding are traced values, never
-        new shapes/constants."""
+    def _params_from(self, params_C):
         if self.backend == "loop":
-            return 0
-        count = int(self._round_fn._cache_size())
-        if self.backend == "scan":
-            count += int(self._chunk_fn._cache_size())
-        return count
-
-    def _run_round_batched(self, real=None, t_cm_clients=None) -> Dict:
-        batches = stack_client_batches(self.iterators, self.fed.local_rounds)
-        if self.scenario is None:
-            self._params_C, self._opt_C, self._key, loss = self._round_fn(
-                self._params_C, self._opt_C, self._key, batches)
-            return {"train_loss": loss}  # device scalar; synced lazily
-        if t_cm_clients is None:  # direct run_round() callers; run() shares its vector
-            t_cm_clients = delay.per_client_uplink_time(
-                self._update_bits(), self.wireless, self.pop.p, real.h)
-        mask = jnp.asarray(real.mask, jnp.float32)
-        clock_mask = jnp.asarray(real.clock_mask, jnp.float32)
-        t_cp = jnp.asarray(self._t_cp_clients, jnp.float32)
-        t_cm = jnp.asarray(t_cm_clients, jnp.float32)
-        self._params_C, self._opt_C, self._key, loss = self._round_fn(
-            self._params_C, self._opt_C, self._key, batches,
-            mask, clock_mask, t_cp, t_cm)
-        return {"train_loss": loss, "n_participants": real.n_participants}
-
-    # -- loop backend (reference) -------------------------------------------
-    def _run_round_loop(self, real=None) -> Dict:
-        V = self.fed.local_rounds
-        M = len(self.iterators)
-        deltas, sizes, losses = [], [], []
-        keys_C = None
-        if self.fed.compress_updates:
-            # Keys are drawn for all M clients regardless of participation
-            # (the batched backend must: vmap is shape-static), so the two
-            # backends' PRNG streams stay aligned under any mask.
-            self._key, keys_C = compression.sequential_client_keys(
-                self._key, M)
-        mask = np.ones(M, bool) if real is None else np.asarray(real.mask, bool)
-        for m, it in enumerate(self.iterators):
-            # Data is drawn for every client every round — participating or
-            # not — matching stack_client_batches on the batched backend so
-            # both consume identical iterator streams.
-            raw = [it.next_batch() for _ in range(V)]
-            if not mask[m]:
-                continue
-            batches = stack_batches(
-                [jax.tree.map(jnp.asarray, b) for b in raw])
-            delta, self.opt_states[m], loss_v = client_round(
-                self.local_update, self._params, self.opt_states[m], batches)
-            if self.fed.compress_updates:
-                delta = compression.decompress_update(
-                    compression.compress_update(delta, keys_C[m], impl=self.impl),
-                    impl=self.impl)
-            deltas.append(delta)
-            sizes.append(self.data_sizes[m])
-            losses.append(float(jnp.mean(loss_v)))
-        if deltas:  # zero-participation round: params unchanged
-            self._params = aggregate_updates(self._params, deltas, sizes)
-        out = {"train_loss": float(np.mean(losses)) if losses else float("nan")}
-        if real is not None:
-            out["n_participants"] = int(mask.sum())
-        return out
+            return params_C
+        return jax.tree.map(lambda x: x[0], params_C)
 
     # -- training -----------------------------------------------------------
-    def run_round(self, real=None, t_cm_clients=None) -> Dict:
-        """One communication round. `real` is the scenario's per-round
-        realization (drawn from the stream when omitted on a scenario sim;
-        ignored semantics-free on a plain sim). `t_cm_clients` lets run()
-        share its per-client uplink-time vector instead of recomputing.
-        The scan backend shares the batched backend's per-round step here
-        (same stacked state layout); chunking only applies inside run()."""
-        if self.scenario is not None and real is None:
-            real = self._stream.next_round()
-        if self.backend == "loop":
-            return self._run_round_loop(real)
-        return self._run_round_batched(real, t_cm_clients)
-
     @staticmethod
     def _sync_history(history: List[RoundRecord]) -> None:
         """Host-sync boundary: materialize any still-on-device train losses."""
@@ -492,45 +884,62 @@ class FLSimulation:
 
     def run(
         self,
+        state: SimState,
         max_rounds: int = 200,
         target_acc: Optional[float] = None,
         eval_every: int = 1,
         max_sim_time: Optional[float] = None,
-    ) -> SimResult:
+    ):
+        """Run up to `max_rounds` MORE rounds from `state`:
+        (state', SimResult). Round numbering and the Eq. 8 clock continue
+        from the state's cursors, so a run resumed from a checkpointed
+        state produces exactly the history an uninterrupted run would.
+        The input state's device buffers are donated (consumed) — rebind
+        to the returned state; branch points need a host snapshot first
+        (`jax.device_get(state)` / `save_state`)."""
+        _validate_run_args(max_rounds, eval_every)
         if self.backend == "scan":
-            return self._run_scan(max_rounds, target_acc, eval_every,
+            return self._run_scan(state, max_rounds, target_acc, eval_every,
                                   max_sim_time)
+        iters, stream = self._materialize(state)
+        params_C, opt_C, key = state.params_C, state.opt_C, state.key
         history: List[RoundRecord] = []
-        sim_time = 0.0
+        sim_time = state.sim_time
+        r0 = state.round
         T_cm, T_cp = self.round_times()
         V = self.fed.local_rounds
         update_bits = self._update_bits()
-        for r in range(1, max_rounds + 1):
+        for k in range(1, max_rounds + 1):
             real = None
             t_cm_clients = None
             if self.scenario is not None:
                 # Realize the round (host-side numpy: mask + channel), take
                 # the Eq. 8 clock as the straggler max over participating
                 # clients, and feed the same realization to the round step.
-                real = self._stream.next_round()
+                real = stream.next_round()
                 t_cm_clients = delay.per_client_uplink_time(
                     update_bits, self.wireless, self.pop.p, real.h)
                 T_cm, T_cp = delay.masked_round_times(
                     self._t_cp_clients, t_cm_clients, real.clock_mask)
-            metrics = self.run_round(real, t_cm_clients)
+            if self.backend == "loop":
+                params_C, opt_C, key, metrics = self._round_loop(
+                    params_C, opt_C, key, iters, real)
+            else:
+                params_C, opt_C, key, metrics = self._round_batched(
+                    params_C, opt_C, key, iters, real, t_cm_clients)
             sim_time += delay.round_time(T_cm, T_cp, V)
             n_part = metrics.get("n_participants")
             rec = RoundRecord(
-                round=r, sim_time=sim_time, T_cm=T_cm, T_cp=T_cp,
+                round=r0 + k, sim_time=sim_time, T_cm=T_cm, T_cp=T_cp,
                 train_loss=metrics["train_loss"],
                 n_participants=n_part,
                 uplink_bits=float(
                     (self.fed.n_devices if n_part is None else n_part)
                     * update_bits))
             history.append(rec)
-            at_boundary = r % eval_every == 0 or r == max_rounds
+            at_boundary = k % eval_every == 0 or k == max_rounds
             if self.eval_fn and at_boundary:
-                ev = self.eval_fn(self.params)
+                ev = self.eval_fn(self._params_from(params_C))
                 rec.test_acc = float(ev.get("acc", np.nan))
                 rec.test_loss = float(ev.get("loss", np.nan))
             if at_boundary:
@@ -540,5 +949,215 @@ class FLSimulation:
             if max_sim_time and sim_time >= max_sim_time:
                 break
         self._sync_history(history)
-        return SimResult(history=history, params=self.params,
-                         label=self.label, fed=self.fed)
+        new_state = self._rebuild_state(
+            state, params_C, opt_C, key, r0 + len(history), sim_time,
+            iters, stream)
+        return new_state, SimResult(
+            history=history, params=self._params_from(params_C),
+            label=self.label, fed=self.fed)
+
+    # -- fleet execution (vmapped multi-seed / multi-state) ------------------
+    def run_fleet(
+        self,
+        seeds: Optional[Iterable[int]] = None,
+        states: Optional[Sequence[SimState]] = None,
+        max_rounds: int = 200,
+        eval_every: int = 1,
+    ) -> FleetResult:
+        """Run S member states in lockstep with ONE vmapped dispatch per
+        chunk (scan backend only): the compiled chunk fn is mapped over a
+        leading fleet axis (mesh_rounds.build_fleet_chunk), so S seeds
+        cost one compiled call per eval_every rounds instead of S.
+
+        Pass `seeds` (each becomes `init(seed)`) or pre-built `states`
+        (e.g. restored checkpoints — they must share a round cursor so the
+        lockstep chunking lines up). Per-member results are bit-identical
+        to sequential `run()` calls at the same seeds: host-side draws
+        (data indices, masks, channel drift) are per-member and vmap only
+        batches the already-pure device graph. Early stopping
+        (target_acc / max_sim_time) is per-member state and intentionally
+        unsupported here — run members individually when you need it."""
+        if self.backend != "scan":
+            raise ValueError(
+                f"run_fleet requires backend='scan', not {self.backend!r}")
+        if not callable(self._data_src):
+            # A fixed iterator list is ONE set of live objects: every
+            # member's _materialize would alias it, so members would
+            # consume each other's batch stream and the per-seed
+            # bit-identity contract would silently break.
+            raise ValueError(
+                "run_fleet needs a per-seed data factory: this Simulator "
+                "was built with a fixed iterator list, which all fleet "
+                "members would share (and advance past each other). "
+                "Construct it with data=lambda seed: [...fresh iterators...] "
+                "or via ExperimentSpec.build().")
+        _validate_run_args(max_rounds, eval_every)
+        if states is None:
+            if seeds is None:
+                raise ValueError("run_fleet needs seeds=... or states=...")
+            seeds = [int(s) for s in seeds]
+            if not seeds:
+                raise ValueError("run_fleet needs at least one member")
+            # Fresh-seed fast path: every member starts from the SAME
+            # replicated params/opt (only the PRNG key differs), so the
+            # stacked (S, C, ...) device state is one broadcast per leaf
+            # instead of S eager init() + a per-leaf stack — at S=8 that
+            # is hundreds of small dispatches saved per call.
+            base_p, base_o = self._fleet_init_base()
+            S = len(seeds)
+            bcast = lambda x: jnp.broadcast_to(x[None], (S, *x.shape))  # noqa: E731
+            params_S = jax.tree.map(bcast, base_p)
+            opt_S = jax.tree.map(bcast, base_o)
+            key_S = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+            states = [SimState(params_C=None, opt_C=None, key=None, seed=s)
+                      for s in seeds]
+        else:
+            states = list(states)
+            if not states:
+                raise ValueError("run_fleet needs at least one member")
+            if len({st.round for st in states}) != 1:
+                raise ValueError(
+                    "fleet members must share a round cursor (got rounds "
+                    f"{sorted({st.round for st in states})}) — lockstep "
+                    "chunking has no per-member ragged tails")
+            S = len(states)
+            params_S, opt_S, key_S = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[(st.params_C, st.opt_C, st.key) for st in states])
+        mats = [self._materialize(st) for st in states]
+        weights, t_cp_arg = self._chunk_args()
+        fleet_fn = self._get_fleet_fn()
+        histories: List[List[RoundRecord]] = [[] for _ in range(S)]
+        times = [st.sim_time for st in states]
+        r0 = states[0].round
+        R = min(eval_every, max_rounds)
+        done = 0
+        while done < max_rounds:
+            n = min(R, max_rounds - done)
+            per = [self._chunk_inputs(it, strm, R, n) for it, strm in mats]
+            # One stacked (S, R, ...) upload per chunk for the whole fleet.
+            xs = jax.tree.map(lambda *ls: np.stack(ls), *[p[0] for p in per])
+            params_S, opt_S, key_S, ys = fleet_fn(
+                params_S, opt_S, key_S, weights, t_cp_arg,
+                self._data_dev, xs)
+            ys = jax.device_get(ys)  # leaves (S, R): ONE fetch per chunk
+            for s in range(S):
+                recs = self._chunk_records(
+                    {k2: v[s] for k2, v in ys.items()}, per[s][1], n,
+                    r0 + done, times[s])
+                histories[s].extend(recs)
+                times[s] = recs[-1].sim_time
+            done += n
+            if self.eval_fn and (done % eval_every == 0 or done == max_rounds):
+                globals_S = _unstack_members(
+                    jax.tree.map(lambda x: x[:, 0], params_S), S)
+                for s in range(S):
+                    ev = self.eval_fn(globals_S[s])
+                    rec = histories[s][-1]
+                    rec.test_acc = float(ev.get("acc", np.nan))
+                    rec.test_loss = float(ev.get("loss", np.nan))
+        # One jitted call slices every member's (params, opt, key, global
+        # model) out of the stacked buffers — per-member eager indexing
+        # would cost S x leaves separate dispatches.
+        members = _unstack_members(
+            (params_S, opt_S, key_S,
+             jax.tree.map(lambda x: x[:, 0], params_S)), S)
+        out_states, results = [], []
+        for s in range(S):
+            p_s, o_s, k_s, global_s = members[s]
+            st = self._rebuild_state(
+                states[s], p_s, o_s, k_s, r0 + done, times[s],
+                mats[s][0], mats[s][1])
+            out_states.append(st)
+            results.append(SimResult(
+                history=histories[s], params=global_s,
+                label=f"{self.label}[seed={st.seed}]", fed=self.fed))
+        return FleetResult(states=out_states, results=results)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated stateful facade
+# ---------------------------------------------------------------------------
+
+_FLSIM_WARNED = False
+
+
+class FLSimulation:
+    """Deprecated: the old mutable simulator interface, now a thin shim
+    holding a (Simulator, SimState) pair. Prefer building a `Simulator`
+    directly (or declaratively via
+    `repro.federated.experiment.ExperimentSpec.build()`) and threading
+    `SimState` through `run()` — that is what unlocks `run_fleet`,
+    checkpoint/resume, and multi-seed sweeps. Emits one
+    `DeprecationWarning` per process."""
+
+    def __init__(
+        self,
+        loss_fn: Callable,
+        init_params: Any,
+        client_iterators: List,
+        data_sizes: np.ndarray,
+        fed: FedConfig,
+        opt: Optimizer,
+        pop: delay.DevicePopulation,
+        wireless: Optional[WirelessConfig] = None,
+        eval_fn: Optional[Callable] = None,
+        label: str = "defl",
+        backend: str = "scan",
+        impl: str = "xla",
+        scenario: Optional[Any] = None,
+    ):
+        global _FLSIM_WARNED
+        if not _FLSIM_WARNED:
+            warnings.warn(
+                "FLSimulation is deprecated: build a "
+                "repro.federated.simulation.Simulator (or an "
+                "repro.federated.experiment.ExperimentSpec) and thread "
+                "SimState through run()/run_fleet() instead.",
+                DeprecationWarning, stacklevel=2)
+            _FLSIM_WARNED = True
+        self.sim = Simulator(
+            loss_fn, init_params, client_iterators, data_sizes, fed, opt,
+            pop, wireless=wireless, eval_fn=eval_fn, label=label,
+            backend=backend, impl=impl, scenario=scenario)
+        self.state = self.sim.init(fed.seed)
+
+    def __getattr__(self, name):
+        # Delegate config views (fed, pop, wireless, trace_count,
+        # _update_bits, round_times, _data_dev, ...) to the core. Note
+        # __getattr__ only fires for names not found on the shim itself.
+        if name in ("sim", "state"):
+            raise AttributeError(name)
+        return getattr(self.sim, name)
+
+    @property
+    def eval_fn(self):
+        return self.sim.eval_fn
+
+    @eval_fn.setter
+    def eval_fn(self, fn):
+        self.sim.eval_fn = fn
+
+    @property
+    def params(self):
+        return self.sim.params(self.state)
+
+    def block_until_ready(self) -> None:
+        self.sim.block_until_ready(self.state)
+
+    def run_round(self, real=None, t_cm_clients=None) -> Dict:
+        self.state, metrics = self.sim.run_round(self.state, real,
+                                                 t_cm_clients)
+        return metrics
+
+    def run(
+        self,
+        max_rounds: int = 200,
+        target_acc: Optional[float] = None,
+        eval_every: int = 1,
+        max_sim_time: Optional[float] = None,
+    ) -> SimResult:
+        self.state, res = self.sim.run(
+            self.state, max_rounds=max_rounds, target_acc=target_acc,
+            eval_every=eval_every, max_sim_time=max_sim_time)
+        return res

@@ -39,6 +39,17 @@ def mnist_cnn_small() -> CNNConfig:
                      conv_channels=(8, 16), fc_dim=64)
 
 
+def mnist_cnn_tiny() -> CNNConfig:
+    """Overhead-scale variant: 1x1 kernels (the im2col path degenerates to
+    pointwise GEMMs) and minimal widths, so one round's fwd/bwd compute
+    sits at dispatch-overhead scale (~sub-ms). The fleet rows of the
+    round-step bench run on it: what `run_fleet` amortizes is per-run
+    driver/dispatch cost, which GEMM time would otherwise mask entirely
+    (see EXPERIMENTS.md §Driver overhead)."""
+    return CNNConfig(name="cnn-mnist-tiny", input_hw=(28, 28), in_channels=1,
+                     conv_channels=(1, 2), kernel=1, fc_dim=8)
+
+
 def cifar_cnn() -> CNNConfig:
     return CNNConfig(name="cnn-cifar", input_hw=(32, 32), in_channels=3)
 

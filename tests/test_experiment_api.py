@@ -1,0 +1,286 @@
+"""The declarative experiment API and the vmapped fleet:
+
+  * ExperimentSpec.build() wires model/data/population/plan into a
+    functional-core Simulator; the spec registry resolves by name.
+  * run_fleet over 8 seeds is bit-identical per-seed to 8 sequential
+    run() calls at those seeds (loss history, Eq. 8 clocks, participation
+    counts, final params) on multiple registry scenarios — vmap batches
+    the pure chunk graph, it must not change its math.
+  * The legacy FLSimulation shim delegates to the same core (bit-parity)
+    and emits its DeprecationWarning exactly once per process.
+  * run()/run_fleet() validate their arguments up front on every backend
+    and run_round(real=...) without a scenario raises.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
+from repro.core import delay
+from repro.federated import experiment, scenarios, simulation
+from repro.federated.experiment import ExperimentSpec
+from repro.federated.simulation import FLSimulation, Simulator
+from repro.optim import sgd
+
+
+def _quad_loss(params, batch):
+    diff = params["w"] - batch["target"]
+    return 0.5 * jnp.sum(diff * diff), {}
+
+
+class _TargetIterator:
+    def __init__(self, target, batch_size):
+        self.target = np.asarray(target, np.float32)
+        self.batch_size = batch_size
+
+    def next_batch(self):
+        return {"target": np.tile(self.target, (self.batch_size, 1))}
+
+
+def _quad_sim(backend="scan", scenario=None, compress=True, seed=0):
+    M, d, b = 4, 16, 2
+    fed = FedConfig(n_devices=M, batch_size=b, lr=0.05, seed=seed,
+                    compress_updates=compress)
+    scen = scenarios.get(scenario) if scenario is not None else None
+    pop = (scen.population(M, seed=seed) if scen is not None else
+           delay.draw_population(M, ComputeConfig(), WirelessConfig(), 0, 0.0))
+
+    def factory(s):
+        return [_TargetIterator(np.linspace(0.0, m, d) * 0.1, b)
+                for m in range(M)]
+
+    return Simulator(
+        _quad_loss, {"w": jnp.zeros(d)}, factory,
+        np.array([10, 20, 30, 40]), fed, sgd(fed.lr, 0.9), pop,
+        backend=backend, scenario=scen)
+
+
+# ---------------------------------------------------------------------------
+# ExperimentSpec
+# ---------------------------------------------------------------------------
+
+
+def test_spec_build_and_run_smoke():
+    spec = experiment.get("mnist_smoke").replace(with_eval=False)
+    sim = spec.build()
+    assert sim._data_dev is not None  # BatchIterator clients -> device path
+    state, res = sim.run(sim.init(), max_rounds=3, eval_every=3)
+    assert res.rounds == 3 and sim.trace_count == 1
+    assert np.isfinite(res.history[-1].train_loss)
+    assert state.round == 3
+
+
+def test_spec_registry():
+    names = experiment.names()
+    for required in ("mnist_paper", "cifar_paper", "mnist_smoke",
+                     "mnist_storm"):
+        assert required in names
+    spec = experiment.get("mnist_smoke")
+    assert experiment.get(spec) is spec  # idempotent on instances
+    with pytest.raises(KeyError):
+        experiment.get("no_such_experiment")
+    with pytest.raises(ValueError):
+        experiment.register("mnist_smoke", spec)
+
+
+def test_spec_plan_or_fed():
+    """plan=True re-solves (b*, theta*) against the population; the
+    resolved fed carries the planned values (batch capped) while
+    plan=False runs fed as-is."""
+    base = ExperimentSpec(
+        fed=FedConfig(n_devices=10, epsilon=0.01, nu=2.0,
+                      c=experiment.CALIBRATED_C, lr=0.05))
+    assert base.resolve_plan() is None
+    assert base.resolve_fed() == base.fed
+    planned = base.replace(plan=True)
+    plan = planned.resolve_plan()
+    fed = planned.resolve_fed()
+    assert fed.batch_size == min(plan.b, planned.batch_cap)
+    assert fed.theta == plan.theta
+    # A straggler population shifts the plan (scenario-aware solve).
+    storm = planned.replace(scenario="stragglers")
+    assert storm.resolve_plan().overall_pred > plan.overall_pred
+
+
+def test_spec_unknown_names_raise():
+    with pytest.raises(KeyError):
+        ExperimentSpec(model="no_such_model").model_config()
+
+
+# ---------------------------------------------------------------------------
+# Fleet: bit-identity with sequential runs
+# ---------------------------------------------------------------------------
+
+
+def _assert_member_matches(res, fres):
+    for a, b in zip(jax.tree.leaves(res.params), jax.tree.leaves(fres.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert len(res.history) == len(fres.history)
+    for x, y in zip(res.history, fres.history):
+        assert x.round == y.round
+        # nan == nan must pass (zero-participation rounds).
+        np.testing.assert_array_equal(x.train_loss, y.train_loss)
+        assert x.sim_time == y.sim_time
+        assert x.T_cm == y.T_cm and x.T_cp == y.T_cp
+        assert x.n_participants == y.n_participants
+        assert x.uplink_bits == y.uplink_bits
+
+
+@pytest.mark.parametrize("scenario", ["dropout", "hetero_storm"])
+def test_fleet_bit_identical_to_sequential_8_seeds(scenario):
+    """The acceptance contract: run_fleet(seeds=8) == 8 sequential run()
+    calls at those seeds, bit for bit, on registry scenarios (loss
+    history, Eq. 8 clocks, participation, params)."""
+    sim = _quad_sim("scan", scenario)
+    seeds = list(range(8))
+    fleet = sim.run_fleet(seeds=seeds, max_rounds=7, eval_every=3)
+    assert len(fleet) == 8
+    for s in seeds:
+        _, res = sim.run(sim.init(s), max_rounds=7, eval_every=3)
+        _assert_member_matches(res, fleet.results[s])
+        assert fleet.states[s].seed == s and fleet.states[s].round == 7
+
+
+def test_fleet_bit_identical_cnn_device_resident():
+    """Same contract on the real CNN harness with the device-resident
+    in-graph data gather (BatchIterator factory -> per-seed streams)."""
+    spec = experiment.get("mnist_smoke").replace(
+        with_eval=False, scenario="dropout",
+        fed=FedConfig(n_devices=3, batch_size=8, theta=0.62, lr=0.05,
+                      compress_updates=True))
+    sim = spec.build()
+    seeds = [0, 1, 2, 3]
+    fleet = sim.run_fleet(seeds=seeds, max_rounds=5, eval_every=2)
+    for s in seeds:
+        _, res = sim.run(sim.init(s), max_rounds=5, eval_every=2)
+        _assert_member_matches(res, fleet.results[s])
+
+
+def test_fleet_accepts_prebuilt_states_and_summary():
+    sim = _quad_sim("scan", None)
+    states = [sim.init(s) for s in (3, 5)]
+    fleet = sim.run_fleet(states=states, max_rounds=4, eval_every=2)
+    _, ref = sim.run(sim.init(3), max_rounds=4, eval_every=2)
+    _assert_member_matches(ref, fleet.results[0])
+    s = fleet.summary()
+    assert set(s) == {"final_loss_mean", "final_loss_std",
+                      "total_time_mean", "total_time_std"}
+    assert fleet.loss_history().shape == (2, 4)
+
+
+def test_fleet_validation():
+    sim = _quad_sim("scan", None)
+    with pytest.raises(ValueError):
+        sim.run_fleet(max_rounds=3)  # neither seeds nor states
+    with pytest.raises(ValueError):
+        sim.run_fleet(states=[], max_rounds=3)
+    with pytest.raises(ValueError):
+        _quad_sim("batched", None).run_fleet(seeds=[0], max_rounds=3)
+    # mismatched round cursors can't run in lockstep
+    s0 = sim.init(0)
+    s1, _ = sim.run(sim.init(1), max_rounds=2)
+    with pytest.raises(ValueError):
+        sim.run_fleet(states=[s0, s1], max_rounds=2)
+
+
+def test_fleet_rejects_shared_iterator_list():
+    """A Simulator built on a fixed iterator list (legacy form) cannot
+    fleet: every member would alias — and advance — the same live
+    iterators, silently breaking per-seed bit-identity. Must raise, not
+    produce wrong results."""
+    M, d, b = 4, 16, 2
+    fed = FedConfig(n_devices=M, batch_size=b, lr=0.05)
+    pop = delay.draw_population(M, ComputeConfig(), WirelessConfig(), 0, 0.0)
+    iters = [_TargetIterator(np.linspace(0.0, m, d) * 0.1, b)
+             for m in range(M)]
+    sim = Simulator(_quad_loss, {"w": jnp.zeros(d)}, iters,
+                    np.array([10, 20, 30, 40]), fed, sgd(fed.lr), pop,
+                    backend="scan")
+    with pytest.raises(ValueError, match="factory"):
+        sim.run_fleet(seeds=[0, 1], max_rounds=2)
+
+
+# ---------------------------------------------------------------------------
+# Validation & error semantics (all backends)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["loop", "batched", "scan"])
+def test_run_args_validated_up_front(backend):
+    """No silent clamping: bad max_rounds/eval_every raise on every
+    backend before any work is dispatched."""
+    sim = _quad_sim(backend, None, compress=False)
+    state = sim.init()
+    for bad in (0, -1, 1.5):
+        with pytest.raises(ValueError):
+            sim.run(state, max_rounds=bad)
+        with pytest.raises(ValueError):
+            sim.run(state, max_rounds=3, eval_every=bad)
+
+
+@pytest.mark.parametrize("backend", ["loop", "batched"])
+def test_run_round_real_requires_scenario(backend):
+    """run_round(real=...) on a scenario-less sim used to be silently
+    ignored; it now raises."""
+    sim = _quad_sim(backend, None, compress=False)
+    scen = scenarios.get("dropout")
+    real = scen.stream(scen.population(4), 0).next_round()
+    with pytest.raises(ValueError, match="no scenario"):
+        sim.run_round(sim.init(), real=real)
+    # With a scenario, an explicit realization is accepted.
+    ssim = _quad_sim(backend, "dropout", compress=False)
+    _, metrics = ssim.run_round(ssim.init(), real=real)
+    assert metrics["n_participants"] == real.n_participants
+
+
+def test_run_chunk_requires_scan_and_validates():
+    sim = _quad_sim("scan", None)
+    state, records = sim.run_chunk(sim.init(), rounds=3)
+    assert [r.round for r in records] == [1, 2, 3]
+    assert state.round == 3
+    with pytest.raises(ValueError):
+        sim.run_chunk(sim.init(), rounds=0)
+    with pytest.raises(ValueError):
+        _quad_sim("batched", None).run_chunk(sim.init(), rounds=2)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated shim
+# ---------------------------------------------------------------------------
+
+
+def _shim_args(seed=0):
+    M, d, b = 4, 16, 2
+    fed = FedConfig(n_devices=M, batch_size=b, lr=0.05, seed=seed,
+                    compress_updates=True)
+    pop = delay.draw_population(M, ComputeConfig(), WirelessConfig(), 0, 0.0)
+    iters = [_TargetIterator(np.linspace(0.0, m, d) * 0.1, b)
+             for m in range(M)]
+    return (_quad_loss, {"w": jnp.zeros(d)}, iters,
+            np.array([10, 20, 30, 40]), fed, sgd(fed.lr, 0.9), pop)
+
+
+def test_shim_warns_exactly_once_and_matches_core():
+    simulation._FLSIM_WARNED = False
+    with pytest.warns(DeprecationWarning, match="FLSimulation is deprecated"):
+        shim = FLSimulation(*_shim_args(), backend="scan")
+    # Second construction: no second warning (module-level once latch).
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        FLSimulation(*_shim_args(), backend="scan")
+    assert simulation._FLSIM_WARNED
+    # The shim is the same math as the functional core, bit for bit.
+    res = shim.run(max_rounds=5, eval_every=2)
+    core = _quad_sim("scan", None)
+    _, ref = core.run(core.init(), max_rounds=5, eval_every=2)
+    for a, b in zip(jax.tree.leaves(ref.params), jax.tree.leaves(res.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ([r.train_loss for r in ref.history]
+            == [r.train_loss for r in res.history])
+    # Stateful conveniences still work: params view, round_times, bits.
+    assert shim.trace_count == 1
+    assert shim._update_bits() == core._update_bits()
+    assert shim.state.round == 5

@@ -11,7 +11,7 @@ from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
 from repro.core import defl, delay
 from repro.data import BatchIterator, make_mnist_like
 from repro.federated.partition import partition_dirichlet, partition_sizes
-from repro.federated.simulation import FLSimulation
+from repro.federated.simulation import Simulator
 from repro.models import cnn
 from repro.optim import sgd
 from repro.utils.tree import tree_bytes
@@ -41,7 +41,7 @@ def _make_sim(data, test, cfg, params, fed, pop, label):
         logits = cnn.cnn_forward(cfg, p, xb)
         return jnp.mean((jnp.argmax(logits, -1) == yb).astype(jnp.float32))
 
-    return FLSimulation(
+    return Simulator(
         functools.partial(cnn.cnn_loss, cfg), params, iters,
         partition_sizes(parts), fed, sgd(fed.lr), pop,
         eval_fn=lambda p: {"acc": float(eval_acc(p))}, label=label)
@@ -52,7 +52,7 @@ def test_defl_trains_and_tracks_time(mnist_setup):
     fed = FedConfig(n_devices=4, batch_size=16, theta=0.15, nu=2.0, lr=0.05)
     pop = delay.draw_population(4, CAL_CC, WirelessConfig(), 0, 0.2)
     sim = _make_sim(data, test, cfg, params, fed, pop, "defl")
-    res = sim.run(max_rounds=4, eval_every=2)
+    _, res = sim.run(sim.init(), max_rounds=4, eval_every=2)
     assert res.rounds == 4
     # Simulated clock strictly increases by Eq. 8 per round.
     times = [r.sim_time for r in res.history]

@@ -13,7 +13,7 @@ import pytest
 from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
 from repro.core import delay
 from repro.federated import scenarios
-from repro.federated.simulation import FLSimulation
+from repro.federated.simulation import Simulator
 from repro.models import cnn
 from repro.optim import sgd
 
@@ -44,10 +44,15 @@ def _quad_sim(backend, scenario, compress=True, momentum=0.9, seed=0):
            delay.draw_population(M, ComputeConfig(), WirelessConfig(), 0, 0.0))
     iters = [_TargetIterator(np.linspace(0.0, m, d) * 0.1, b)
              for m in range(M)]
-    return FLSimulation(
+    return Simulator(
         _quad_loss, {"w": jnp.zeros(d)}, iters,
         np.array([10, 20, 30, 40]), fed, sgd(fed.lr, momentum), pop,
         backend=backend, scenario=scen)
+
+
+def _run(sim, **kw):
+    _, res = sim.run(sim.init(), **kw)
+    return res
 
 
 def _assert_bit_identical(res_scan, res_batched):
@@ -70,10 +75,10 @@ def _assert_bit_identical(res_scan, res_batched):
 @pytest.mark.parametrize("scenario", [None] + list(scenarios.names()))
 @pytest.mark.parametrize("compress", [False, True])
 def test_scan_bit_identical_to_batched(scenario, compress):
-    rb = _quad_sim("batched", scenario, compress).run(
-        max_rounds=7, eval_every=3)
+    rb = _run(_quad_sim("batched", scenario, compress),
+              max_rounds=7, eval_every=3)
     sim = _quad_sim("scan", scenario, compress)
-    rs = sim.run(max_rounds=7, eval_every=3)
+    rs = _run(sim, max_rounds=7, eval_every=3)
     _assert_bit_identical(rs, rb)
     assert sim.trace_count == 1
 
@@ -82,12 +87,15 @@ def test_scan_single_trace_over_chunks_and_ragged_tail():
     """8 rounds at eval_every=3 -> two full chunks + a padded 2-round
     final chunk, all through ONE compiled trace."""
     sim = _quad_sim("scan", "hetero_storm")
-    res = sim.run(max_rounds=8, eval_every=3)
+    state = sim.init()
+    state, res = sim.run(state, max_rounds=8, eval_every=3)
     assert sim.trace_count == 1
     assert [r.round for r in res.history] == list(range(1, 9))
-    # A second run on the same sim reuses the trace (same chunk length).
-    sim.run(max_rounds=8, eval_every=3)
+    # A second run from the returned state reuses the trace (same chunk
+    # length) and continues the round numbering.
+    state, res2 = sim.run(state, max_rounds=8, eval_every=3)
     assert sim.trace_count == 1
+    assert [r.round for r in res2.history] == list(range(9, 17))
 
 
 def test_scan_eval_every_longer_than_run():
@@ -96,7 +104,7 @@ def test_scan_eval_every_longer_than_run():
     sim = _quad_sim("scan", None)
     calls = []
     sim.eval_fn = lambda p: calls.append(1) or {"acc": 0.0}
-    res = sim.run(max_rounds=4, eval_every=50)
+    res = _run(sim, max_rounds=4, eval_every=50)
     assert sim.trace_count == 1
     assert len(res.history) == 4 and len(calls) == 1
     assert res.history[-1].test_acc is not None
@@ -108,7 +116,7 @@ def test_scan_eval_boundary_calls():
     sim = _quad_sim("scan", None)
     calls = []
     sim.eval_fn = lambda p: calls.append(1) or {"acc": 0.0}
-    res = sim.run(max_rounds=7, eval_every=3)
+    res = _run(sim, max_rounds=7, eval_every=3)
     assert len(calls) == 3  # rounds 3, 6, 7
     evald = [r.round for r in res.history if r.test_acc is not None]
     assert evald == [3, 6, 7]
@@ -119,8 +127,9 @@ def test_scan_resumed_run_after_donation():
     chunk must not poison run #2 (state is rebound to the returned
     arrays), and training continues from run #1's state."""
     sim = _quad_sim("scan", None)
-    r1 = sim.run(max_rounds=4, eval_every=2)
-    r2 = sim.run(max_rounds=4, eval_every=2)
+    state = sim.init()
+    state, r1 = sim.run(state, max_rounds=4, eval_every=2)
+    state, r2 = sim.run(state, max_rounds=4, eval_every=2)
     assert r1.rounds == 4 and r2.rounds == 4
     for leaf in jax.tree.leaves(r2.params):
         assert np.all(np.isfinite(np.asarray(leaf)))
@@ -132,12 +141,12 @@ def test_scan_max_sim_time_truncates_history():
     """History stops at the first round exceeding max_sim_time, like the
     per-round backends (the already-in-flight chunk still completes on
     device — documented deviation for the params)."""
-    ref = _quad_sim("batched", "uniform").run(max_rounds=6)
+    ref = _run(_quad_sim("batched", "uniform"), max_rounds=6)
     budget = ref.history[2].sim_time  # exactly 3 rounds' worth
-    rb = _quad_sim("batched", "uniform").run(max_rounds=6, eval_every=2,
-                                             max_sim_time=budget)
-    rs = _quad_sim("scan", "uniform").run(max_rounds=6, eval_every=2,
-                                          max_sim_time=budget)
+    rb = _run(_quad_sim("batched", "uniform"), max_rounds=6, eval_every=2,
+              max_sim_time=budget)
+    rs = _run(_quad_sim("scan", "uniform"), max_rounds=6, eval_every=2,
+              max_sim_time=budget)
     assert len(rs.history) == len(rb.history)
     assert rs.history[-1].sim_time == rb.history[-1].sim_time
 
@@ -155,7 +164,7 @@ def _cnn_sim(backend, compress, seed=0):
     iters = [BatchIterator(data, p, b, seed=seed + i)
              for i, p in enumerate(parts)]
     pop = delay.draw_population(M, ComputeConfig(), WirelessConfig(), 0, 0.0)
-    return FLSimulation(
+    return Simulator(
         functools.partial(cnn.cnn_loss, cfg),
         cnn.init_cnn(cfg, jax.random.PRNGKey(seed)),
         iters, partition_sizes(parts), fed, sgd(fed.lr), pop, backend=backend)
@@ -167,10 +176,10 @@ def test_scan_cnn_device_resident_parity(compress):
     the device-resident path (uploaded arrays + in-graph index gather) —
     and stays bit-identical to the batched backend's host-gathered
     batches."""
-    rb = _cnn_sim("batched", compress).run(max_rounds=5, eval_every=2)
+    rb = _run(_cnn_sim("batched", compress), max_rounds=5, eval_every=2)
     sim = _cnn_sim("scan", compress)
     assert sim._data_dev is not None  # in-graph gather path actually taken
-    rs = sim.run(max_rounds=5, eval_every=2)
+    rs = _run(sim, max_rounds=5, eval_every=2)
     _assert_bit_identical(rs, rb)
     assert sim.trace_count == 1
 
@@ -202,9 +211,9 @@ def test_scan_uplink_bits_accounting():
     from repro.federated import compression
 
     sim = _quad_sim("scan", "dropout")
-    res = sim.run(max_rounds=5, eval_every=2)
-    bits = compression.compressed_bits(sim.params)
+    res = _run(sim, max_rounds=5, eval_every=2)
+    bits = compression.compressed_bits(res.params)
     for r in res.history:
         assert r.uplink_bits == r.n_participants * bits
-    res = _quad_sim("batched", None).run(max_rounds=2)
+    res = _run(_quad_sim("batched", None), max_rounds=2)
     assert all(r.uplink_bits == 4 * bits for r in res.history)

@@ -9,7 +9,7 @@ from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
 from repro.core import delay
 from repro.federated import scenarios
 from repro.federated.mesh_rounds import build_round_step, replicate_clients
-from repro.federated.simulation import FLSimulation
+from repro.federated.simulation import Simulator
 from repro.optim import sgd
 
 
@@ -36,10 +36,15 @@ def _quad_sim(backend, scenario, compress=True, momentum=0.9, seed=0):
            delay.draw_population(M, ComputeConfig(), WirelessConfig(), 0, 0.0))
     iters = [_TargetIterator(np.linspace(0.0, m, d) * 0.1, b)
              for m in range(M)]
-    return FLSimulation(
+    return Simulator(
         _quad_loss, {"w": jnp.zeros(d)}, iters,
         np.array([10, 20, 30, 40]), fed, sgd(fed.lr, momentum), pop,
         backend=backend, scenario=scen)
+
+
+def _run(sim, **kw):
+    _, res = sim.run(sim.init(), **kw)
+    return res
 
 
 # ---------------------------------------------------------------------------
@@ -148,8 +153,8 @@ def test_plan_for_scenario_replans():
 def _run_pair(scenario, rounds=6, **kw):
     out = {}
     for backend in ("loop", "batched"):
-        res = _quad_sim(backend, scenario, **kw).run(max_rounds=rounds)
-        out[backend] = res
+        out[backend] = _run(_quad_sim(backend, scenario, **kw),
+                            max_rounds=rounds)
     return out
 
 
@@ -175,8 +180,8 @@ def test_full_mask_bit_compatible_with_legacy_batched():
     """backend='batched' under the uniform scenario (full participation
     mask through the new masked path) is bit-identical to the legacy
     no-scenario batched path at the same seed."""
-    ra = _quad_sim("batched", None).run(max_rounds=5)
-    rb = _quad_sim("batched", "uniform").run(max_rounds=5)
+    ra = _run(_quad_sim("batched", None), max_rounds=5)
+    rb = _run(_quad_sim("batched", "uniform"), max_rounds=5)
     for a, b in zip(jax.tree.leaves(ra.params), jax.tree.leaves(rb.params)):
         assert np.array_equal(np.asarray(a), np.asarray(b))
     assert ([r.train_loss for r in ra.history]
@@ -187,7 +192,7 @@ def test_scenario_run_single_trace():
     """Per-round masks / channel drift are traced values: one compile for
     the whole run (the donation/deferred-sync perf story is intact)."""
     sim = _quad_sim("batched", "hetero_storm")
-    sim.run(max_rounds=8)
+    _run(sim, max_rounds=8)
     assert sim.trace_count == 1
 
 
@@ -261,8 +266,9 @@ def test_zero_participation_round(backend):
     blackout = scenarios.get("dropout").replace(
         name="blackout_tmp", dropout=1.0, link_failure=0.0)
     sim = _quad_sim(backend, blackout)
-    before = jax.tree.map(np.asarray, sim.params)
-    res = sim.run(max_rounds=3)
+    state = sim.init()
+    before = jax.tree.map(np.asarray, sim.params(state))
+    _, res = sim.run(state, max_rounds=3)
     assert all(r.n_participants == 0 for r in res.history)
     times = [r.sim_time for r in res.history]
     assert times[0] > 0 and all(b > a for a, b in zip(times, times[1:]))
@@ -276,7 +282,7 @@ def test_simulation_clock_matches_manual_accounting():
     channel and participation (independent recomputation)."""
     scen = scenarios.get("hetero_storm")
     sim = _quad_sim("batched", scen, seed=3)
-    res = sim.run(max_rounds=5)
+    res = _run(sim, max_rounds=5)
     pop = sim.pop
     stream = scen.stream(pop, sim.fed.seed)
     bits = sim._update_bits()

@@ -1,6 +1,7 @@
 """Backend parity: the compiled stacked-client round (backend='batched',
 with donated buffers and optional in-graph int8 compression) must
-reproduce the per-client host loop (backend='loop') under a fixed seed."""
+reproduce the per-client host loop (backend='loop') under a fixed seed —
+through the functional core (Simulator + SimState threading)."""
 import functools
 
 import jax
@@ -10,7 +11,7 @@ import pytest
 
 from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
 from repro.core import delay
-from repro.federated.simulation import FLSimulation
+from repro.federated.simulation import Simulator
 from repro.models import cnn
 from repro.optim import sgd
 
@@ -38,16 +39,21 @@ def _quad_sim(backend, compress, impl="xla", momentum=0.0, seed=0):
     pop = delay.draw_population(M, ComputeConfig(), WirelessConfig(), 0, 0.0)
     iters = [_TargetIterator(np.linspace(0.0, m, d) * 0.1, b)
              for m in range(M)]
-    return FLSimulation(
+    return Simulator(
         _quad_loss, {"w": jnp.zeros(d)}, iters,
         np.array([10, 20, 30, 40]), fed, sgd(fed.lr, momentum), pop,
         backend=backend, impl=impl)
 
 
+def _run(sim, **kw):
+    _, res = sim.run(sim.init(), **kw)
+    return res
+
+
 def _run_pair(make_sim, rounds=5, **kw):
     out = {}
     for backend in ("loop", "batched"):
-        res = make_sim(backend, **kw).run(max_rounds=rounds)
+        res = _run(make_sim(backend, **kw), max_rounds=rounds)
         out[backend] = (res.params, [r.train_loss for r in res.history])
     return out
 
@@ -76,8 +82,8 @@ def test_backend_parity_quadratic_momentum():
 def test_backend_parity_quadratic_pallas_impl():
     """impl='pallas' routes quantize/dequantize through kernels/quantize/
     ops (interpret mode on CPU) and must match the xla reference path."""
-    ref = _quad_sim("batched", compress=True, impl="xla").run(max_rounds=3)
-    pal = _quad_sim("batched", compress=True, impl="pallas").run(max_rounds=3)
+    ref = _run(_quad_sim("batched", compress=True, impl="xla"), max_rounds=3)
+    pal = _run(_quad_sim("batched", compress=True, impl="pallas"), max_rounds=3)
     for a, b in zip(jax.tree.leaves(ref.params), jax.tree.leaves(pal.params)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
 
@@ -95,7 +101,7 @@ def _cnn_sim(backend, compress, seed=0):
     iters = [BatchIterator(data, p, b, seed=seed + i)
              for i, p in enumerate(parts)]
     pop = delay.draw_population(M, ComputeConfig(), WirelessConfig(), 0, 0.0)
-    return FLSimulation(
+    return Simulator(
         functools.partial(cnn.cnn_loss, cfg), cnn.init_cnn(cfg, jax.random.PRNGKey(seed)),
         iters, partition_sizes(parts), fed, sgd(fed.lr), pop, backend=backend)
 
@@ -115,8 +121,9 @@ def test_batched_resumed_run_after_donation():
     """run() twice on one sim: donated buffers from run #1's last round
     must not poison run #2 (state is rebound to the returned arrays)."""
     sim = _quad_sim("batched", compress=True)
-    r1 = sim.run(max_rounds=2)
-    r2 = sim.run(max_rounds=2)
+    state = sim.init()
+    state, r1 = sim.run(state, max_rounds=2)
+    state, r2 = sim.run(state, max_rounds=2)
     assert r1.rounds == 2 and r2.rounds == 2
     for leaf in jax.tree.leaves(r2.params):
         assert np.all(np.isfinite(np.asarray(leaf)))
@@ -131,7 +138,7 @@ def test_batched_eval_boundary_sync():
     sim = _cnn_sim("batched", compress=False)
     acc_calls = []
     sim.eval_fn = lambda p: acc_calls.append(1) or {"acc": 0.0}
-    res = sim.run(max_rounds=4, eval_every=2)
+    res = _run(sim, max_rounds=4, eval_every=2)
     assert len(acc_calls) == 2  # rounds 2 and 4 only
     assert all(isinstance(r.train_loss, float) for r in res.history)
 
@@ -144,8 +151,9 @@ def test_compressed_bits_delay_accounting():
 
     plain = _quad_sim("batched", compress=False)
     comp = _quad_sim("batched", compress=True)
-    raw_bits = tree_bytes(plain.params) * 8.0
+    raw_bits = tree_bytes(plain.params(plain.init())) * 8.0
     assert plain._update_bits() == raw_bits
-    assert comp._update_bits() == compression.compressed_bits(comp.params)
+    assert comp._update_bits() == compression.compressed_bits(
+        comp.params(comp.init()))
     assert comp._update_bits() != raw_bits / 4.0
     assert comp._update_bits() < raw_bits / 3.0
