@@ -1,47 +1,52 @@
 """Ablation: the synchronous straggler bound per edge scenario
 (Eqs. 5/7 — T_cp and T_cm are max_m over devices).
 
-Runs the scenario registry (federated/scenarios.py) and reports how each
-population's straggler terms inflate the DEFL-optimal plan and its
-predicted overall time, vs a hypothetical mean-device (asynchronous-ideal)
-system on the same draw. Partial-participation scenarios additionally
-shrink the effective M in the Eq. 12 round-count model
-(defl.make_plan(participation=...)).
+Declared as a `Study` with one plan=True arm per registered scenario
+(federated/scenarios.py): each arm's analytic operating point
+(`Study.plans()`) is the DEFL plan solved against that scenario's
+realized population — straggler terms inflate it — compared against a
+hypothetical mean-device (asynchronous-ideal) system on the same draw.
+Partial-participation scenarios additionally shrink the effective M in
+the Eq. 12 round-count model (visible as plan.problem.M).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (
-    CALIBRATED_C,
-    CALIBRATED_COMPUTE,
-    cnn_update_bits,
-)
-from repro.configs.base import FedConfig, WirelessConfig
+from benchmarks.common import CALIBRATED_C
+from repro.configs.base import FedConfig
 from repro.core import delay, kkt
 from repro.federated import scenarios
+from repro.federated.experiment import ExperimentSpec
+from repro.federated.study import Study
 
 M_DEVICES = 10  # the paper's population size
 
 
-def run(quick: bool = False, scenario: str = ""):
-    bits = cnn_update_bits("mnist")
-    wc = WirelessConfig()
-    fed = FedConfig(n_devices=M_DEVICES, epsilon=0.01, nu=2.0, c=CALIBRATED_C)
-    rows = []
+def study(scenario: str = "") -> Study:
     names = (scenario,) if scenario else scenarios.names()
-    for name in names:
-        scen = scenarios.get(name)
-        pop = scen.population(M_DEVICES, CALIBRATED_COMPUTE, wc, seed=0)
-        t_cm = delay.per_client_uplink_time(bits, wc, pop.p, pop.h)
+    fed = FedConfig(n_devices=M_DEVICES, epsilon=0.01, nu=2.0,
+                    c=CALIBRATED_C)
+    arms = [
+        (name, ExperimentSpec(fed=fed, model="mnist_cnn", dataset="mnist",
+                              scenario=name, plan=True, batch_cap=None,
+                              label=name))
+        for name in names
+    ]
+    return Study(arms=arms)
+
+
+def run(quick: bool = False, scenario: str = ""):
+    st = study(scenario)
+    plans = st.plans()
+    rows = []
+    for (name, spec), (label, plan) in zip(st.arms, plans.items()):
+        pop = spec.population()
+        t_cm = delay.per_client_uplink_time(
+            spec.update_bits(), spec.wireless, pop.p, pop.h)
         T_cm_max, T_cm_mean = float(t_cm.max()), float(t_cm.mean())
         g_max = float(max(pop.G / pop.f))
         g_mean = float(np.mean(pop.G / pop.f))
-        # Straggler side: the actual planner (same seed -> same draw), so
-        # the effective-M participation shrinkage stays whatever
-        # defl.make_plan implements rather than a reimplementation here.
-        plan = scenarios.plan_for_scenario(
-            fed, scen, bits, cc=CALIBRATED_COMPUTE, wc=wc, seed=0)
         sol, M_eff = plan.solution, plan.problem.M
         # Mean-device hypothetical (asynchronous-ideal) on the same draw.
         prob_mean = kkt.DelayProblem(T_cm=T_cm_mean, g=g_mean, M=M_eff,

@@ -58,11 +58,17 @@ GATE_TOL = 0.9
 # is also where per-chunk dispatch overhead is maximal and the fleet's
 # one-dispatch-per-chunk amortization shows cleanest. The --check gate
 # requires the vmapped fleet to beat 8 sequential scan runs by >= 1.5x
-# at M=10 (the batching win run_fleet exists for).
+# at M=10 uncompressed (the batching win run_fleet exists for), and —
+# re-enabled by the quantizer fusion (one flat-concatenated call per
+# client; the old per-leaf form batched ~5x worse under the fleet vmap
+# and ran at ~0.9x) — >= 1.15x on the compressed twin rows
+# (fleet_s8c/scan_seq_s8c), whose extra per-member quantize compute
+# dilutes the amortization on the 2-core CPU (measured ~1.26x).
 FLEET_SEEDS = 8
 FLEET_ROUNDS = 10
 FLEET_EVAL = 1
 FLEET_GATE = 1.5
+FLEET_GATE_C = 1.15
 
 
 def _make_sim(m: int, backend: str):
@@ -126,33 +132,36 @@ def _bench_m(m: int, reps: int) -> dict:
     return best
 
 
-def _bench_fleet(m: int, reps: int) -> dict:
+def _bench_fleet(m: int, reps: int, compress: bool) -> dict:
     """Seconds per seed-round: the vmapped FLEET_SEEDS-seed fleet vs the
     same seeds run sequentially through the SAME Simulator (shared
     compiled chunk, shared device-resident dataset). Both sides include
     per-member init() and host-side chunk prep — the fleet's win is one
     dispatch + one stacked transfer per chunk instead of S.
 
-    Runs on mnist_cnn_tiny (1x1 kernels, overhead-scale) with
-    compression OFF — two deliberate choices, both about measuring the
-    driver rather than XLA:CPU kernel quirks:
-      * at mnist_cnn_small scale one round is ~25-30 ms of GEMM on the
-        2-core reference CPU (>90% compute share), and the vmapped
-        batched-GEMM graph lowers at ~0.9-1.1x of the sequential one —
-        ANY driver win is masked (same ceiling physics as scan-vs-
-        batched, EXPERIMENTS.md §Driver overhead);
-      * the int8 in-graph quantizer's many tiny per-leaf quantize/bits
-        ops batch to ~5x their single-member cost under the extra fleet
-        vmap (ROADMAP Open items), which would measure a kernel
-        regression, not dispatch amortization.
-    What remains is exactly what run_fleet exists to amortize: per-chunk
-    dispatch + host-touch cost, at FLEET_EVAL=1 cadence (one chunk per
-    round, the Fig. 2 time-to-accuracy workload) over FLEET_ROUNDS
-    rounds."""
-    fed_kw = dict(BENCH_FED, compress_updates=False)
-    fed = FedConfig(n_devices=m, **fed_kw)
-    sim = make_cnn_sim("mnist", fed, f"fleet-m{m}", seed=0, backend="scan",
-                       with_eval=False, cnn_cfg="mnist_cnn_tiny")
+    Runs on mnist_cnn_tiny (1x1 kernels, overhead-scale): at
+    mnist_cnn_small scale one round is ~25-30 ms of GEMM on the 2-core
+    reference CPU (>90% compute share), and the vmapped batched-GEMM
+    graph lowers at ~0.9-1.1x of the sequential one — ANY driver win is
+    masked (same ceiling physics as scan-vs-batched, EXPERIMENTS.md
+    §Driver overhead). What remains is exactly what run_fleet exists to
+    amortize: per-chunk dispatch + host-touch cost, at FLEET_EVAL=1
+    cadence (one chunk per round, the Fig. 2 time-to-accuracy workload)
+    over FLEET_ROUNDS rounds.
+
+    `compress` selects the plain rows (fleet_s8/scan_seq_s8, the PR 4
+    trajectory) or the int8 twins (fleet_s8c/scan_seq_s8c): the fused
+    quantizer (ONE flat-concatenated kernel call per client —
+    compression.compress_update) batches like the rest of the round
+    graph, so compressed fleets beat sequential again; the old per-leaf
+    form blew up ~5x under the extra fleet axis and forced the fleet
+    rows to run uncompressed."""
+    fed = FedConfig(n_devices=m,
+                    **dict(BENCH_FED, compress_updates=compress))
+    suffix = "_s8c" if compress else "_s8"
+    sim = make_cnn_sim("mnist", fed, f"fleet{suffix}-m{m}", seed=0,
+                       backend="scan", with_eval=False,
+                       cnn_cfg="mnist_cnn_tiny")
     seeds = list(range(FLEET_SEEDS))
     E, T = FLEET_EVAL, FLEET_ROUNDS
     sim.run_fleet(seeds=seeds, max_rounds=T, eval_every=E)  # compile fleet fn
@@ -169,7 +178,7 @@ def _bench_fleet(m: int, reps: int) -> dict:
         sim.run_fleet(seeds=seeds, max_rounds=T, eval_every=E)
         return work
 
-    sample = {"scan_seq_s8": sequential, "fleet_s8": fleet}
+    sample = {f"scan_seq{suffix}": sequential, f"fleet{suffix}": fleet}
     best = {k: float("inf") for k in sample}
     for _ in range(reps):
         for k, fn in sample.items():
@@ -187,12 +196,13 @@ def run(quick: bool = False, smoke: bool = False, out: str = "",
     timing rows plus speedup rows as a CI artifact; pass dicts as
     `speedups` / `scan_speedups` / `fleet_speedups` to receive the raw
     {m: loop/batched}, {m: batched/scan@GATE_EVAL} and
-    {m: seq/fleet@8 seeds} ratios (main --check uses these — never the
-    rounded CSV strings). smoke/quick runs never clobber the tracked
-    full-size BENCH_round_step.json trajectory; its per-round rows keep
-    the documented {m, backend, rounds_per_sec, round_ms} shape, scan
-    rows add an `eval_every` key, and the M=10 fleet rows use backends
-    'fleet_s8'/'scan_seq_s8' (seconds per seed-round)."""
+    {(m, suffix): seq/fleet@8 seeds} ratios (main --check uses these —
+    never the rounded CSV strings). smoke/quick runs never clobber the
+    tracked full-size BENCH_round_step.json trajectory; its per-round
+    rows keep the documented {m, backend, rounds_per_sec, round_ms}
+    shape, scan rows add an `eval_every` key, and the M=10 fleet rows use
+    backends 'fleet_s8'/'scan_seq_s8' (uncompressed) and
+    'fleet_s8c'/'scan_seq_s8c' (int8) in seconds per seed-round."""
     ms = [10] if smoke else ([10, 50] if quick else [10, 50, 200])
     reps = {10: 5, 50: 4, 200: 3}
     rows_json = []
@@ -241,25 +251,29 @@ def run(quick: bool = False, smoke: bool = False, out: str = "",
             # 1600 client rows — a memory-bound config the tracked
             # trajectory doesn't need (noted here rather than silently
             # skipped).
-            fbest = _bench_fleet(m, reps[m])
-            for name in ("scan_seq_s8", "fleet_s8"):
-                sec = fbest[name]
-                rows_json.append({
-                    "m": m,
-                    "backend": name,
-                    "eval_every": FLEET_EVAL,
-                    "rounds_per_sec": 1.0 / sec,
-                    "round_ms": sec * 1e3,
-                })
-                rows_csv.append((f"round_step_m{m}_{name}",
-                                 f"{sec * 1e6:.0f}", f"{1.0 / sec:.3f}"))
-            fleet_x = fbest["scan_seq_s8"] / fbest["fleet_s8"]
-            speedup_json.append(
-                {"m": m, "seeds": FLEET_SEEDS, "fleet_speedup_x": fleet_x})
-            rows_csv.append((f"round_step_m{m}_seq_over_fleet_s8", "",
-                             f"{fleet_x:.2f}"))
-            if fleet_speedups is not None:
-                fleet_speedups[m] = fleet_x
+            for compress in (False, True):
+                suffix = "_s8c" if compress else "_s8"
+                fbest = _bench_fleet(m, reps[m], compress)
+                for name in (f"scan_seq{suffix}", f"fleet{suffix}"):
+                    sec = fbest[name]
+                    rows_json.append({
+                        "m": m,
+                        "backend": name,
+                        "eval_every": FLEET_EVAL,
+                        "rounds_per_sec": 1.0 / sec,
+                        "round_ms": sec * 1e3,
+                    })
+                    rows_csv.append((f"round_step_m{m}_{name}",
+                                     f"{sec * 1e6:.0f}", f"{1.0 / sec:.3f}"))
+                fleet_x = (fbest[f"scan_seq{suffix}"]
+                           / fbest[f"fleet{suffix}"])
+                speedup_json.append(
+                    {"m": m, "seeds": FLEET_SEEDS, "compressed": compress,
+                     "fleet_speedup_x": fleet_x})
+                rows_csv.append((f"round_step_m{m}_seq_over_fleet{suffix}",
+                                 "", f"{fleet_x:.2f}"))
+                if fleet_speedups is not None:
+                    fleet_speedups[(m, suffix)] = fleet_x
     if not (quick or smoke):
         # Only full runs update the tracked artifact: a reduced sweep must
         # not clobber the M=200 rows of the cross-PR perf trajectory.
@@ -286,8 +300,11 @@ def main(argv=None):
                          f"the {GATE_TOL} noise band (equal-work run() "
                          "comparison; the chunk-fusion speedup), or if the "
                          f"vmapped {FLEET_SEEDS}-seed fleet beats "
-                         f"sequential runs by less than {FLEET_GATE}x at "
-                         "M=10 (the run_fleet batching win)")
+                         f"sequential runs by less than {FLEET_GATE}x "
+                         f"uncompressed / {FLEET_GATE_C}x int8-compressed "
+                         "at M=10 (the run_fleet batching win; the "
+                         "compressed gate exists since the quantizer "
+                         "fusion)")
     ap.add_argument("--out", default="",
                     help="also write the rows JSON here (CI artifact)")
     args = ap.parse_args(argv)
@@ -313,12 +330,14 @@ def main(argv=None):
             raise SystemExit(1)
         print(f"check: scan backend >= batched at eval_every={GATE_EVAL} "
               f"(tol {GATE_TOL}) at every M")
-        bad = {m: x for m, x in fleet_speedups.items() if x < FLEET_GATE}
+        bad = {k: x for k, x in fleet_speedups.items()
+               if x < (FLEET_GATE_C if k[1] == "_s8c" else FLEET_GATE)}
         if bad:
-            print(f"FAIL: vmapped {FLEET_SEEDS}-seed fleet below "
-                  f"{FLEET_GATE}x sequential: {bad}")
+            print(f"FAIL: vmapped {FLEET_SEEDS}-seed fleet below its gate "
+                  f"({FLEET_GATE}x plain / {FLEET_GATE_C}x int8): {bad}")
             raise SystemExit(1)
-        print(f"check: fleet >= {FLEET_GATE}x sequential at M=10")
+        print(f"check: fleet >= {FLEET_GATE}x (plain) / {FLEET_GATE_C}x "
+              f"(int8) sequential at M=10")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,161 @@
+"""Study throughput: grouped vmapped multi-arm execution vs the same arms
+run sequentially — the dispatch-amortization win the Study API exists for.
+
+Builds the Fig. 2 quick-scale comparison STRUCTURE (DEFL/FedAvg/Rand
+arms x 2 edge scenarios x realization seeds) at overhead-scale model size
+(mnist_cnn_tiny, eval_every=1): with compute at dispatch-overhead scale,
+what remains is exactly what grouping amortizes — one vmapped dispatch +
+one stacked transfer per chunk for a whole (arm x seed) group instead of
+one per member. At full Fig. 2 model scale the envelope's padded compute
+dominates on a 2-core CPU and grouping breaks even instead (documented in
+EXPERIMENTS.md §Study API) — the gate guards the driver, not the GEMMs.
+
+  PYTHONPATH=src python benchmarks/bench_study.py [--check] [--out PATH]
+
+--check exits 1 if grouped execution is below GATE x sequential (CI's
+bench-smoke job). --out writes the StudyResult JSON + timing rows (the
+uploaded CI artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0])
+
+from benchmarks.common import make_cnn_spec  # noqa: E402
+from repro.configs.base import FedConfig  # noqa: E402
+from repro.federated.study import Study  # noqa: E402
+
+SCENARIOS = ("uniform", "dropout")  # the 2-scenario smoke
+SEEDS = (0, 1, 2, 3)  # 3 arms x 4 seeds = 12 members per scenario group
+ROUNDS = 8
+GATE = 1.2
+
+# Mixed (b, V) per method — the fig2 shape structure at overhead scale:
+# the three arms of a scenario share one envelope group (b_env=4,
+# V_env=2). Envelope execution pays padded compute to buy dispatch
+# amortization, so the smoke keeps per-step compute at dispatch-overhead
+# scale where the trade is visible (the same reasoning as the fleet_s8
+# rows in bench_round_step.py — at full Fig. 2 model scale on the 2-core
+# CPU the padded GEMMs dominate instead; see EXPERIMENTS.md §Study API).
+ARM_FEDS = (
+    ("DEFL", dict(batch_size=4, theta=0.62)),                   # V=1
+    ("FedAvg", dict(batch_size=1, theta=float(np.exp(-1.0)))),  # V=2
+    ("Rand", dict(batch_size=2, theta=0.62)),                   # V=1
+)
+
+
+def build_study(seeds=SEEDS, rounds=ROUNDS) -> Study:
+    # with_eval=True at eval_every=1: the Fig. 2 time-to-accuracy cadence.
+    # Eval is where grouping bites hardest — one vmapped eval dispatch per
+    # chunk for the whole (arm x seed) group vs one host eval per member
+    # (the vmapped-fleet-eval satellite of PR 5).
+    arms = []
+    for scen in SCENARIOS:
+        for label, fkw in ARM_FEDS:
+            fed = FedConfig(n_devices=10, nu=2.0, lr=0.05, **fkw)
+            arms.append((f"{label}@{scen}", make_cnn_spec(
+                "mnist", fed, f"{label}@{scen}", n_train=240, n_test=40,
+                scenario=scen, cnn_cfg="mnist_cnn_tiny")))
+    return Study(arms=arms, seeds=seeds, max_rounds=rounds, eval_every=1)
+
+
+def run(quick: bool = False, out: str = "", speedup_out=None):
+    """(header, rows, payload): grouped vs sequential seconds per
+    member-round, their ratio, and the smoke StudyResult JSON.
+    quick=True (benchmarks/run.py --quick) halves the member/round
+    budget — informational only; the gated CI configuration is main()'s
+    full smoke. `speedup_out` (a dict) receives the raw ratio."""
+    study = (build_study(seeds=SEEDS[:2], rounds=4) if quick
+             else build_study())
+    rounds = study.max_rounds
+    # Prebuilt sims on BOTH sides: the timing compares execution (chunk
+    # prep + dispatch + fetch per member), not dataset/plan build cost.
+    built = study.build_sims()
+    members = len(study.arms) * len(study.seeds)
+    work = members * rounds
+
+    # Warm both paths (absorbs jit compilation on each side).
+    study.run(sims=built)
+    for label, _ in study.arms:
+        for seed in study.seeds:
+            built[label].run(built[label].init(seed), max_rounds=rounds,
+                             eval_every=1)
+
+    def grouped():
+        study.run(sims=built)
+        return work
+
+    def sequential():
+        for label, _ in study.arms:
+            for seed in study.seeds:
+                built[label].run(built[label].init(seed), max_rounds=rounds,
+                                 eval_every=1)
+        return work
+
+    best = {"grouped": float("inf"), "sequential": float("inf")}
+    sample = {"grouped": grouped, "sequential": sequential}
+    for _ in range(3):
+        # Interleaved best-of sampling (same rationale as
+        # bench_round_step): CPU frequency drift biases both sides
+        # equally; min drops contended samples.
+        for k, fn in sample.items():
+            t0 = time.perf_counter()
+            n = fn()
+            best[k] = min(best[k], (time.perf_counter() - t0) / n)
+    ratio = best["sequential"] / best["grouped"]
+    if speedup_out is not None:
+        speedup_out["grouped_over_sequential"] = ratio
+    result = study.run(sims=built)  # the artifact payload (post-timing)
+    rows = [
+        ("study_grouped", f"{best['grouped'] * 1e6:.0f}",
+         f"{1.0 / best['grouped']:.3f}"),
+        ("study_sequential", f"{best['sequential'] * 1e6:.0f}",
+         f"{1.0 / best['sequential']:.3f}"),
+        ("study_grouped_over_sequential", "", f"{ratio:.2f}"),
+    ]
+    payload = {
+        "study": result.to_json(),
+        "members": members,
+        "rounds": rounds,
+        "grouped_s_per_member_round": best["grouped"],
+        "sequential_s_per_member_round": best["sequential"],
+        "grouped_over_sequential": ratio,
+        "gate": GATE,
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2, default=float)
+            f.write("\n")
+    return "name,us_per_member_round,member_rounds_per_sec_or_x", rows, payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help=f"exit 1 if grouped multi-arm execution is below "
+                         f"{GATE}x the same arms run sequentially")
+    ap.add_argument("--out", default="",
+                    help="write the StudyResult JSON + timings here "
+                         "(CI artifact)")
+    args = ap.parse_args(argv)
+    speed: dict = {}
+    header, rows, _ = run(out=args.out, speedup_out=speed)
+    print(header)
+    for r in rows:
+        print(",".join(map(str, r)))
+    if args.check:
+        x = speed["grouped_over_sequential"]
+        if x < GATE:
+            print(f"FAIL: grouped study {x:.2f}x sequential (< {GATE}x)")
+            raise SystemExit(1)
+        print(f"check: grouped study >= {GATE}x sequential ({x:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

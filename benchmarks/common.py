@@ -4,7 +4,7 @@ declarative experiment API (repro.federated.experiment.ExperimentSpec)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Optional
 
 from repro.configs.base import FedConfig, WirelessConfig
 from repro.core import delay, kkt
@@ -18,7 +18,7 @@ from repro.federated.simulation import SimResult, Simulator
 __all__ = [
     "CALIBRATED_C", "CALIBRATED_COMPUTE", "paper_population",
     "paper_problem", "cnn_update_bits", "make_cnn_spec", "make_cnn_sim",
-    "run_cnn_fl", "run_cnn_fleet", "emit",
+    "run_cnn_fl", "emit",
 ]
 
 
@@ -108,28 +108,6 @@ def run_cnn_fl(
         assert sim.trace_count == 1, (
             f"round step retraced {sim.trace_count}x for {label}")
     return res
-
-
-def run_cnn_fleet(
-    dataset: str,
-    fed: FedConfig,
-    label: str,
-    seeds,
-    rounds: int = 15,
-    n_train: int = 1500,
-    n_test: int = 400,
-    eval_every: int = 3,
-    seed: int = 0,
-    scenario=None,
-) -> List[SimResult]:
-    """Multi-seed fleet run (scan backend): one vmapped dispatch per chunk
-    executes every seed — the confidence-band workload (mean ± std over
-    realizations) at roughly the cost of one member's wall-clock."""
-    sim = make_cnn_sim(dataset, fed, label, n_train=n_train, n_test=n_test,
-                       seed=seed, backend="scan", scenario=scenario)
-    fleet = sim.run_fleet(seeds=seeds, max_rounds=rounds,
-                          eval_every=eval_every)
-    return fleet.results
 
 
 def emit(rows, header=None):

@@ -1,21 +1,37 @@
 """Fig. 1(a): impact of the preset global error eps on the optimized
-(b*, theta*, H, predicted overall time)."""
+(b*, theta*, H, predicted overall time).
+
+Declared as a `Study` of plan=True arms (one per epsilon); the rows are
+the arms' analytic operating points (`Study.plans()` — Alg. 1 solved
+against the calibrated population), no training."""
 from __future__ import annotations
 
-import numpy as np
+from repro.configs.base import FedConfig
+from repro.federated.experiment import CALIBRATED_C, ExperimentSpec
+from repro.federated.study import Study
 
-from benchmarks.common import cnn_update_bits, paper_problem
-from repro.core import kkt, tradeoff
+EPSILONS = (0.05, 0.02, 0.01, 0.005, 0.002)
+
+
+def study() -> Study:
+    arms = [
+        (f"eps{eps}", ExperimentSpec(
+            fed=FedConfig(n_devices=10, epsilon=eps, nu=2.0,
+                          c=CALIBRATED_C, lr=0.05),
+            model="mnist_cnn", dataset="mnist", plan=True, batch_cap=None,
+            label=f"eps{eps}"))
+        for eps in EPSILONS
+    ]
+    return Study(arms=arms)
 
 
 def run(quick: bool = False):
-    bits = cnn_update_bits("mnist")
-    base = paper_problem(bits)
-    epsilons = [0.05, 0.02, 0.01, 0.005, 0.002]
+    plans = study().plans()
     rows = []
-    for eps, sol in tradeoff.sweep_epsilon(base, epsilons):
-        rows.append(("fig1a", eps, int(sol.b), round(sol.theta, 4), sol.V,
-                     round(sol.H, 1), round(sol.overall, 2)))
+    for eps, (label, plan) in zip(EPSILONS, plans.items()):
+        rows.append(("fig1a", eps, int(plan.b), round(plan.theta, 4),
+                     plan.V, round(plan.H_pred, 1),
+                     round(plan.overall_pred, 2)))
     return ("name,epsilon,b_star,theta_star,V,H,overall_pred_s", rows)
 
 

@@ -1,29 +1,48 @@
 """Fig. 1(b): batch-size impact — simulated FL runs at b in {16, 32, 64}
-reporting overall time and test accuracy at a matched round budget."""
+reporting overall time and test accuracy at a matched round budget.
+
+Declared as one `Study`: the three b-arms share (model, V, lr), so the
+shape-envelope grouping pads every arm to b_env=64 and runs the whole
+sweep as ONE vmapped fleet dispatch stream instead of three sequential
+runs."""
 from __future__ import annotations
 
-from benchmarks.common import run_cnn_fl
+from benchmarks.common import make_cnn_spec
 from repro.configs.base import FedConfig
+from repro.federated.study import Study
+
+BATCHES = (16, 32, 64)
+
+
+def study(quick: bool = False) -> Study:
+    n_train = 800 if quick else 1500
+    arms = [
+        (f"b{b}", make_cnn_spec(
+            "mnist",
+            FedConfig(n_devices=10, batch_size=b, theta=0.15, nu=2.0,
+                      lr=0.05),
+            f"b{b}", n_train=n_train))
+        for b in BATCHES
+    ]
+    return Study(arms=arms, max_rounds=6 if quick else 12, eval_every=3)
 
 
 def run(quick: bool = False):
-    rounds = 6 if quick else 12
+    res = study(quick).run()
     rows = []
-    for b in (16, 32, 64):
-        fed = FedConfig(n_devices=10, batch_size=b, theta=0.15, nu=2.0,
-                        lr=0.05)
-        res = run_cnn_fl("mnist", fed, label=f"b{b}", rounds=rounds,
-                         n_train=800 if quick else 1500)
-        last_acc = next((r.test_acc for r in reversed(res.history)
-                         if r.test_acc is not None), float("nan"))
-        rows.append(("fig1b", b, res.rounds, round(res.total_time, 2),
-                     round(res.history[-1].train_loss, 4),
+    for b, label in zip(BATCHES, res.labels):
+        r = res[label][0]
+        last_acc = next((h.test_acc for h in reversed(r.history)
+                         if h.test_acc is not None), float("nan"))
+        rows.append(("fig1b", b, r.rounds, round(r.total_time, 2),
+                     round(r.history[-1].train_loss, 4),
                      round(last_acc, 4)))
-    return ("name,batch,rounds,overall_time_s,final_loss,test_acc", rows)
+    return ("name,batch,rounds,overall_time_s,final_loss,test_acc", rows,
+            res.to_json())
 
 
 if __name__ == "__main__":
-    header, rows = run()
+    header, rows, _ = run()
     print(header)
     for r in rows:
         print(",".join(map(str, r)))

@@ -1,27 +1,45 @@
 """Fig. 1(c): relative-local-error theta impact — loss-vs-simulated-time
-at theta in {0.05, 0.15, 0.5} (V = nu log 1/theta local steps)."""
+at theta in {0.05, 0.15, 0.5} (V = nu log 1/theta local steps).
+
+Declared as one `Study`: the theta-arms differ only in V, so the
+shape-envelope grouping pads local iterations to V_env=6 and the sweep
+runs as ONE vmapped fleet."""
 from __future__ import annotations
 
-from benchmarks.common import run_cnn_fl
+from benchmarks.common import make_cnn_spec
 from repro.configs.base import FedConfig
+from repro.federated.study import Study
+
+THETAS = (0.05, 0.15, 0.5)
+
+
+def study(quick: bool = False) -> Study:
+    n_train = 800 if quick else 1500
+    arms = [
+        (f"theta{t}", make_cnn_spec(
+            "mnist",
+            FedConfig(n_devices=10, batch_size=32, theta=t, nu=2.0,
+                      lr=0.05),
+            f"theta{t}", n_train=n_train))
+        for t in THETAS
+    ]
+    return Study(arms=arms, max_rounds=5 if quick else 10, eval_every=3)
 
 
 def run(quick: bool = False):
-    rounds = 5 if quick else 10
+    res = study(quick).run()
     rows = []
-    for theta in (0.05, 0.15, 0.5):
-        fed = FedConfig(n_devices=10, batch_size=32, theta=theta, nu=2.0,
-                        lr=0.05)
-        res = run_cnn_fl("mnist", fed, label=f"theta{theta}", rounds=rounds,
-                         n_train=800 if quick else 1500)
-        rows.append(("fig1c", theta, fed.local_rounds, res.rounds,
-                     round(res.total_time, 2),
-                     round(res.history[-1].train_loss, 4)))
-    return ("name,theta,V,rounds,overall_time_s,final_loss", rows)
+    for t, label in zip(THETAS, res.labels):
+        r = res[label][0]
+        rows.append(("fig1c", t, r.fed.local_rounds, r.rounds,
+                     round(r.total_time, 2),
+                     round(r.history[-1].train_loss, 4)))
+    return ("name,theta,V,rounds,overall_time_s,final_loss", rows,
+            res.to_json())
 
 
 if __name__ == "__main__":
-    header, rows = run()
+    header, rows, _ = run()
     print(header)
     for r in rows:
         print(",".join(map(str, r)))

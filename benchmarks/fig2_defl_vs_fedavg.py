@@ -4,132 +4,110 @@ per edge scenario (federated/scenarios.py).
 
 Paper settings: FedAvg (b=10, V=20); Rand (b=16, V=15) for MNIST and
 (b=64, V=30) for CIFAR; DEFL uses (b*, theta*) re-planned against each
-scenario's realized population (straggler/cell-edge cohorts shift the
-Eq. 5/7 maxes; expected dropout shrinks the effective M in Eq. 12).
+scenario's realized population (plan=True on the spec — straggler and
+cell-edge cohorts shift the Eq. 5/7 maxes; expected dropout shrinks the
+effective M in Eq. 12).
 
-Every sim runs on the chunk-fused scan backend (whole eval_every-round
-chunks per compiled dispatch); run_cnn_fl asserts one trace per
-(scenario, method) — per-round participation masks and drifting channels
-ride the same compiled chunk as traced scan inputs."""
+Each (scenario, dataset) comparison is ONE declarative `Study`
+(federated/study.py): the three method arms share a (V, b)-envelope group
+and execute as a single vmapped fleet over the (arm x seed) axis —
+bit-identical per arm to sequential runs — with in-fleet `target_acc`
+early stopping, so the single-seed and multi-seed paths report the SAME
+time-to-target semantics (each member stops when it reaches 90%; the band
+is mean +- std over realization seeds)."""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (
-    CALIBRATED_C,
-    CALIBRATED_COMPUTE,
-    cnn_update_bits,
-    run_cnn_fl,
-    run_cnn_fleet,
-)
-from repro.configs.base import FedConfig, WirelessConfig
-from repro.core import defl
-from repro.federated import scenarios
+from benchmarks.common import make_cnn_spec
+from repro.configs.base import FedConfig
+from repro.federated.experiment import CALIBRATED_C
+from repro.federated.study import Study
 
 # The scenario table of the headline comparison (>= 4 registered names).
 SCENARIO_NAMES = ("uniform", "stragglers", "cell_edge", "dropout", "drifting")
+TARGET_ACC = 0.90
 
 
-def _defl_fed(dataset: str, scenario: str, seed: int = 0) -> FedConfig:
-    fed = FedConfig(n_devices=10, epsilon=0.01, nu=2.0, c=CALIBRATED_C,
-                    lr=0.05)
-    # Same seed as the simulation below: DEFL plans against the exact
-    # population realization it will be timed on.
-    plan = scenarios.plan_for_scenario(
-        fed, scenario, cnn_update_bits(dataset),
-        cc=CALIBRATED_COMPUTE, wc=WirelessConfig(), seed=seed)
-    fed = defl.plan_to_fedconfig(plan, fed)
-    # Dataset-bounded batch cap (constraint 15 discussion / paper §VI-B).
-    return FedConfig(**{**fed.__dict__, "batch_size": min(fed.batch_size, 32),
-                        "update_bytes": None})
+def arm_specs(dataset: str, scenario: str, seed: int = 0,
+              n_train: int = 1500):
+    """The three method arms as ExperimentSpecs. DEFL is plan=True (the
+    spec solves (b*, theta*) against the scenario population at build
+    time, batch capped at 32 — paper §VI-B); FedAvg/Rand run the paper's
+    fixed settings."""
+    defl_fed = FedConfig(n_devices=10, epsilon=0.01, nu=2.0,
+                         c=CALIBRATED_C, lr=0.05)
+    fedavg = FedConfig(n_devices=10, batch_size=10,
+                       theta=float(np.exp(-20 / 2.0)), nu=2.0, lr=0.05)
+    rand_b, rand_v = (16, 15) if dataset == "mnist" else (64, 30)
+    rand = FedConfig(n_devices=10, batch_size=rand_b,
+                     theta=float(np.exp(-rand_v / 2.0)), nu=2.0, lr=0.05)
+
+    def spec(label, fed):
+        return make_cnn_spec(dataset, fed, f"{label}@{scenario}",
+                             n_train=n_train, seed=seed, scenario=scenario)
+
+    return [("DEFL", spec("DEFL", defl_fed).replace(plan=True)),
+            ("FedAvg", spec("FedAvg", fedavg)),
+            ("Rand", spec("Rand", rand))]
 
 
-def _configs(dataset: str, scenario: str, seed: int = 0):
-    defl_fed = _defl_fed(dataset, scenario, seed)
-    fedavg = FedConfig(n_devices=10, batch_size=10, theta=float(np.exp(-20 / 2.0)),
-                       nu=2.0, lr=0.05)  # V = 20
-    if dataset == "mnist":
-        rand = FedConfig(n_devices=10, batch_size=16,
-                         theta=float(np.exp(-15 / 2.0)), nu=2.0, lr=0.05)
-    else:
-        rand = FedConfig(n_devices=10, batch_size=64,
-                         theta=float(np.exp(-30 / 2.0)), nu=2.0, lr=0.05)
-    return [("DEFL", defl_fed), ("FedAvg", fedavg), ("Rand", rand)]
+def study_for(dataset: str, scenario: str, seed: int = 0, seeds: int = 1,
+              quick: bool = False) -> Study:
+    """The (scenario, dataset) comparison as one declarative Study."""
+    return Study(
+        arms=arm_specs(dataset, scenario, seed,
+                       n_train=600 if quick else 1500),
+        seeds=range(seed, seed + seeds),
+        max_rounds=4 if quick else 12, eval_every=1,
+        target_acc=TARGET_ACC)
 
 
 def run(quick: bool = False, scenario: str = "", seed: int = 0,
         seeds: int = 1):
-    """One row per (scenario, dataset, method). With seeds > 1 each method
-    additionally runs a vmapped `run_fleet` over that many realization
-    seeds (data order, participation masks, channel drift — one dispatch
-    per chunk for the whole fleet) and reports the confidence band:
-    mean +/- std of overall time across the fleet in place of the single
-    run's numbers."""
+    """One row per (scenario, dataset, method) from the grouped study,
+    plus the DEFL-vs-FedAvg reduction row per comparison. With seeds > 1
+    every arm's column becomes a mean +- std confidence band over the
+    (arm x seed) fleet; time-to-target is each member's own early-stop
+    time on both paths."""
     rows = []
+    payload = {}
     scens = (scenario,) if scenario else SCENARIO_NAMES
     datasets = ["mnist"] if quick else ["mnist", "cifar"]
-    rounds = 4 if quick else 12
-    n_train = 600 if quick else 1500
     for scen in scens:
         for ds in datasets:
-            target = 0.90
-            results = {}
-            for label, fed in _configs(ds, scen, seed):
-                if seeds > 1:
-                    fleet = run_cnn_fleet(
-                        ds, fed, label=f"{label}@{scen}",
-                        seeds=range(seed, seed + seeds), rounds=rounds,
-                        n_train=n_train, eval_every=1, seed=seed,
-                        scenario=scen)
-                    res = fleet[0]  # band below; first member keeps shape
-                    # Fleet members run all rounds (no in-fleet early
-                    # stop); time-to-target is still exact post-hoc from
-                    # the per-round eval history. The reduction row
-                    # below averages it over the fleet.
-                    results[label] = float(np.mean(
-                        [f.time_to_accuracy(target) or f.total_time
-                         for f in fleet]))
-                else:
-                    fleet = None
-                    res = run_cnn_fl(ds, fed, label=f"{label}@{scen}",
-                                     rounds=rounds, n_train=n_train,
-                                     eval_every=1, target_acc=target,
-                                     seed=seed, scenario=scen)
-                    results[label] = (res.time_to_accuracy(target)
-                                      or res.total_time)
-                tta = res.time_to_accuracy(target)
-                last_acc = next((r.test_acc for r in reversed(res.history)
-                                 if r.test_acc is not None), float("nan"))
-                parts = [r.n_participants for r in res.history
-                         if r.n_participants is not None]
-                if fleet is not None:
-                    times = [f.total_time for f in fleet]
-                    accs = [next((r.test_acc for r in reversed(f.history)
-                                  if r.test_acc is not None), float("nan"))
-                            for f in fleet]
-                    time_s = (f"{np.mean(times):.2f}+-{np.std(times):.2f}")
-                    acc_s = f"{np.nanmean(accs):.4f}+-{np.nanstd(accs):.4f}"
-                else:
-                    time_s = round(res.total_time, 2)
-                    acc_s = round(last_acc, 4)
-                rows.append(("fig2", scen, ds, label, fed.batch_size,
-                             fed.local_rounds, res.rounds,
-                             round(float(np.mean(parts)), 1) if parts else "",
-                             time_s, acc_s,
-                             round(tta, 2) if tta else ""))
-            if "DEFL" in results and "FedAvg" in results:
-                # results holds time-to-target (or total time) — the
-                # single run's value, or the fleet mean when seeds > 1 —
-                # so the reduction is computed on like-for-like numbers.
-                dt, ft = results["DEFL"], results["FedAvg"]
-                rows.append(("fig2", scen, ds, "reduction_vs_fedavg", "", "",
-                             "", "", round(100 * (1 - dt / ft), 1), "", ""))
+            res = study_for(ds, scen, seed=seed, seeds=seeds,
+                            quick=quick).run()
+            payload[f"{scen}/{ds}"] = res.to_json()
+            multi = seeds > 1
+            for label in res.labels:
+                s = res.summary(label)
+                fed = res[label][0].fed
+                tta = res.time_to_target(label)
+                hit = [r.time_to_accuracy(TARGET_ACC) is not None
+                       for r in res[label]]
+                band = lambda m, sd, nd: (  # noqa: E731
+                    f"{m:.{nd}f}+-{sd:.{nd}f}" if multi else round(m, nd))
+                rows.append((
+                    "fig2", scen, ds, label, fed.batch_size,
+                    fed.local_rounds, round(s["rounds_mean"], 1),
+                    (round(s["mean_participants"], 1)
+                     if np.isfinite(s["mean_participants"]) else ""),
+                    band(s["total_time_mean"], s["total_time_std"], 2),
+                    band(s["final_acc_mean"], s["final_acc_std"], 4),
+                    (band(float(tta.mean()), float(tta.std()), 2)
+                     if any(hit) else "")))
+            # Like-for-like on both paths: mean time-to-target (early-stop
+            # time when reached, total time otherwise) per arm.
+            rows.append(("fig2", scen, ds, "reduction_vs_fedavg", "", "",
+                         "", "", round(res.reduction("DEFL", "FedAvg"), 1),
+                         "", ""))
     return ("name,scenario,dataset,method,b,V,rounds,mean_participants,"
-            "overall_time_s,acc,time_to_90", rows)
+            "overall_time_s,acc,time_to_90", rows, payload)
 
 
 if __name__ == "__main__":
-    header, rows = run()
+    header, rows, _ = run()
     print(header)
     for r in rows:
         print(",".join(map(str, r)))

@@ -1,20 +1,27 @@
 """Benchmark entry point: one function per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1a,...] \
-      [--scenario <name>] [--seeds N]
+      [--scenario <name>] [--seeds N] [--json PATH]
 
 Emits ``name,...`` CSV blocks per benchmark. ``--scenario`` restricts the
 scenario-aware benchmarks (fig2, straggler) to one registered edge
 scenario (federated/scenarios.py); ``--seeds N`` runs seed-aware
 benchmarks (fig2) as a vmapped N-seed fleet per method and reports
 mean +/- std confidence bands instead of single-run numbers. Benchmarks
-that don't take a flag run unchanged, with a note. The roofline table
-reads the dry-run dumps in experiments/dryrun (run launch/dryrun.py
-first for the full 40-pair baseline)."""
+that don't take a flag run unchanged, with a note.
+
+``--json PATH`` additionally writes one machine-readable JSON document
+for everything that ran: Study-backed figures emit their full
+`StudyResult.to_json()` payload (per-arm histories, grouping report,
+summaries — what the CI study gate consumes), other benchmarks emit
+their header/rows. The roofline table reads the dry-run dumps in
+experiments/dryrun (run launch/dryrun.py first for the full 40-pair
+baseline)."""
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import sys
 import time
 
@@ -24,6 +31,7 @@ from benchmarks import (  # noqa: E402
     ablation_compression,
     ablation_straggler,
     bench_round_step,
+    bench_study,
     fig1a_epsilon,
     fig1b_batch,
     fig1c_theta,
@@ -43,6 +51,7 @@ BENCHES = {
     "compression": ablation_compression.run,
     "roofline": roofline_table.run,
     "round_step": bench_round_step.run,
+    "study": bench_study.run,
 }
 
 
@@ -57,8 +66,13 @@ def main(argv=None) -> None:
     ap.add_argument("--seeds", type=int, default=1,
                     help="run seed-aware benchmarks as a vmapped N-seed "
                          "fleet per configuration (mean +/- std bands)")
+    ap.add_argument("--json", default="",
+                    help="write a machine-readable JSON document of every "
+                         "benchmark that ran (StudyResult payloads for "
+                         "study-backed figures)")
     args = ap.parse_args(argv)
     names = args.only.split(",") if args.only else list(BENCHES)
+    payloads = {}
     for name in names:
         fn = BENCHES[name]
         kw = {"quick": args.quick}
@@ -75,12 +89,20 @@ def main(argv=None) -> None:
                 print(f"# === {name}: not seed-aware; running as-is ===",
                       flush=True)
         t0 = time.time()
-        header, rows = fn(**kw)
+        out = fn(**kw)
+        header, rows = out[0], out[1]
+        payloads[name] = (out[2] if len(out) > 2
+                          else {"header": header, "rows": [list(r) for r in rows]})
         print(f"# === {name} ({time.time() - t0:.1f}s) ===", flush=True)
         print(header)
         for r in rows:
             print(",".join(map(str, r)))
         print(flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payloads, f, indent=2, default=float)
+            f.write("\n")
+        print(f"# wrote {args.json}", flush=True)
 
 
 if __name__ == "__main__":

@@ -3,13 +3,17 @@ paper's CNN task with real training + simulated delay accounting —
 reproduces Fig. 2 qualitatively, per edge scenario.
 
   PYTHONPATH=src python examples/defl_vs_fedavg.py [--quick] \
-      [--scenario stragglers] [--seeds 8]
+      [--scenario stragglers] [--seeds 8] [--json PATH]
 
-Without --scenario the full registered table (uniform, stragglers,
-cell_edge, dropout, drifting) is swept; --seeds N runs every method as a
-vmapped N-seed fleet (one dispatch per chunk executes all seeds) and
-reports mean +/- std confidence bands over the realizations."""
+Each (scenario, dataset) comparison is one declarative Study
+(benchmarks/fig2_defl_vs_fedavg.study_for): the DEFL/FedAvg/Rand arms
+run as a single grouped vmapped fleet over the (arm x seed) axis with
+in-fleet 90%-accuracy early stopping. Without --scenario the full
+registered table (uniform, stragglers, cell_edge, dropout, drifting) is
+swept; --seeds N widens every arm to N realization seeds (mean +- std
+confidence bands); --json dumps the full StudyResult payloads."""
 import argparse
+import json
 import sys
 
 sys.path.insert(0, __file__.rsplit("/", 2)[0])
@@ -24,12 +28,18 @@ def main():
     ap.add_argument("--scenario", default="",
                     choices=("",) + scenarios.names())
     ap.add_argument("--seeds", type=int, default=1)
+    ap.add_argument("--json", default="",
+                    help="write the StudyResult JSON payloads here")
     args = ap.parse_args()
-    header, rows = run(quick=args.quick, scenario=args.scenario,
-                       seeds=args.seeds)
+    header, rows, payload = run(quick=args.quick, scenario=args.scenario,
+                                seeds=args.seeds)
     print(header)
     for r in rows:
         print(",".join(map(str, r)))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, default=float)
+            f.write("\n")
 
 
 if __name__ == "__main__":

@@ -90,12 +90,15 @@ def fixed_plan(
     b: int,
     V: int,
     wireless: Optional[WirelessConfig] = None,
+    theta: Optional[float] = None,
 ) -> DEFLPlan:
     """A baseline plan with manually chosen (b, V) — FedAvg / 'Rand.' rows.
 
     H is NOT predicted by Eq. 12 for baselines in the paper; the simulator
-    measures it. We still fill H_pred from Eq. 12 (with theta = exp(-V/nu))
-    for reference.
+    measures it. We still fill H_pred from Eq. 12 for reference — at the
+    exact `theta` when given (a swept theta whose V quantization would
+    otherwise shift H, e.g. fig1d's talk/work decomposition), otherwise at
+    theta = exp(-V/nu).
     """
     wireless = wireless or WirelessConfig()
     if fed.compress_updates:
@@ -104,7 +107,10 @@ def fixed_plan(
     g = float(max(pop.G / pop.f))
     prob = kkt.DelayProblem(
         T_cm=T_cm, g=g, M=fed.n_devices, eps=fed.epsilon, nu=fed.nu, c=fed.c)
-    alpha = max(V / fed.nu, 1e-6)
+    if theta is not None:
+        alpha = max(float(-np.log(theta)), 1e-6)
+    else:
+        alpha = max(V / fed.nu, 1e-6)
     sol = kkt.evaluate(prob, float(b), alpha, method="fixed")
     return DEFLPlan(
         b=b, theta=float(np.exp(-alpha)), V=V, H_pred=sol.H, T_cm=T_cm,

@@ -28,22 +28,52 @@ class BatchIterator:
         self.indices = np.asarray(indices)
         self.batch_size = int(batch_size)
         self.rng = np.random.default_rng(seed)
+        self._reshuffle()
+
+    def _reshuffle(self) -> None:
+        """Start a new epoch: snapshot the RNG position the permutation is
+        drawn from (what `state` stores instead of the permutation itself),
+        then draw it."""
+        self._epoch_rng = self.rng.bit_generator.state
         self._order = self.rng.permutation(self.indices)
         self._ptr = 0
 
     # -- snapshot / restore (SimState checkpointing) ------------------------
     def state(self) -> Dict:
-        """Value snapshot of the draw position (RNG state, current epoch
-        permutation, cursor). Restoring it via `set_state` — on this
-        iterator or a freshly constructed one over the same data/partition
-        — continues the batch stream bit-identically; the FL simulator's
-        SimState carries these snapshots for save/resume."""
+        """Value snapshot of the draw position: the current RNG state, the
+        RNG state the current epoch's permutation was drawn from, and the
+        cursor. The permutation itself is NOT stored — `set_state`
+        regenerates it from `epoch_rng` — so a snapshot is O(rng state),
+        not O(partition size) (SimState carries one per client per
+        checkpoint; at real dataset scale the old per-client `order`
+        arrays dominated the checkpoint). Restoring via `set_state` — on
+        this iterator or a freshly constructed one over the same
+        data/partition — continues the batch stream bit-identically."""
+        if self._epoch_rng is None:
+            # Restored from a legacy snapshot: the epoch-start RNG
+            # position is unknowable, so keep emitting the legacy
+            # (permutation-inline) form until the next reshuffle records
+            # one — otherwise this snapshot would be unrestorable.
+            return {"rng": self.rng.bit_generator.state,
+                    "order": self._order.copy(), "ptr": self._ptr}
         return {"rng": self.rng.bit_generator.state,
-                "order": self._order.copy(), "ptr": self._ptr}
+                "epoch_rng": self._epoch_rng, "ptr": self._ptr}
 
     def set_state(self, state: Dict) -> None:
+        if "order" in state:  # legacy pre-PR5 snapshot: permutation inline
+            self.rng.bit_generator.state = state["rng"]
+            self._epoch_rng = None
+            self._order = np.asarray(state["order"]).copy()
+            self._ptr = int(state["ptr"])
+            return
+        # Replay the epoch's permutation draw from its recorded RNG
+        # position, then restore the CURRENT position (ahead of the
+        # epoch's whenever sample-with-replacement draws consumed the
+        # stream since) — bit-identical to the state at snapshot time.
+        self.rng.bit_generator.state = state["epoch_rng"]
+        self._epoch_rng = state["epoch_rng"]
+        self._order = self.rng.permutation(self.indices)
         self.rng.bit_generator.state = state["rng"]
-        self._order = np.asarray(state["order"]).copy()
         self._ptr = int(state["ptr"])
 
     def next_indices(self) -> np.ndarray:
@@ -55,8 +85,7 @@ class BatchIterator:
         if n < bs:
             return self.rng.choice(self.indices, size=bs, replace=True)
         if self._ptr + bs > n:
-            self._order = self.rng.permutation(self.indices)
-            self._ptr = 0
+            self._reshuffle()
         idx = self._order[self._ptr : self._ptr + bs]
         self._ptr += bs
         return idx

@@ -16,27 +16,39 @@ import numpy as np
 from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
 
 
-def _leaf_quantize(x: jnp.ndarray, key, impl: str):
-    flat = x.reshape(-1)
-    # Row-chunked quantization: 1 scale per 1024 values.
-    row = 1024
-    pad = (-flat.size) % row
-    rows = jnp.pad(flat, (0, pad)).reshape(-1, row)
+# Values per scale: one fp32 scale per ROW-sized chunk.
+ROW = 1024
+
+
+def compress_update(update: Any, key, impl: str = "xla") -> Any:
+    """Quantize a pytree of fp32 deltas into int8 + scales.
+
+    The whole tree is quantized as ONE flat-concatenated kernel call: each
+    leaf is padded to whole 1024-rows (so a row's scale never mixes
+    leaves — per-leaf error bounds and the `compressed_bits` wire
+    accounting are unchanged from the old per-leaf form), the padded
+    leaves concatenate into one (rows, 1024) matrix, and a single
+    quantize draws ONE noise tensor from ONE key and takes one scale pass
+    over all rows. The old form dispatched several ops + a PRNG split per
+    leaf per client, which batched to ~5x their single-member cost under
+    the fleet vmap's extra leading axis on XLA:CPU (run_fleet lost its
+    speedup on compressed configs); fused, compressed fleets batch like
+    the rest of the round graph (bench_round_step.py's fleet_s8 row)."""
+    leaves, treedef = jax.tree_util.tree_flatten(update)
+    segs, meta = [], []
+    for leaf in leaves:
+        flat = leaf.reshape(-1)
+        pad = (-flat.size) % ROW
+        segs.append(jnp.pad(flat, (0, pad)))
+        meta.append((leaf.shape, flat.size, (flat.size + pad) // ROW))
+    rows = jnp.concatenate(segs).reshape(-1, ROW)
     if impl == "pallas":
         from repro.kernels.quantize import ops as q_ops
 
         q, scale = q_ops.quantize(rows, key)
     else:
         q, scale = quantize_ref(rows, key)
-    return {"q": q, "scale": scale, "shape": x.shape, "pad": pad}
-
-
-def compress_update(update: Any, key, impl: str = "xla") -> Any:
-    """Quantize a pytree of fp32 deltas into int8 + scales."""
-    leaves, treedef = jax.tree_util.tree_flatten(update)
-    keys = jax.random.split(key, len(leaves))
-    return jax.tree_util.tree_unflatten(
-        treedef, [_leaf_quantize(l, k, impl) for l, k in zip(leaves, keys)])
+    return {"q": q, "scale": scale, "treedef": treedef, "meta": tuple(meta)}
 
 
 def decompress_update(comp: Any, impl: str = "xla") -> Any:
@@ -47,14 +59,12 @@ def decompress_update(comp: Any, impl: str = "xla") -> Any:
     else:
         dequant = dequantize_ref
 
-    def leaf(c):
-        flat = dequant(c["q"], c["scale"]).reshape(-1)
-        if c["pad"]:
-            flat = flat[: flat.size - c["pad"]]
-        return flat.reshape(c["shape"])
-
-    return jax.tree.map(
-        leaf, comp, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+    flat = dequant(comp["q"], comp["scale"]).reshape(-1)
+    leaves, at = [], 0
+    for shape, size, rows in comp["meta"]:
+        leaves.append(flat[at : at + size].reshape(shape))
+        at += rows * ROW
+    return jax.tree_util.tree_unflatten(comp["treedef"], leaves)
 
 
 def sequential_client_keys(key, n: int):

@@ -30,6 +30,7 @@ from typing import Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
 from repro.core import defl, delay
@@ -167,6 +168,21 @@ class ExperimentSpec:
         simulator's exact accounting), `fed` unchanged otherwise."""
         return self._fed_with_plan(self.resolve_plan())
 
+    def analytic_plan(self) -> defl.DEFLPlan:
+        """The arm's delay-model operating point, always available: the
+        solved DEFL plan when plan=True, otherwise Eq. 12/8 evaluated at
+        the spec's fixed (b, theta) (`defl.fixed_plan` at the EXACT
+        theta, so a swept theta's H is not shifted by V's integer
+        quantization — the FedAvg/Rand baseline rows of the paper's
+        tables). The analytic figures (fig1a/fig1d, ablation_straggler)
+        read their predicted columns from this via `Study.plans()`."""
+        if self.plan:
+            return self.resolve_plan()
+        return defl.fixed_plan(
+            self.fed, self.population(), self.update_bits(),
+            b=self.fed.batch_size, V=self.fed.local_rounds,
+            wireless=self.wireless, theta=self.fed.theta)
+
     # -- materialization ----------------------------------------------------
     def build(self) -> Simulator:
         """Materialize the Simulator: draw data/partition/population at
@@ -190,7 +206,7 @@ class ExperimentSpec:
             return [BatchIterator(data, p, fed.batch_size, seed=seed + i)
                     for i, p in enumerate(parts)]
 
-        eval_fn = None
+        eval_fn = eval_batch_fn = None
         if self.with_eval:
             test = make(self.n_test, seed=self.seed + 1)
             xb, yb = jnp.asarray(test.x), jnp.asarray(test.y)
@@ -201,16 +217,39 @@ class ExperimentSpec:
                 return jnp.mean(
                     (jnp.argmax(logits, -1) == yb).astype(jnp.float32))
 
+            # Vmapped twin over a stacked member axis: fleet/study eval is
+            # ONE dispatch for all members instead of a host loop. Exact
+            # per-member agreement with eval_acc is guaranteed: the hit
+            # indicators are exact 0/1 floats whose sum is integral, so no
+            # reduction order can perturb the accuracy.
+            @jax.jit
+            def eval_acc_S(ps):
+                logits = jax.vmap(lambda p: cnn.cnn_forward(cfg, p, xb))(ps)
+                hits = (jnp.argmax(logits, -1) == yb[None]).astype(
+                    jnp.float32)
+                return jnp.mean(hits, axis=-1)
+
             eval_fn = lambda p: {"acc": float(eval_acc(p))}  # noqa: E731
+            eval_batch_fn = lambda ps: {  # noqa: E731
+                "acc": np.asarray(jax.device_get(eval_acc_S(ps)))}
 
         label = self.label or (
             f"{self.dataset}@{self.scenario}" if self.scenario
             else self.dataset)
+        # The study-grouping capabilities: the (V, b)-envelope form of the
+        # loss and a hashable compiled-graph signature — two sims with
+        # equal envelope_key (and equal envelope dims) can share one
+        # compiled envelope chunk (study._chunk_for).
+        envelope_key = (cfg, fed.n_devices, fed.lr, fed.compress_updates,
+                        self.impl, self.scenario is not None)
         return Simulator(
             functools.partial(cnn.cnn_loss, cfg), params, data_factory,
             partition_sizes(parts), fed, sgd(fed.lr), pop,
             wireless=self.wireless, eval_fn=eval_fn, label=label,
-            backend=self.backend, impl=self.impl, scenario=self.scenario)
+            backend=self.backend, impl=self.impl, scenario=self.scenario,
+            eval_batch_fn=eval_batch_fn,
+            masked_loss_fn=functools.partial(cnn.cnn_loss_masked, cfg),
+            envelope_key=envelope_key)
 
 
 # ---------------------------------------------------------------------------

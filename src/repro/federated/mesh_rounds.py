@@ -29,17 +29,69 @@ from repro.optim.api import Optimizer, apply_updates
 
 
 def local_steps_fn(loss_fn: Callable, opt: Optimizer):
-    """(params, opt_state, batches[V]) -> (params', opt_state', mean_loss)."""
+    """(params, opt_state, batches[V]) -> (params', opt_state', mean_loss).
+
+    The V-step loss mean accumulates in the scan CARRY (a sequential
+    left-fold) rather than stacking and reducing: the fold's partial sums
+    are prefix-stable, so the envelope form below — the same fold over
+    V_env steps whose padded tail adds exact zeros — reproduces it bit for
+    bit at any padding (XLA's reduce would re-associate with length)."""
 
     def run(params, opt_state, batches):
         def step(carry, batch):
-            p, s = carry
+            p, s, acc = carry
             (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
             updates, s = opt.update(grads, s, p)
-            return (apply_updates(p, updates), s), loss
+            return (apply_updates(p, updates), s, acc + loss), None
 
-        (params, opt_state), losses = jax.lax.scan(step, (params, opt_state), batches)
-        return params, opt_state, jnp.mean(losses)
+        (params, opt_state, total), _ = jax.lax.scan(
+            step, (params, opt_state, jnp.zeros(())), batches)
+        V = jax.tree.leaves(batches)[0].shape[0]
+        return params, opt_state, total / V
+
+    return run
+
+
+def envelope_local_steps_fn(loss_fn: Callable, opt: Optimizer):
+    """`local_steps_fn` over a padded (V_env, B_env) shape envelope.
+
+    The Study API (federated/study.py) runs arms with different (b, V)
+    plans in ONE vmapped fleet by padding every member to the group's
+    common envelope; this is the member-level local step that makes the
+    padding a bitwise no-op:
+
+      batches      (V_env, B_env, ...) — the member's real V x b draws,
+                   padded along both axes
+      v_mask       (V_env,) 0/1 — 1 for the member's own local steps;
+                   padded steps run (shapes are static) but their
+                   params/opt writes are masked out with `where`, exactly
+                   the ragged-final-chunk `valid` trick of
+                   build_round_chunk, so they cannot perturb state
+      sample_mask  (B_env,) 0/1 and n_samples (f32 count) — forwarded to
+                   the masked loss; loss_fn(params, batch, sample_mask, n)
+                   must make padded samples exact zeros in the loss and
+                   its gradient (e.g. models.cnn.cnn_loss_masked, whose
+                   conv backward is pad-stable via `_ps_matmul`)
+
+    The returned mean loss accumulates in the scan carry exactly like
+    `local_steps_fn`'s (padded steps add an exact 0) and divides by the
+    member's own V — bit-identical to the unpadded fold."""
+
+    def run(params, opt_state, batches, v_mask, sample_mask, n_samples):
+        def step(carry, xs):
+            p, s, acc = carry
+            batch, valid = xs
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                p, batch, sample_mask, n_samples)
+            updates, s2 = opt.update(grads, s, p)
+            p2 = apply_updates(p, updates)
+            keep = lambda nw, old: jnp.where(valid > 0, nw, old.astype(nw.dtype))  # noqa: E731
+            return ((jax.tree.map(keep, p2, p), jax.tree.map(keep, s2, s),
+                     acc + jnp.where(valid > 0, loss, 0.0)), None)
+
+        (params, opt_state, total), _ = jax.lax.scan(
+            step, (params, opt_state, jnp.zeros(())), (batches, v_mask))
+        return params, opt_state, total / jnp.sum(v_mask)
 
     return run
 
@@ -270,10 +322,11 @@ def build_round_step(
     param_specs_tree=None,
     client_axes=None,
     impl: str = "xla",
+    envelope: bool = False,
 ):
     """Build round_step(params_C, opt_C, batches, weights, keys=None,
-    mask=None, clock_mask=None, t_cp=None, t_cm=None) with leaves stacked
-    on a leading client axis C and batches (C, V, ...).
+    mask=None, clock_mask=None, t_cp=None, t_cm=None, env=None) with
+    leaves stacked on a leading client axis C and batches (C, V, ...).
 
     aggregation in ('allreduce_shardmap', 'int8_shardmap') needs
     (mesh, param_specs_tree, client_axes) for the explicit-collective path;
@@ -297,8 +350,17 @@ def build_round_step(
                   metrics gains the in-graph Eq. 8 round clock
                   ('T_cm', 'T_cp', 'T_round') as the straggler max over
                   waiting clients.
+
+    envelope=True runs the (V, b) shape-envelope form: `loss_fn` takes
+    (params, batch, sample_mask, n) and batches are (C, V_env, B_env, ...)
+    with the per-member masks arriving via `env` — a dict of traced
+    arrays {'v_mask' (V_env,), 'sample_mask' (B_env,), 'n_samples' f32,
+    'v_count' f32} shared across the C clients of one member (the Study
+    API's members all pad client-uniformly). The in-graph T_round then
+    uses the traced v_count in place of the static V.
     """
-    local = local_steps_fn(loss_fn, opt)
+    local = (envelope_local_steps_fn(loss_fn, opt) if envelope
+             else local_steps_fn(loss_fn, opt))
     int8_sync = psum_sync = None
     if aggregation == "int8_shardmap":
         int8_sync = _int8_shardmap_sync(mesh, param_specs_tree, client_axes)
@@ -306,8 +368,15 @@ def build_round_step(
         psum_sync = _psum_shardmap_sync(mesh, param_specs_tree, client_axes)
 
     def round_step(params_C, opt_C, batches, weights, keys=None,
-                   mask=None, clock_mask=None, t_cp=None, t_cm=None):
-        new_p, new_s, losses = jax.vmap(local)(params_C, opt_C, batches)
+                   mask=None, clock_mask=None, t_cp=None, t_cm=None,
+                   env=None):
+        if envelope:
+            new_p, new_s, losses = jax.vmap(
+                local, in_axes=(0, 0, 0, None, None, None))(
+                    params_C, opt_C, batches, env["v_mask"],
+                    env["sample_mask"], env["n_samples"])
+        else:
+            new_p, new_s, losses = jax.vmap(local)(params_C, opt_C, batches)
         any_p = None
         if mask is not None:
             weights, any_p = _participation_weights(weights, mask)
@@ -344,7 +413,8 @@ def build_round_step(
         if t_cp is not None and t_cm is not None:
             cmask = mask if clock_mask is None else clock_mask
             assert cmask is not None, "in-graph clock needs a clock_mask/mask"
-            metrics.update(_masked_clock(t_cp, t_cm, cmask, V))
+            v = env["v_count"] if envelope else V
+            metrics.update(_masked_clock(t_cp, t_cm, cmask, v))
         return agg_p, new_s, metrics
 
     return round_step
@@ -360,6 +430,7 @@ def build_round_chunk(
     scenario: bool = False,
     batch_from: Callable = None,
     update_bits: float = None,
+    envelope: bool = False,
 ):
     """Fuse a whole chunk of rounds into one `jax.lax.scan` over the round
     step: the host touches the device once per chunk instead of once per
@@ -396,14 +467,27 @@ def build_round_chunk(
     the scan body through compression.sequential_client_keys — the same
     schedule as the per-round backends, so the stochastic-rounding noise
     stream is bit-identical to theirs.
+
+    envelope=True builds the Study API's (V, b) shape-envelope chunk:
+    `loss_fn` is the masked form, V is the padded V_env (batches/idx carry
+    (C, V_env, B_env) per round), and the chunk fn gains a trailing `env`
+    argument — {'v_mask', 'sample_mask', 'n_samples', 'v_count',
+    'update_bits'} traced per-member values (see build_round_step). The
+    in-graph uplink_bits then uses env['update_bits'] (traced, so arms
+    with different wire sizes share one compiled graph) instead of the
+    static update_bits constant.
     """
     from repro.federated import compression
 
     step = build_round_step(loss_fn, opt, V, aggregation=aggregation,
-                            impl=impl)
+                            impl=impl, envelope=envelope)
     compress = aggregation == "int8_stochastic"
 
-    def chunk_step(params_C, opt_C, key, weights, t_cp, data, xs):
+    def chunk_step(params_C, opt_C, key, weights, t_cp, data, xs, env=None):
+        bits = (env["update_bits"] if envelope
+                else (None if update_bits is None
+                      else jnp.float32(update_bits)))
+
         def body(carry, x):
             params, opt_state, k = carry
             if batch_from is not None:
@@ -418,7 +502,7 @@ def build_round_chunk(
                 new_p, new_s, m = step(
                     params, opt_state, batches, weights, keys=keys_C,
                     mask=x["mask"], clock_mask=x["clock_mask"],
-                    t_cp=t_cp, t_cm=x["t_cm"])
+                    t_cp=t_cp, t_cm=x["t_cm"], env=env)
                 # Mean over participating clients; NaN on a zero-
                 # participation round (same formula as the per-round
                 # backends, for bit parity).
@@ -429,15 +513,15 @@ def build_round_chunk(
                 ys = {"loss": loss, "n_participants": n,
                       "T_cm": m["T_cm"], "T_cp": m["T_cp"],
                       "T_round": m["T_round"]}
-                if update_bits is not None:
-                    ys["uplink_bits"] = n * jnp.float32(update_bits)
+                if bits is not None:
+                    ys["uplink_bits"] = n * bits
             else:
                 new_p, new_s, m = step(
-                    params, opt_state, batches, weights, keys=keys_C)
+                    params, opt_state, batches, weights, keys=keys_C,
+                    env=env)
                 ys = {"loss": jnp.mean(m["per_client_loss"])}
-                if update_bits is not None:
-                    ys["uplink_bits"] = jnp.float32(
-                        n_clients * update_bits)
+                if bits is not None:
+                    ys["uplink_bits"] = n_clients * bits
             valid = x["valid"]
             keep = lambda nw, old: jnp.where(valid, nw, old.astype(nw.dtype))  # noqa: E731
             new_p = jax.tree.map(keep, new_p, params)
@@ -452,7 +536,8 @@ def build_round_chunk(
     return chunk_step
 
 
-def build_fleet_chunk(chunk_step: Callable) -> Callable:
+def build_fleet_chunk(chunk_step: Callable, envelope: bool = False,
+                      ) -> Callable:
     """vmap a `build_round_chunk` step over a leading fleet axis S.
 
     The chunk step is pure and closure-free over run state (everything it
@@ -461,16 +546,23 @@ def build_fleet_chunk(chunk_step: Callable) -> Callable:
     dispatch per chunk instead of S sequential chunk calls:
 
       carry (params_C, opt_C, key)  (S, C, ...) / (S, 2)   mapped, axis 0
-      weights, t_cp, data           shared, broadcast (in_axes=None) —
+      weights, data                 shared, broadcast (in_axes=None) —
                                     one population / one device-resident
                                     dataset upload serves the whole fleet
+      t_cp                          shared when all members run one batch
+                                    size; per-member (mapped axis 0) under
+                                    envelope=True, where b varies by arm
       xs                            every leaf (S, R, ...), mapped axis 0
+      env (envelope=True only)      per-member (V, b) masks, mapped axis 0
 
     ys leaves come back stacked (S, R). Per-member math is exactly the
     single-chunk graph batched over S (vmap is a compile-time transform,
     not a loop), which is what makes the per-seed results bit-identical to
-    sequential runs — asserted in tests/test_experiment_api.py.
+    sequential runs — asserted in tests/test_experiment_api.py (seeds) and
+    tests/test_study.py (mixed-(b, V) arm groups).
     """
+    if envelope:
+        return jax.vmap(chunk_step, in_axes=(0, 0, 0, None, 0, None, 0, 0))
     return jax.vmap(chunk_step, in_axes=(0, 0, 0, None, None, None, 0))
 
 

@@ -325,7 +325,19 @@ class Simulator:
         backend: str = "scan",
         impl: str = "xla",  # quantize kernel: 'xla' | 'pallas'
         scenario: Optional[Any] = None,  # scenarios.Scenario | name | None
+        eval_batch_fn: Optional[Callable] = None,  # stacked (S,...) params
+        masked_loss_fn: Optional[Callable] = None,  # (p, batch, mask, n)
+        envelope_key: Optional[Any] = None,  # study.py graph-cache key
     ):
+        """eval_batch_fn evaluates a whole stacked member axis at once —
+        (S, ...) param leaves -> dict of (S,) metrics — so fleet/study
+        time-to-accuracy sweeps don't serialize on a host eval loop at
+        chunk boundaries. masked_loss_fn is the (V, b)-envelope form of
+        loss_fn (see mesh_rounds.envelope_local_steps_fn) and
+        envelope_key a hashable graph signature; both are optional
+        capabilities the Study API (federated/study.py) uses to group
+        this simulator's arm with others — ExperimentSpec.build provides
+        all three."""
         if backend not in ("scan", "batched", "loop"):
             raise ValueError(f"unknown backend {backend!r}")
         self.loss_fn = loss_fn
@@ -336,10 +348,25 @@ class Simulator:
         self.pop = pop
         self.wireless = wireless or WirelessConfig()
         self.eval_fn = eval_fn
+        self.eval_batch_fn = eval_batch_fn
+        self.masked_loss_fn = masked_loss_fn
+        self.envelope_key = envelope_key
         self.label = label
         self.backend = backend
         self.impl = impl
         self.scenario = scenarios.get(scenario) if scenario is not None else None
+        # Envelope-form graphs: when the masked loss is available, the
+        # compiled batched/scan graphs run mesh_rounds' (V, b)-envelope
+        # round step at the TRIVIAL envelope (V_env=V, B_env=b, all-ones
+        # masks as traced inputs). The masking ops change XLA's fusion of
+        # the loss computation by an ulp relative to the plain form, and
+        # fusion follows op structure, not mask values — so sharing the
+        # structure is what makes a native run() bit-identical to the same
+        # arm running padded inside a Study group (observed: padded ==
+        # trivial-envelope bit-for-bit; plain == neither). The loop
+        # backend keeps the plain loss (its parity is tolerance-based).
+        self._envelope = masked_loss_fn is not None and backend != "loop"
+        self._env_cache: Optional[dict] = None
         probe = self._make_iters(fed.seed)
         assert len(probe) == fed.n_devices == pop.n
         self._init_params = jax.tree.map(jnp.asarray, init_params)
@@ -513,37 +540,57 @@ class Simulator:
             self.fed.batch_size, self.pop.G, self.pop.f)
         return T_cm, T_cp
 
+    # -- envelope plumbing ---------------------------------------------------
+    def _trivial_env(self) -> dict:
+        """The all-ones (V, b)-envelope masks for this sim's native
+        shapes, passed as TRACED inputs into the compiled steps (closing
+        over them would constant-fold the masking and change fusion — the
+        exact divergence the envelope form exists to avoid)."""
+        if self._env_cache is None:
+            fed = self.fed
+            self._env_cache = {
+                "v_mask": jnp.ones(fed.local_rounds, jnp.float32),
+                "sample_mask": jnp.ones(fed.batch_size, jnp.float32),
+                "n_samples": jnp.float32(fed.batch_size),
+                "v_count": jnp.float32(fed.local_rounds),
+                "update_bits": jnp.float32(self._update_bits()),
+            }
+        return self._env_cache
+
     # -- compiled step builders ---------------------------------------------
     def _build_batched_round(self):
         fed = self.fed
         M, V = fed.n_devices, fed.local_rounds
         compress = fed.compress_updates
         agg = "int8_stochastic" if compress else "allreduce"
+        envelope = self._envelope
         step = mesh_rounds.build_round_step(
-            self.loss_fn, self.opt, V, aggregation=agg, impl=self.impl)
+            self.masked_loss_fn if envelope else self.loss_fn, self.opt, V,
+            aggregation=agg, impl=self.impl, envelope=envelope)
 
         if self.scenario is None:
             weights = self._weights
 
-            def round_fn(params_C, opt_C, key, batches):
+            def round_fn(params_C, opt_C, key, batches, env=None):
                 keys_C = None
                 if compress:
                     key, keys_C = compression.sequential_client_keys(key, M)
                 new_p, new_s, metrics = step(
-                    params_C, opt_C, batches, weights, keys=keys_C)
+                    params_C, opt_C, batches, weights, keys=keys_C, env=env)
                 # Unweighted client mean, matching the loop backend's metric.
                 return new_p, new_s, key, jnp.mean(metrics["per_client_loss"])
         else:
             sizes = self._sizes_f32
 
             def round_fn(params_C, opt_C, key, batches,
-                         mask, clock_mask, t_cp, t_cm):
+                         mask, clock_mask, t_cp, t_cm, env=None):
                 keys_C = None
                 if compress:
                     key, keys_C = compression.sequential_client_keys(key, M)
                 new_p, new_s, metrics = step(
                     params_C, opt_C, batches, sizes, keys=keys_C,
-                    mask=mask, clock_mask=clock_mask, t_cp=t_cp, t_cm=t_cm)
+                    mask=mask, clock_mask=clock_mask, t_cp=t_cp, t_cm=t_cm,
+                    env=env)
                 # Mean over *participating* clients (the loop backend never
                 # runs dropped clients); NaN on a zero-participation round.
                 n = jnp.sum(mask)
@@ -567,16 +614,28 @@ class Simulator:
         fed = self.fed
         agg = "int8_stochastic" if fed.compress_updates else "allreduce"
         return mesh_rounds.build_round_chunk(
-            self.loss_fn, self.opt, fed.local_rounds, fed.n_devices,
+            self.masked_loss_fn if self._envelope else self.loss_fn,
+            self.opt, fed.local_rounds, fed.n_devices,
             aggregation=agg, impl=self.impl,
             scenario=self.scenario is not None,
             batch_from=self._batch_from,
-            update_bits=self._update_bits())
+            update_bits=self._update_bits(),
+            envelope=self._envelope)
+
+    def _chunk_call(self, params_C, opt_C, key, weights, t_cp_arg, xs):
+        """One compiled chunk dispatch, threading the trivial envelope
+        masks on envelope-form sims."""
+        if self._envelope:
+            return self._chunk_fn(params_C, opt_C, key, weights, t_cp_arg,
+                                  self._data_dev, xs, self._trivial_env())
+        return self._chunk_fn(params_C, opt_C, key, weights, t_cp_arg,
+                              self._data_dev, xs)
 
     def _get_fleet_fn(self):
         if self._fleet_fn is None:
             self._fleet_fn = jax.jit(
-                mesh_rounds.build_fleet_chunk(self._chunk_raw),
+                mesh_rounds.build_fleet_chunk(self._chunk_raw,
+                                              envelope=self._envelope),
                 donate_argnums=(0, 1, 2))
         return self._fleet_fn
 
@@ -626,9 +685,10 @@ class Simulator:
     def _round_batched(self, params_C, opt_C, key, iters, real,
                        t_cm_clients=None):
         batches = stack_client_batches(iters, self.fed.local_rounds)
+        env = self._trivial_env() if self._envelope else None
         if self.scenario is None:
             params_C, opt_C, key, loss = self._round_fn(
-                params_C, opt_C, key, batches)
+                params_C, opt_C, key, batches, env)
             return params_C, opt_C, key, {"train_loss": loss}  # device scalar
         if t_cm_clients is None:  # direct run_round callers; run() shares its vector
             t_cm_clients = delay.per_client_uplink_time(
@@ -638,7 +698,7 @@ class Simulator:
         t_cp = jnp.asarray(self._t_cp_clients, jnp.float32)
         t_cm = jnp.asarray(t_cm_clients, jnp.float32)
         params_C, opt_C, key, loss = self._round_fn(
-            params_C, opt_C, key, batches, mask, clock_mask, t_cp, t_cm)
+            params_C, opt_C, key, batches, mask, clock_mask, t_cp, t_cm, env)
         return params_C, opt_C, key, {
             "train_loss": loss, "n_participants": real.n_participants}
 
@@ -689,21 +749,35 @@ class Simulator:
             return a
         return np.concatenate([a, np.zeros((R - n, *a.shape[1:]), a.dtype)])
 
-    def _chunk_inputs(self, iters, stream, R: int, n: int):
+    def _chunk_inputs(self, iters, stream, R: int, n: int,
+                      envelope: Optional[tuple] = None):
         """Host-side prep for one chunk: draw n rounds of data (+ scenario
         realizations), pad to R, and return (xs pytree for the scan — all
         numpy leaves so run_fleet can stack members before the single
         upload — plus a host dict with the f64 clock accounting for the
-        history records)."""
-        V = self.fed.local_rounds
+        history records). With `envelope=(V_env, B_env)` (the Study
+        group executor) the native draws are additionally zero-padded
+        into the group envelope — never extra draws, so the
+        iterator/stream consumption is identical to a native run's."""
+        V, b = self.fed.local_rounds, self.fed.batch_size
+        M = self.fed.n_devices
+        V_env, B_env = envelope if envelope is not None else (V, b)
         pad = self._pad_rounds
+
+        def pad_env(a):
+            a = np.asarray(a)
+            if (V_env, B_env) == (V, b):
+                return pad(a, R)
+            out = np.zeros((R, M, V_env, B_env) + a.shape[4:], a.dtype)
+            out[:n, :, :V, :b] = a
+            return out
+
         if self._data_dev is not None:
             idx = stack_chunk_indices(iters, n, V)
-            xs = {"idx": pad(idx, R)}
+            xs = {"idx": pad_env(idx)}
         else:
             batches = stack_chunk_batches(iters, n, V)
-            xs = {"batches": jax.tree.map(
-                lambda a: pad(np.asarray(a), R), batches)}
+            xs = {"batches": jax.tree.map(pad_env, batches)}
         valid = np.zeros(R, bool)
         valid[:n] = True
         xs["valid"] = valid
@@ -787,9 +861,8 @@ class Simulator:
         iters, stream = self._materialize(state)
         weights, t_cp_arg = self._chunk_args()
         xs, host = self._chunk_inputs(iters, stream, rounds, rounds)
-        params_C, opt_C, key, ys = self._chunk_fn(
-            state.params_C, state.opt_C, state.key,
-            weights, t_cp_arg, self._data_dev, xs)
+        params_C, opt_C, key, ys = self._chunk_call(
+            state.params_C, state.opt_C, state.key, weights, t_cp_arg, xs)
         ys = jax.device_get(ys)
         records = self._chunk_records(ys, host, rounds, state.round,
                                       state.sim_time)
@@ -825,8 +898,8 @@ class Simulator:
                 pre_data = self._snapshot_iters(iters)
                 pre_stream = stream.state() if stream is not None else None
             xs, host = self._chunk_inputs(iters, stream, R, n)
-            params_C, opt_C, key, ys = self._chunk_fn(
-                params_C, opt_C, key, weights, t_cp_arg, self._data_dev, xs)
+            params_C, opt_C, key, ys = self._chunk_call(
+                params_C, opt_C, key, weights, t_cp_arg, xs)
             # The chunk's only device->host sync: one stacked fetch of all
             # per-round scan outputs.
             ys = jax.device_get(ys)
@@ -963,6 +1036,8 @@ class Simulator:
         states: Optional[Sequence[SimState]] = None,
         max_rounds: int = 200,
         eval_every: int = 1,
+        target_acc: Optional[float] = None,
+        max_sim_time: Optional[float] = None,
     ) -> FleetResult:
         """Run S member states in lockstep with ONE vmapped dispatch per
         chunk (scan backend only): the compiled chunk fn is mapped over a
@@ -974,12 +1049,26 @@ class Simulator:
         lockstep chunking lines up). Per-member results are bit-identical
         to sequential `run()` calls at the same seeds: host-side draws
         (data indices, masks, channel drift) are per-member and vmap only
-        batches the already-pure device graph. Early stopping
-        (target_acc / max_sim_time) is per-member state and intentionally
-        unsupported here — run members individually when you need it."""
+        batches the already-pure device graph.
+
+        Early stopping (target_acc / max_sim_time) is per-member: a
+        member that reaches the target (or exhausts the simulated-time
+        budget) is marked done and rides along FROZEN — its subsequent
+        chunks feed an all-False `valid` mask, the in-graph done-mask
+        that turns every state write (params/opt/PRNG advance) into a
+        no-op, while its host streams stop being consumed. The frozen
+        member's history and final state match a solo early-stopped
+        `run()` bit for bit (tests/test_study.py). Eval at chunk
+        boundaries goes through `eval_batch_fn` (one vmapped dispatch for
+        the whole stacked member axis) when the Simulator has one,
+        falling back to a per-member host loop otherwise."""
         if self.backend != "scan":
             raise ValueError(
                 f"run_fleet requires backend='scan', not {self.backend!r}")
+        if target_acc and self.eval_fn is None and self.eval_batch_fn is None:
+            raise ValueError(
+                "run_fleet(target_acc=...) needs an eval_fn/eval_batch_fn "
+                "(build the spec with with_eval=True)")
         if not callable(self._data_src):
             # A fixed iterator list is ONE set of live objects: every
             # member's _materialize would alias it, so members would
@@ -1032,30 +1121,92 @@ class Simulator:
         r0 = states[0].round
         R = min(eval_every, max_rounds)
         done = 0
-        while done < max_rounds:
+        finished = [False] * S
+        last_xs: List[Any] = [None] * S
+        can_eval = self.eval_fn is not None or self.eval_batch_fn is not None
+        env_S = t_cp_S = None
+        if self._envelope:
+            # Loop-invariant: the envelope fleet maps t_cp and env per
+            # member (the Study's arms differ in b); a same-spec fleet
+            # broadcasts its shared values onto the member axis once.
+            bcast = lambda x: jnp.broadcast_to(x[None], (S, *x.shape))  # noqa: E731
+            env_S = jax.tree.map(bcast, self._trivial_env())
+            t_cp_S = None if t_cp_arg is None else bcast(t_cp_arg)
+        # LOCKSTEP NOTE: the per-chunk member bookkeeping below mirrors
+        # study._run_group's (multi-arm) driver — both are bit-parity
+        # tested against solo runs; change them together.
+        while done < max_rounds and not all(finished):
             n = min(R, max_rounds - done)
-            per = [self._chunk_inputs(it, strm, R, n) for it, strm in mats]
+            per: List[Any] = []
+            pre: List[Any] = []
+            for s in range(S):
+                if finished[s]:
+                    # Done-mask: an all-zero xs (valid=False rows) makes
+                    # the member's whole chunk an in-graph no-op — params,
+                    # opt state and PRNG key ride along untouched — and
+                    # its host streams are not consumed.
+                    per.append((jax.tree.map(np.zeros_like, last_xs[s]),
+                                None))
+                    pre.append(None)
+                    continue
+                if max_sim_time:
+                    pre.append((self._snapshot_iters(mats[s][0]),
+                                mats[s][1].state()
+                                if mats[s][1] is not None else None))
+                else:
+                    pre.append(None)
+                per.append(self._chunk_inputs(mats[s][0], mats[s][1], R, n))
+                last_xs[s] = per[s][0]
             # One stacked (S, R, ...) upload per chunk for the whole fleet.
             xs = jax.tree.map(lambda *ls: np.stack(ls), *[p[0] for p in per])
-            params_S, opt_S, key_S, ys = fleet_fn(
-                params_S, opt_S, key_S, weights, t_cp_arg,
-                self._data_dev, xs)
+            if self._envelope:
+                params_S, opt_S, key_S, ys = fleet_fn(
+                    params_S, opt_S, key_S, weights, t_cp_S,
+                    self._data_dev, xs, env_S)
+            else:
+                params_S, opt_S, key_S, ys = fleet_fn(
+                    params_S, opt_S, key_S, weights, t_cp_arg,
+                    self._data_dev, xs)
             ys = jax.device_get(ys)  # leaves (S, R): ONE fetch per chunk
             for s in range(S):
+                if finished[s]:
+                    continue
                 recs = self._chunk_records(
                     {k2: v[s] for k2, v in ys.items()}, per[s][1], n,
                     r0 + done, times[s])
+                if max_sim_time:
+                    for j, rec in enumerate(recs):
+                        if rec.sim_time >= max_sim_time:
+                            if j + 1 < n:
+                                # Same semantics as the solo driver: the
+                                # history truncates at the first exceeding
+                                # round and the member's host streams
+                                # rewind to it (device state stays
+                                # end-of-chunk, the documented deviation).
+                                self._rewind_chunk(
+                                    mats[s][0], mats[s][1], pre[s][0],
+                                    pre[s][1], j + 1)
+                            recs = recs[:j + 1]
+                            finished[s] = True
+                            break
                 histories[s].extend(recs)
-                times[s] = recs[-1].sim_time
+                times[s] = histories[s][-1].sim_time
             done += n
-            if self.eval_fn and (done % eval_every == 0 or done == max_rounds):
-                globals_S = _unstack_members(
-                    jax.tree.map(lambda x: x[:, 0], params_S), S)
+            if can_eval and (done % eval_every == 0 or done == max_rounds):
+                evs = self._eval_members(params_S, S)
                 for s in range(S):
-                    ev = self.eval_fn(globals_S[s])
                     rec = histories[s][-1]
-                    rec.test_acc = float(ev.get("acc", np.nan))
-                    rec.test_loss = float(ev.get("loss", np.nan))
+                    # Only members whose history reaches this boundary get
+                    # the eval record — a member truncated mid-chunk by
+                    # max_sim_time did not (its solo run would not eval
+                    # there either).
+                    if rec.round != r0 + done:
+                        continue
+                    rec.test_acc = float(evs[s].get("acc", np.nan))
+                    rec.test_loss = float(evs[s].get("loss", np.nan))
+                    if (target_acc and rec.test_acc is not None
+                            and rec.test_acc >= target_acc):
+                        finished[s] = True
         # One jitted call slices every member's (params, opt, key, global
         # model) out of the stacked buffers — per-member eager indexing
         # would cost S x leaves separate dispatches.
@@ -1066,13 +1217,25 @@ class Simulator:
         for s in range(S):
             p_s, o_s, k_s, global_s = members[s]
             st = self._rebuild_state(
-                states[s], p_s, o_s, k_s, r0 + done, times[s],
+                states[s], p_s, o_s, k_s, r0 + len(histories[s]), times[s],
                 mats[s][0], mats[s][1])
             out_states.append(st)
             results.append(SimResult(
                 history=histories[s], params=global_s,
                 label=f"{self.label}[seed={st.seed}]", fed=self.fed))
         return FleetResult(states=out_states, results=results)
+
+    def _eval_members(self, params_S, S: int) -> List[Dict]:
+        """Chunk-boundary eval for a stacked fleet: ONE vmapped dispatch
+        over the member axis via eval_batch_fn when available (each dict
+        value comes back (S,)), else the host-loop fallback over unstacked
+        globals."""
+        globals_S = jax.tree.map(lambda x: x[:, 0], params_S)
+        if self.eval_batch_fn is not None:
+            ev = self.eval_batch_fn(globals_S)
+            return [{k: v[s] for k, v in ev.items()} for s in range(S)]
+        members = _unstack_members(globals_S, S)
+        return [self.eval_fn(members[s]) for s in range(S)]
 
 
 # ---------------------------------------------------------------------------

@@ -78,6 +78,42 @@ def init_cnn(cfg: CNNConfig, key) -> Dict:
     }
 
 
+@jax.custom_vjp
+def _ps_matmul(a, w):
+    """`a @ w` with a *pad-stable* backward.
+
+    Forward is exactly the plain matmul (bit-identical to `a @ w`). The
+    backward restructures the filter gradient: XLA's autodiff dW is one
+    dot_general contracting over (batch x spatial), whose fp32
+    accumulation XLA re-associates when the contraction LENGTH changes —
+    so a batch padded with zero-cotangent rows (the Study API's
+    (V, b)-envelope, study.py) would not reproduce the unpadded bits.
+    Here dW is computed per sample (contraction over the sample's own
+    fixed-size spatial dims only) and then reduced over the leading batch
+    axis, where appended exact-zero per-sample grads cannot perturb the
+    accumulation. Verified bit-identical under zero-masked batch padding
+    and under client/fleet vmap in tests/test_study.py.
+    """
+    return a @ w
+
+
+def _ps_matmul_fwd(a, w):
+    return a @ w, (a, w)
+
+
+def _ps_matmul_bwd(res, dy):
+    a, w = res
+    K, O = w.shape
+    da = dy @ w.T
+    dw_b = jnp.einsum(
+        "bnk,bno->bko", a.reshape(a.shape[0], -1, K),
+        dy.reshape(dy.shape[0], -1, O))
+    return da, jnp.sum(dw_b, axis=0)
+
+
+_ps_matmul.defvjp(_ps_matmul_fwd, _ps_matmul_bwd)
+
+
 def _patches(x, k):
     """'SAME' kxk patches of x (B, H, W, C) -> (B, H, W, k*k*C), ordered to
     match an HWIO filter flattened as (k*k*C, O)."""
@@ -99,7 +135,7 @@ def _conv(x, p):
     # here (V fwd/bwd passes per client per round).
     k = p["w"].shape[0]
     w = p["w"].reshape(-1, p["w"].shape[-1])  # (k*k*C, O)
-    return _patches(x, k) @ w + p["b"]
+    return _ps_matmul(_patches(x, k), w) + p["b"]
 
 
 def _maxpool(x):
@@ -120,10 +156,49 @@ def cnn_forward(cfg: CNNConfig, params: Dict, images: jnp.ndarray) -> jnp.ndarra
     return x @ params["fc2"]["w"] + params["fc2"]["b"]
 
 
+def _seq_mean(v: jnp.ndarray, n) -> jnp.ndarray:
+    """Mean over a 1-D array via a sequential left-fold (lax.scan).
+
+    XLA's reduce re-associates its fp32 accumulation when the reduction
+    LENGTH changes, so `jnp.mean(nll[:b])` and a zero-masked mean over a
+    padded (b_env,) array can differ in the last ulp. A left-fold's
+    partial sums are prefix-stable: appending exact-zero terms (masked
+    padded samples) leaves every partial — and the total — bit-identical.
+    Both `cnn_loss` and `cnn_loss_masked` reduce through this, which is
+    what makes the Study envelope's train-loss HISTORY (not just the
+    trained params) bit-identical to unpadded runs. The gradient is
+    unchanged from jnp.mean (each element's cotangent is exactly 1/n)."""
+    total, _ = jax.lax.scan(
+        lambda acc, x: (acc + x, None), jnp.zeros((), v.dtype), v)
+    return total / n
+
+
 def cnn_loss(cfg: CNNConfig, params: Dict, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
     logits = cnn_forward(cfg, params, batch["x"])
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
-    loss = jnp.mean(nll)
+    loss = _seq_mean(nll, nll.shape[0])
     acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+    return loss, {"ce_loss": loss, "accuracy": acc}
+
+
+def cnn_loss_masked(
+    cfg: CNNConfig, params: Dict, batch: Dict, sample_mask: jnp.ndarray,
+    n: jnp.ndarray,
+) -> Tuple[jnp.ndarray, Dict]:
+    """`cnn_loss` over the first `n` samples of a padded batch.
+
+    sample_mask is a traced (B_env,) 0/1 float (the leading int(n) entries
+    are 1) and n the valid-sample count as f32. Padded rows contribute an
+    exact 0 to the nll sum (x * 0.0) and exact-zero logits cotangents, so
+    at any padding — including none — the loss and its params gradient are
+    bit-identical to `cnn_loss` on the unpadded batch (the `_ps_matmul`
+    backward keeps the conv filter gradients pad-stable). This is the
+    loss form the Study API's (V, b)-envelope round step runs."""
+    logits = cnn_forward(cfg, params, batch["x"])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
+    loss = _seq_mean(nll * sample_mask, n)
+    hit = (jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32)
+    acc = jnp.sum(hit * sample_mask) / n
     return loss, {"ce_loss": loss, "accuracy": acc}

@@ -56,8 +56,14 @@ def test_workflow_jobs_share_tier1_entrypoint():
     # Bench smoke guards the batched-vs-loop speedup and keeps an artifact.
     smoke = runs("bench-smoke")
     assert "bench_round_step.py" in smoke and "--check" in smoke
-    assert any("upload-artifact" in str(s.get("uses", ""))
-               for s in jobs["bench-smoke"]["steps"])
+    # ...and the grouped-study-vs-sequential gate, with its StudyResult
+    # JSON uploaded alongside the timing rows.
+    assert "bench_study.py" in smoke
+    uploads = [s for s in jobs["bench-smoke"]["steps"]
+               if "upload-artifact" in str(s.get("uses", ""))]
+    assert uploads
+    paths = " ".join(str(s["with"]["path"]) for s in uploads)
+    assert "study_smoke.json" in paths and "bench_smoke.json" in paths
 
 
 def test_workflow_caches_jax_install_keyed_on_pin():
