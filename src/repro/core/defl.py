@@ -76,6 +76,80 @@ def make_plan(
     )
 
 
+def deadline_plan(
+    fed: FedConfig,
+    pop: delay.DevicePopulation,
+    update_bits: float,
+    deadline: float,
+    wireless: Optional[WirelessConfig] = None,
+    participation: float = 1.0,
+    b_max: float = 64.0,
+) -> DEFLPlan:
+    """Deadline-aware variant of Algorithm 1: re-derive (b, V) when the
+    server truncates every round at `deadline` seconds (faults.FaultModel).
+
+    A deadline changes the problem in two coupled ways the unconstrained
+    KKT point cannot see:
+      * the Eq. 8 round cost saturates at min(deadline, T_cm + V*T_cp) —
+        talking/working past the deadline is free in wall clock but
+        useless (the update misses aggregation), so J = H * min(D, T);
+      * clients whose V*t_cp^m + t_cm^m exceeds the deadline are excluded,
+        shrinking the Eq. 12 effective M — an operating point is only
+        worth its feasible fraction of the population.
+
+    The objective is no longer smooth (the min kink and the per-client
+    feasibility steps), so instead of KKT conditions this does an exact
+    grid sweep over the quantized decision space: b in {2^n} up to b_max
+    x alpha on a log grid, scoring each point by H (at the
+    feasibility-scaled M) times the truncated round time, keeping only
+    points where at least one client finishes inside the deadline.
+    Raises ValueError when no (b, alpha) is feasible — the deadline is
+    shorter than the fastest client's single-iteration round.
+    """
+    wireless = wireless or WirelessConfig()
+    if fed.compress_updates:
+        update_bits = update_bits / 4.0
+    t_cm_m = delay.per_client_uplink_time(update_bits, wireless, pop.p, pop.h)
+    T_cm = float(np.max(t_cm_m))
+    g = float(max(pop.G / pop.f))
+    slopes = np.asarray(pop.G, np.float64) / np.asarray(pop.f, np.float64)
+
+    n_pow = max(int(np.floor(np.log2(b_max))), 0)
+    bs = 2.0 ** np.arange(0, n_pow + 1)
+    als = np.geomspace(1.0 / fed.nu, 20.0, 96)
+
+    best, best_J = None, np.inf
+    for b in bs:
+        for alpha in als:
+            V = max(int(round(fed.nu * alpha)), 1)
+            finish = V * slopes * b + t_cm_m  # per-client round span
+            feas = finish <= deadline
+            if not feas.any():
+                continue
+            M_eff = max(1, int(round(
+                fed.n_devices * participation * feas.mean())))
+            H = kkt.communication_rounds_alpha(
+                b, alpha, M_eff, fed.epsilon, fed.nu, fed.c)
+            T = min(deadline, T_cm + fed.nu * alpha * g * b)
+            J = H * T
+            if J < best_J:
+                best, best_J = (float(b), float(alpha), M_eff), J
+    if best is None:
+        raise ValueError(
+            f"deadline {deadline:.4g}s is infeasible: no client can finish "
+            "even one local iteration + upload inside it at any batch size")
+    b, alpha, M_eff = best
+    prob = kkt.DelayProblem(
+        T_cm=T_cm, g=g, M=M_eff, eps=fed.epsilon, nu=fed.nu, c=fed.c)
+    sol = kkt.evaluate(prob, b, alpha, method="deadline_grid")
+    return DEFLPlan(
+        b=int(sol.b), theta=sol.theta, V=sol.V, H_pred=sol.H, T_cm=T_cm,
+        T_cp=sol.T_cp,
+        T_round=min(deadline, sol.T_round),
+        overall_pred=sol.H * min(deadline, sol.T_round),
+        update_bits=update_bits, solution=sol, problem=prob)
+
+
 def plan_to_fedconfig(plan: DEFLPlan, fed: FedConfig) -> FedConfig:
     """Apply the DEFL plan onto a FedConfig (Alg. 1: run with b*, theta*)."""
     return dataclasses.replace(

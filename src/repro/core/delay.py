@@ -90,14 +90,51 @@ def round_comm_time(
     return float(np.max(per_client_uplink_time(update_bits, wc, p, h)))
 
 
+def effective_uplink_times(
+    update_bits: float, wc: WirelessConfig,
+    p: Sequence[float], h_att: np.ndarray, attempts: np.ndarray,
+    backoff_base: float = 0.0, backoff_factor: float = 2.0,
+) -> np.ndarray:
+    """Per-client uplink time under retransmission (fault path).
+
+    A client that made `a` attempts occupies the channel for the SUM of
+    its per-attempt Eq. 6 airtimes (each against that attempt's realized
+    gain, h_att[..., k]) plus the exponential-backoff waits before
+    attempts 2..a (backoff_base * backoff_factor**(k-1) before attempt
+    k+1). Clients with attempts == 0 (absent/crashed) fall back to their
+    attempt-0 single-shot time so the zero-participation full-population
+    clock fallback stays meaningful.
+
+    Shapes: p (M,) or broadcastable; h_att (..., M, A); attempts (..., M)
+    int. Returns (..., M) float64. Vectorized over an optional leading
+    round axis — the (R, M, A) chunk case is one expression, and each row
+    is bit-identical to the per-round call (the host f64 clock twin the
+    backends' bit parity rests on).
+    """
+    h_att = np.asarray(h_att, np.float64)
+    attempts = np.asarray(attempts)
+    p = np.asarray(p, np.float64)
+    t_att = per_client_uplink_time(update_bits, wc, p[..., None], h_att)
+    k = np.arange(h_att.shape[-1])
+    used = k < attempts[..., None]
+    t_used = np.where(used, t_att, 0.0).sum(axis=-1)
+    wait = np.where((k >= 1) & used,
+                    backoff_base * np.power(backoff_factor, k - 1.0),
+                    0.0).sum(axis=-1)
+    return np.where(attempts > 0, t_used + wait, t_att[..., 0])
+
+
 # ---------------------------------------------------------------------------
 # Round / overall time (Eq. 8, Eq. 13)
 # ---------------------------------------------------------------------------
 
 
-def round_time(T_cm: float, T_cp: float, V: int) -> float:
-    """Eq. 8: T = T_cm + V * T_cp."""
-    return T_cm + V * T_cp
+def round_time(T_cm: float, T_cp: float, V: int, deadline=None) -> float:
+    """Eq. 8: T = T_cm + V * T_cp — truncated at the server's round
+    deadline when one is set (deadline-bounded rounds: the server stops
+    waiting at `deadline` seconds and aggregates what arrived)."""
+    T = T_cm + V * T_cp
+    return min(deadline, T) if deadline is not None else T
 
 
 def masked_round_times(

@@ -36,6 +36,7 @@ from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
 from repro.core import defl, delay
 from repro.data import BatchIterator, make_cifar_like, make_mnist_like
 from repro.federated import scenarios
+from repro.federated.faults import FaultModel
 from repro.federated.partition import partition_dirichlet, partition_sizes
 from repro.federated.simulation import Simulator
 from repro.models import cnn
@@ -81,6 +82,10 @@ class ExperimentSpec:
     scenario       registered edge-scenario name (scenarios.py) or None;
                    draws the population and the per-round
                    participation/channel stream.
+    faults         optional faults.FaultModel overriding (or adding to)
+                   the scenario's failure semantics — deadlines, uplink
+                   retransmission, crash/rejoin, divergence guards. None
+                   keeps the scenario's own `faults` (if any).
     heterogeneity  population lognormal spread when no scenario is given.
     plan           solve Alg. 1 for (b*, theta*) against the population
                    before building (plan-or-fed: False runs `fed` as-is).
@@ -97,6 +102,7 @@ class ExperimentSpec:
     alpha: float = 1.0
     seed: int = 0
     scenario: Optional[str] = None
+    faults: Optional[FaultModel] = None
     heterogeneity: float = 0.0
     compute: ComputeConfig = CALIBRATED_COMPUTE
     wireless: WirelessConfig = WirelessConfig()
@@ -121,6 +127,15 @@ class ExperimentSpec:
                     f"unknown model {self.model!r}; registered: "
                     f"{tuple(MODELS)}") from None
         return self.model
+
+    def effective_faults(self) -> Optional[FaultModel]:
+        """The FaultModel this spec actually runs under: the spec's own
+        override when set, else the scenario's, else None. Inactive
+        models normalize to None (they are bit-identical to no model)."""
+        fm = self.faults
+        if fm is None and self.scenario is not None:
+            fm = scenarios.get(self.scenario).faults
+        return fm if fm is not None and fm.active else None
 
     def population(self) -> delay.DevicePopulation:
         if self.scenario is not None:
@@ -239,15 +254,21 @@ class ExperimentSpec:
         # The study-grouping capabilities: the (V, b)-envelope form of the
         # loss and a hashable compiled-graph signature — two sims with
         # equal envelope_key (and equal envelope dims) can share one
-        # compiled envelope chunk (study._chunk_for).
+        # compiled envelope chunk (study._chunk_for). The effective
+        # FaultModel is part of the signature: guard knobs and the fault
+        # branch are compiled into the chunk (an active FaultModel with
+        # no scenario also promotes the sim onto the scenario path).
+        eff_faults = self.effective_faults()
         envelope_key = (cfg, fed.n_devices, fed.lr, fed.compress_updates,
-                        self.impl, self.scenario is not None)
+                        self.impl,
+                        self.scenario is not None or eff_faults is not None,
+                        eff_faults)
         return Simulator(
             functools.partial(cnn.cnn_loss, cfg), params, data_factory,
             partition_sizes(parts), fed, sgd(fed.lr), pop,
             wireless=self.wireless, eval_fn=eval_fn, label=label,
             backend=self.backend, impl=self.impl, scenario=self.scenario,
-            eval_batch_fn=eval_batch_fn,
+            faults=self.faults, eval_batch_fn=eval_batch_fn,
             masked_loss_fn=functools.partial(cnn.cnn_loss_masked, cfg),
             envelope_key=envelope_key)
 

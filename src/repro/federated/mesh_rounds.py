@@ -313,6 +313,50 @@ def _psum_shardmap_sync(mesh, param_specs_tree, client_axes):
     return sync
 
 
+def _guard_clients(guard, new_p, params_C, losses, mask):
+    """Divergence-guard sanitation of per-client updates (fault layer).
+
+    guard is a STATIC (max_norm, reject_nonfinite) pair (see
+    faults.FaultModel.guard_spec — static per compiled graph, so the
+    clipping ops only exist when max_norm is finite). Per client the
+    update's global L2 norm across all leaves decides its fate:
+
+      non-finite (norm or loss) + reject  -> masked out of this round's
+          aggregation (the caller's mask-handling resets the row to its
+          pre-round state, so a NaN client restarts from the next global
+          model instead of poisoning it)
+      norm > max_norm -> delta scaled back to max_norm before
+          aggregation (the opt state keeps the raw step — clipping caps
+          the aggregate's exposure, it does not rewrite client history)
+
+    Returns (new_p, mask') where mask' folds the rejections into the
+    participation mask (mask=None is treated as full participation).
+    """
+    max_norm, reject = guard
+    deltas = jax.tree.map(
+        lambda n, o: n.astype(jnp.float32) - o.astype(jnp.float32),
+        new_p, params_C)
+    sq = jnp.zeros(losses.shape[0], jnp.float32)
+    for d in jax.tree.leaves(deltas):
+        sq = sq + jnp.sum(d.reshape(d.shape[0], -1) ** 2, axis=1)
+    norm = jnp.sqrt(sq)
+    finite = jnp.isfinite(norm) & jnp.isfinite(losses)
+    if max_norm < float("inf"):
+        scale = jnp.where(
+            finite, jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12)),
+            1.0)
+
+        def clip(o, d):
+            s = scale.reshape((scale.shape[0],) + (1,) * (d.ndim - 1))
+            return (o.astype(jnp.float32) + d * s).astype(o.dtype)
+
+        new_p = jax.tree.map(clip, params_C, deltas)
+    if reject:
+        ok = finite.astype(jnp.float32)
+        mask = ok if mask is None else mask * ok
+    return new_p, mask
+
+
 def build_round_step(
     loss_fn: Callable,
     opt: Optimizer,
@@ -323,6 +367,7 @@ def build_round_step(
     client_axes=None,
     impl: str = "xla",
     envelope: bool = False,
+    guard=None,
 ):
     """Build round_step(params_C, opt_C, batches, weights, keys=None,
     mask=None, clock_mask=None, t_cp=None, t_cm=None, env=None) with
@@ -358,6 +403,14 @@ def build_round_step(
     'v_count' f32} shared across the C clients of one member (the Study
     API's members all pad client-uniformly). The in-graph T_round then
     uses the traced v_count in place of the static V.
+
+    guard (static (max_norm, reject_nonfinite) pair, or None) compiles
+    the fault layer's divergence sanitation in front of aggregation: see
+    `_guard_clients`. Rejections fold into the participation mask, so
+    downstream weight renormalization / state selection / clock handling
+    are untouched; metrics gains 'mask_eff' (the post-guard mask) so
+    chunk-level consumers count participants guard-aware. guard=None
+    builds today's graph unchanged.
     """
     local = (envelope_local_steps_fn(loss_fn, opt) if envelope
              else local_steps_fn(loss_fn, opt))
@@ -377,6 +430,8 @@ def build_round_step(
                     env["sample_mask"], env["n_samples"])
         else:
             new_p, new_s, losses = jax.vmap(local)(params_C, opt_C, batches)
+        if guard is not None:
+            new_p, mask = _guard_clients(guard, new_p, params_C, losses, mask)
         any_p = None
         if mask is not None:
             weights, any_p = _participation_weights(weights, mask)
@@ -410,6 +465,8 @@ def build_round_step(
                    "per_client_loss": losses}
         if mask is not None:
             metrics["n_participants"] = jnp.sum(mask.astype(jnp.float32))
+            if guard is not None:
+                metrics["mask_eff"] = mask.astype(jnp.float32)
         if t_cp is not None and t_cm is not None:
             cmask = mask if clock_mask is None else clock_mask
             assert cmask is not None, "in-graph clock needs a clock_mask/mask"
@@ -431,6 +488,8 @@ def build_round_chunk(
     batch_from: Callable = None,
     update_bits: float = None,
     envelope: bool = False,
+    guard=None,
+    faults: bool = False,
 ):
     """Fuse a whole chunk of rounds into one `jax.lax.scan` over the round
     step: the host touches the device once per chunk instead of once per
@@ -476,11 +535,27 @@ def build_round_chunk(
     in-graph uplink_bits then uses env['update_bits'] (traced, so arms
     with different wire sizes share one compiled graph) instead of the
     static update_bits constant.
+
+    The fault layer (faults.FaultModel) adds two static build knobs that
+    keep everything in the ONE compiled scan:
+      guard        static (max_norm, reject) sanitation pair, forwarded
+                   to build_round_step — rejected clients count out of
+                   'loss'/'n_participants' via the post-guard 'mask_eff'.
+      faults=True  xs gains two traced (R,) leaves: 't_cap' (the round
+                   deadline in seconds, +inf when none — the in-graph
+                   'T_round' becomes min(t_cap, straggler max)) and
+                   'bits_mult' (total uplink ATTEMPTS this round — with
+                   retransmission every attempt's bits hit the air, so
+                   'uplink_bits' = bits_mult x bits-per-update instead of
+                   participants x bits). Deadline/retry exclusions are
+                   drawn host-side into the mask (simulation._fault_round)
+                   — the graph only consumes their traced results, so
+                   fault rounds neither retrace nor sync.
     """
     from repro.federated import compression
 
     step = build_round_step(loss_fn, opt, V, aggregation=aggregation,
-                            impl=impl, envelope=envelope)
+                            impl=impl, envelope=envelope, guard=guard)
     compress = aggregation == "int8_stochastic"
 
     def chunk_step(params_C, opt_C, key, weights, t_cp, data, xs, env=None):
@@ -505,16 +580,22 @@ def build_round_chunk(
                     t_cp=t_cp, t_cm=x["t_cm"], env=env)
                 # Mean over participating clients; NaN on a zero-
                 # participation round (same formula as the per-round
-                # backends, for bit parity).
-                n = jnp.sum(x["mask"])
-                loss = (jnp.sum(m["per_client_loss"] * x["mask"])
+                # backends, for bit parity). With a guard, participation
+                # is the post-sanitation mask.
+                msk = m.get("mask_eff", x["mask"])
+                n = jnp.sum(msk)
+                loss = (jnp.sum(m["per_client_loss"] * msk)
                         / jnp.where(n > 0, n, 1.0))
                 loss = jnp.where(n > 0, loss, jnp.nan)
+                T_round = m["T_round"]
+                if faults:
+                    T_round = jnp.minimum(x["t_cap"], T_round)
                 ys = {"loss": loss, "n_participants": n,
                       "T_cm": m["T_cm"], "T_cp": m["T_cp"],
-                      "T_round": m["T_round"]}
+                      "T_round": T_round}
                 if bits is not None:
-                    ys["uplink_bits"] = n * bits
+                    ys["uplink_bits"] = (x["bits_mult"] * bits if faults
+                                         else n * bits)
             else:
                 new_p, new_s, m = step(
                     params, opt_state, batches, weights, keys=keys_C,

@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
 from repro.core import defl, delay
+from repro.federated.faults import FaultModel
 
 
 # ---------------------------------------------------------------------------
@@ -42,17 +43,30 @@ class RoundRealization:
     """What one round of the scenario actually looked like.
 
     mask        (M,) bool — clients whose update reaches the aggregator
-                (present AND upload succeeded). Drives the FedAvg weights.
+                (present AND upload succeeded, possibly after retries).
+                Drives the FedAvg weights.
     clock_mask  (M,) bool — clients the synchronous server waits for
                 (present, whether or not their upload then fails). Drives
-                the Eq. 8 straggler max. mask is always a subset.
+                the Eq. 8 straggler max. mask is always a subset. Crashed
+                clients are absent from BOTH masks (the server's
+                heartbeat timeout knows not to wait for them).
     h           (M,) float — realized channel gains this round (drift
                 applied), feeding the vectorized Eq. 6 uplink times.
+
+    Fault-path extras (None unless the scenario has an active FaultModel):
+    attempts    (M,) int — uplink transmissions made this round (first
+                try + retries; 0 for absent clients). Every attempt's
+                airtime and bits are accounted.
+    h_att       (M, A) float — per-attempt realized channel gains
+                (A = 1 + max_retries; column 0 equals h). Retries see
+                freshly drawn AR(1) states.
     """
 
     mask: np.ndarray
     clock_mask: np.ndarray
     h: np.ndarray
+    attempts: Optional[np.ndarray] = None
+    h_att: Optional[np.ndarray] = None
 
     @property
     def n_participants(self) -> int:
@@ -65,11 +79,15 @@ class ChunkRealization:
     round axis: mask/clock_mask (R, M) bool, h (R, M) float. This is the
     host-side source for the scan backend's device-resident scenario
     stream — one (R, M) transfer per chunk instead of R per-round ones.
+    Fault-path extras stack the same way: attempts (R, M) int and h_att
+    (R, M, A) float, or None when the scenario has no active FaultModel.
     """
 
     mask: np.ndarray
     clock_mask: np.ndarray
     h: np.ndarray
+    attempts: Optional[np.ndarray] = None
+    h_att: Optional[np.ndarray] = None
 
     def __len__(self) -> int:
         return self.mask.shape[0]
@@ -81,7 +99,9 @@ class ChunkRealization:
 
     def round(self, i: int) -> RoundRealization:
         return RoundRealization(
-            mask=self.mask[i], clock_mask=self.clock_mask[i], h=self.h[i])
+            mask=self.mask[i], clock_mask=self.clock_mask[i], h=self.h[i],
+            attempts=None if self.attempts is None else self.attempts[i],
+            h_att=None if self.h_att is None else self.h_att[i])
 
 
 class ScenarioStream:
@@ -98,46 +118,97 @@ class ScenarioStream:
         self.pop = pop
         self._rng = np.random.default_rng(np.random.SeedSequence([seed, 0xED6E]))
         self._log_drift = np.zeros(pop.n)
+        # crash/rejoin lifecycle: rounds each client stays down (0 = alive)
+        self._down = np.zeros(pop.n, dtype=np.int64)
+
+    @property
+    def _faults(self) -> Optional[FaultModel]:
+        fm = self.scenario.faults
+        return fm if (fm is not None and fm.active) else None
 
     # -- snapshot / restore (SimState checkpointing) ------------------------
     def state(self) -> dict:
         """Value snapshot of the stream position: the RNG bit-generator
-        state plus the AR(1) drift carry. A stream restored from this via
-        `set_state` continues the realization sequence bit-identically —
-        the simulator's SimState carries these snapshots so a saved run
-        resumes on the exact mask/channel stream it left."""
+        state, the AR(1) drift carry, and the crash/rejoin down-counters.
+        A stream restored from this via `set_state` continues the
+        realization sequence bit-identically — the simulator's SimState
+        carries these snapshots so a saved run resumes on the exact
+        mask/channel stream it left, mid-crash-epoch included."""
         return {"rng": self._rng.bit_generator.state,
-                "log_drift": self._log_drift.copy()}
+                "log_drift": self._log_drift.copy(),
+                "down": self._down.copy()}
 
     def set_state(self, state: dict) -> None:
         self._rng.bit_generator.state = state["rng"]
         self._log_drift = np.asarray(state["log_drift"], float).copy()
+        # pre-fault snapshots have no "down" key: tolerate them (all-up)
+        down = state.get("down")
+        self._down = (np.zeros(self.pop.n, dtype=np.int64) if down is None
+                      else np.asarray(down, np.int64).copy())
 
     def _draw_round(self):
-        """One round's raw draws: (uploaded, present, h).
+        """One round's raw draws: (uploaded, present, h, attempts, h_att).
 
-        The draw order (dropout, link failure, drift — each an M-vector
-        from the shared RNG) is the stream's wire format: draw_chunk must
-        consume the generator in exactly this per-round interleaving so a
-        chunked run is bit-identical to a per-round run and the two call
-        styles can be mixed on one stream."""
+        The draw order (crash, dropout, link failure, drift, then the
+        retry attempts — each an M-vector from the shared RNG) is the
+        stream's wire format: draw_chunk must consume the generator in
+        exactly this per-round interleaving so a chunked run is
+        bit-identical to a per-round run and the two call styles can be
+        mixed on one stream. Every fault draw is gated on its knob, so a
+        scenario without an active FaultModel consumes the RNG exactly as
+        before faults existed (bit-identical legacy streams)."""
         s, M = self.scenario, self.pop.n
+        fm = self._faults
         present = np.ones(M, bool)
+        if fm is not None and fm.crash_rate > 0:
+            # alive -> crashed (down for rejoin_rounds) -> alive again
+            crashed = (self._down == 0) & (self._rng.random(M) < fm.crash_rate)
+            self._down[crashed] = fm.rejoin_rounds
+            present &= self._down == 0
+            self._down = np.maximum(self._down - 1, 0)
         if s.dropout > 0:
-            present = self._rng.random(M) >= s.dropout
+            present &= self._rng.random(M) >= s.dropout
         uploaded = present.copy()
+        failed = np.zeros(M, bool)
         if s.link_failure > 0:
-            uploaded &= self._rng.random(M) >= s.link_failure
+            failed = self._rng.random(M) < s.link_failure
+            uploaded &= ~failed
         h = self.pop.h
         if s.drift_sigma > 0:
             self._log_drift = (s.drift_rho * self._log_drift
                                + self._rng.normal(0.0, s.drift_sigma, M))
             h = h * np.exp(self._log_drift)
-        return uploaded, present, h
+        if fm is None:
+            return uploaded, present, h, None, None
+        # Retransmission: up to max_retries re-attempts, each against a
+        # freshly drawn AR(1) channel state. The retry drift rides a
+        # transient copy — the next round's channel continues from the
+        # attempt-0 state, so retries don't perturb the round-scale AR(1).
+        A = fm.n_attempts
+        h_att = np.empty((M, A), np.float64)
+        h_att[:, 0] = h
+        attempts = present.astype(np.int64)
+        pending = present & failed
+        log_d = self._log_drift.copy()
+        for k in range(1, A):
+            fail_k = np.zeros(M, bool)
+            if s.link_failure > 0:
+                fail_k = self._rng.random(M) < s.link_failure
+            if s.drift_sigma > 0:
+                log_d = (s.drift_rho * log_d
+                         + self._rng.normal(0.0, s.drift_sigma, M))
+                h_att[:, k] = self.pop.h * np.exp(log_d)
+            else:
+                h_att[:, k] = self.pop.h
+            attempts += pending
+            uploaded |= pending & ~fail_k
+            pending &= fail_k
+        return uploaded, present, h, attempts, h_att
 
     def next_round(self) -> RoundRealization:
-        uploaded, present, h = self._draw_round()
-        return RoundRealization(mask=uploaded, clock_mask=present, h=h)
+        uploaded, present, h, attempts, h_att = self._draw_round()
+        return RoundRealization(mask=uploaded, clock_mask=present, h=h,
+                                attempts=attempts, h_att=h_att)
 
     def draw_chunk(self, rounds: int) -> ChunkRealization:
         """Materialize the next `rounds` realizations as stacked (R, M)
@@ -150,10 +221,13 @@ class ScenarioStream:
         bit — property-tested in tests/test_scenarios.py — and advances
         the stream state identically."""
         draws = [self._draw_round() for _ in range(rounds)]
+        fault = self._faults is not None
         return ChunkRealization(
             mask=np.stack([d[0] for d in draws]),
             clock_mask=np.stack([d[1] for d in draws]),
-            h=np.stack([d[2] for d in draws]))
+            h=np.stack([d[2] for d in draws]),
+            attempts=np.stack([d[3] for d in draws]) if fault else None,
+            h_att=np.stack([d[4] for d in draws]) if fault else None)
 
 
 # ---------------------------------------------------------------------------
@@ -178,6 +252,11 @@ class Scenario:
       link_failure   P(upload lost | client present)     — Bernoulli
       drift_sigma    AR(1) innovation std of log channel drift
       drift_rho      AR(1) coefficient of the drift (persistence)
+
+    Fault/recovery semantics (deadlines, retransmission with backoff,
+    crash/rejoin lifecycle, divergence guards) layer on via `faults`
+    (faults.FaultModel); None or an inactive model is bit-identical to
+    the plain scenario.
     """
 
     name: str
@@ -192,6 +271,7 @@ class Scenario:
     link_failure: float = 0.0
     drift_sigma: float = 0.0
     drift_rho: float = 0.9
+    faults: Optional[FaultModel] = None
 
     # -- population -------------------------------------------------------
     def population(
@@ -234,8 +314,19 @@ class Scenario:
 
     @property
     def expected_participation(self) -> float:
-        """E[fraction of clients whose update arrives] per round."""
-        return (1.0 - self.dropout) * (1.0 - self.link_failure)
+        """E[fraction of clients whose update arrives] per round.
+
+        With an active FaultModel, retransmission turns one link-failure
+        draw into up-to-A independent ones (success 1 - q^A) and the
+        crash/rejoin chain caps availability at 1/(1 + crash_rate *
+        rejoin_rounds); without one this reduces exactly to the legacy
+        (1 - dropout)(1 - link_failure)."""
+        fm = self.faults if (self.faults is not None and self.faults.active) \
+            else None
+        if fm is None:
+            return (1.0 - self.dropout) * (1.0 - self.link_failure)
+        return (fm.availability() * (1.0 - self.dropout)
+                * fm.link_success(self.link_failure))
 
     def replace(self, **kw) -> "Scenario":
         return dataclasses.replace(self, **kw)
@@ -306,6 +397,19 @@ register(Scenario(
     cell_edge_frac=0.2, cell_edge_attenuation=0.1,
     dropout=0.2, link_failure=0.05, drift_sigma=0.15, drift_rho=0.9,
 ))
+register(Scenario(
+    "unreliable_edge",
+    "Production failure semantics: lossy drifting links with up-to-2 "
+    "retransmissions (exponential backoff), a 1.5x-nominal round "
+    "deadline that cuts stragglers out of aggregation, and a crash/"
+    "rejoin lifecycle (5% crash rate, 3-round heartbeat gap) over a "
+    "heterogeneous straggler population.",
+    compute_sigma=0.25, channel_sigma=0.25,
+    straggler_frac=0.2, straggler_slowdown=3.0,
+    dropout=0.1, link_failure=0.2, drift_sigma=0.15, drift_rho=0.9,
+    faults=FaultModel(deadline_factor=1.5, max_retries=2,
+                      backoff_base=0.05, crash_rate=0.05, rejoin_rounds=3),
+))
 
 
 # ---------------------------------------------------------------------------
@@ -327,8 +431,24 @@ def plan_for_scenario(
     The straggler maxes (Eqs. 5/7) are taken over the drawn population —
     a straggler or cell-edge cohort shifts (b*, theta*) — and expected
     partial participation shrinks the effective M in the Eq. 12 round-
-    count model (fewer updates per round average into the global model)."""
+    count model (fewer updates per round average into the global model).
+
+    A scenario whose FaultModel sets a round deadline re-solves under the
+    truncated delay model (defl.deadline_plan): the unconstrained plan is
+    solved first, a `deadline_factor` is resolved against its nominal
+    round time (one-step fixed point — the Simulator resolves against the
+    final fed's own nominal, so a planned spec can differ slightly; pass
+    an absolute `deadline` for exact agreement), and (b, V) are re-derived
+    over the deadline-feasible region."""
     scenario = get(scenario)
     pop = scenario.population(fed.n_devices, cc, wc, seed)
-    return defl.make_plan(fed, pop, update_bits, wireless=wc, method=method,
+    plan = defl.make_plan(fed, pop, update_bits, wireless=wc, method=method,
                           participation=scenario.expected_participation)
+    fm = scenario.faults
+    if fm is not None and fm.active and (
+            fm.deadline is not None or fm.deadline_factor is not None):
+        D = fm.resolve_deadline(plan.T_round)
+        plan = defl.deadline_plan(
+            fed, pop, update_bits, D, wireless=wc,
+            participation=scenario.expected_participation)
+    return plan

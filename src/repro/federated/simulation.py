@@ -93,6 +93,7 @@ import numpy as np
 from repro.configs.base import FedConfig, WirelessConfig
 from repro.core import delay
 from repro.federated import compression, mesh_rounds, scenarios
+from repro.federated.faults import DivergenceError, FaultModel
 from repro.federated.client import (
     client_round,
     make_local_update,
@@ -222,22 +223,83 @@ jax.tree_util.register_pytree_node(
     SimState, _simstate_flatten, _simstate_unflatten)
 
 
+# Checkpoint schema version: bump when the on-disk payload layout changes.
+_STATE_VERSION = 1
+
+
+def _state_signature(state: SimState) -> tuple:
+    """Shape signature of a state's device trio: the (params, opt, key)
+    treedef plus every leaf's shape/dtype. Pure metadata — np.shape and
+    .dtype never transfer device buffers — so it is cheap to compute at
+    save AND load and catches a checkpoint fed to the wrong spec (or a
+    truncated/corrupt payload) before JAX hits a cryptic unflatten or
+    donation shape error deep in the first compiled step."""
+    trio = (state.params_C, state.opt_C, state.key)
+    treedef = str(jax.tree.structure(trio))
+    leaves = tuple(
+        (tuple(np.shape(x)), str(getattr(x, "dtype", type(x).__name__)))
+        for x in jax.tree.leaves(trio))
+    return (treedef, leaves)
+
+
 def save_state(path: str, state: SimState) -> None:
     """Checkpoint a SimState: device leaves are fetched with
     `jax.device_get` and the whole value (host stream/iterator snapshots
-    included) is serialized. `load_state` + `Simulator.run` continues the
+    included) is serialized under a versioned envelope carrying the
+    state's shape signature. `load_state` + `Simulator.run` continues the
     run bit-identically (tests/test_checkpoint_resume.py)."""
+    host = jax.device_get(state)
+    payload = {"__repro_simstate__": _STATE_VERSION,
+               "signature": _state_signature(host),
+               "state": host}
     with open(path, "wb") as f:
-        pickle.dump(jax.device_get(state), f)
+        pickle.dump(payload, f)
 
 
-def load_state(path: str) -> SimState:
+def load_state(path: str, like: Optional[SimState] = None) -> SimState:
     """Restore a `save_state` checkpoint. Leaves come back as numpy; the
-    first compiled step re-uploads them (and re-donates from there)."""
-    with open(path, "rb") as f:
-        state = pickle.load(f)
-    if not isinstance(state, SimState):
+    first compiled step re-uploads them (and re-donates from there).
+
+    The payload is validated up front — schema version, held type, and
+    the saved shape signature against the actual leaves — so corruption
+    or a version skew fails here with a clear ValueError instead of as a
+    pytree/unflatten failure deep in JAX. Pass `like=` (any SimState from
+    the target Simulator, e.g. `sim.init()`) to additionally verify the
+    checkpoint matches that simulator's shapes before running it.
+    Legacy raw-pickle checkpoints (pre-envelope) still load."""
+    try:
+        with open(path, "rb") as f:
+            payload = pickle.load(f)
+    except (pickle.UnpicklingError, EOFError, AttributeError) as e:
+        raise ValueError(
+            f"{path!r} is not a readable checkpoint "
+            f"(corrupt or truncated pickle): {e}") from e
+    if isinstance(payload, SimState):  # legacy: raw SimState pickle
+        state = payload
+    elif isinstance(payload, dict) and "__repro_simstate__" in payload:
+        version = payload["__repro_simstate__"]
+        if version != _STATE_VERSION:
+            raise ValueError(
+                f"{path!r} holds checkpoint schema v{version}, this build "
+                f"reads v{_STATE_VERSION} — re-save the state with this "
+                "version (or load it with the matching build)")
+        state = payload.get("state")
+        if not isinstance(state, SimState):
+            raise ValueError(f"{path!r} does not hold a SimState")
+        sig = payload.get("signature")
+        if sig is not None and sig != _state_signature(state):
+            raise ValueError(
+                f"{path!r} is corrupt: its stored shape signature does not "
+                "match the payload's leaves")
+    else:
         raise ValueError(f"{path!r} does not hold a SimState")
+    if like is not None:
+        want, got = _state_signature(like), _state_signature(state)
+        if want != got:
+            raise ValueError(
+                f"checkpoint {path!r} was saved from a different spec: its "
+                "(params, opt, key) shape signature does not match the "
+                "target simulator's states")
     return state
 
 
@@ -328,6 +390,7 @@ class Simulator:
         eval_batch_fn: Optional[Callable] = None,  # stacked (S,...) params
         masked_loss_fn: Optional[Callable] = None,  # (p, batch, mask, n)
         envelope_key: Optional[Any] = None,  # study.py graph-cache key
+        faults: Optional[FaultModel] = None,  # fault/recovery overlay
     ):
         """eval_batch_fn evaluates a whole stacked member axis at once —
         (S, ...) param leaves -> dict of (S,) metrics — so fleet/study
@@ -337,7 +400,17 @@ class Simulator:
         envelope_key a hashable graph signature; both are optional
         capabilities the Study API (federated/study.py) uses to group
         this simulator's arm with others — ExperimentSpec.build provides
-        all three."""
+        all three.
+
+        `faults` overlays a faults.FaultModel on the scenario (deadline-
+        bounded rounds, uplink retransmission with backoff, crash/rejoin
+        lifecycle, divergence guards — see the faults module). A
+        fault-bearing scenario (e.g. the registered 'unreliable_edge')
+        works without this argument; the explicit kwarg layers faults on
+        any scenario — including none, which overlays onto 'uniform' so
+        the realization stream exists. An inactive FaultModel is ignored
+        entirely: the compiled graphs, RNG streams and accounting are
+        bit-identical to not passing one."""
         if backend not in ("scan", "batched", "loop"):
             raise ValueError(f"unknown backend {backend!r}")
         self.loss_fn = loss_fn
@@ -355,6 +428,18 @@ class Simulator:
         self.backend = backend
         self.impl = impl
         self.scenario = scenarios.get(scenario) if scenario is not None else None
+        if faults is not None and faults.active:
+            base = self.scenario or scenarios.get("uniform")
+            self.scenario = base.replace(faults=faults)
+        fm = self.scenario.faults if self.scenario is not None else None
+        self._faults = fm if (fm is not None and fm.active) else None
+        self._guard = None
+        if self._faults is not None:
+            self._faults.validate()
+            g = self._faults.guard_spec()
+            # A trivial guard (no clipping, no rejection) builds no ops at
+            # all — the graph stays byte-identical to the guard-less one.
+            self._guard = None if (g[0] == float("inf") and not g[1]) else g
         # Envelope-form graphs: when the masked loss is available, the
         # compiled batched/scan graphs run mesh_rounds' (V, b)-envelope
         # round step at the TRIVIAL envelope (V_env=V, B_env=b, all-ones
@@ -379,6 +464,13 @@ class Simulator:
         # or blocks the async queue (see the _update_bits docstring).
         self._param_struct = jax.eval_shape(lambda p: p, init_params)
         self._bits_cache: Optional[float] = None
+        # Round deadline in simulated seconds: a `deadline_factor` resolves
+        # against THIS sim's nominal full-population Eq. 8 round time, so
+        # the same FaultModel ports across models/populations.
+        self._deadline = None
+        if self._faults is not None:
+            nominal = delay.round_time(*self.round_times(), fed.local_rounds)
+            self._deadline = self._faults.resolve_deadline(nominal)
         self._fleet_fn = None
         self._fleet_base = None
         if backend == "loop":
@@ -566,7 +658,8 @@ class Simulator:
         envelope = self._envelope
         step = mesh_rounds.build_round_step(
             self.masked_loss_fn if envelope else self.loss_fn, self.opt, V,
-            aggregation=agg, impl=self.impl, envelope=envelope)
+            aggregation=agg, impl=self.impl, envelope=envelope,
+            guard=self._guard)
 
         if self.scenario is None:
             weights = self._weights
@@ -581,6 +674,7 @@ class Simulator:
                 return new_p, new_s, key, jnp.mean(metrics["per_client_loss"])
         else:
             sizes = self._sizes_f32
+            fault = self._faults is not None
 
             def round_fn(params_C, opt_C, key, batches,
                          mask, clock_mask, t_cp, t_cm, env=None):
@@ -593,10 +687,18 @@ class Simulator:
                     env=env)
                 # Mean over *participating* clients (the loop backend never
                 # runs dropped clients); NaN on a zero-participation round.
-                n = jnp.sum(mask)
-                loss = (jnp.sum(metrics["per_client_loss"] * mask)
+                # With a divergence guard, participation is the post-
+                # sanitation mask (rejected clients count as dropped).
+                msk = metrics.get("mask_eff", mask)
+                n = jnp.sum(msk)
+                loss = (jnp.sum(metrics["per_client_loss"] * msk)
                         / jnp.where(n > 0, n, 1.0))
                 loss = jnp.where(n > 0, loss, jnp.nan)
+                if fault:
+                    # Guard rejections are decided in-graph, so the true
+                    # participant count is a device scalar here (synced at
+                    # eval boundaries like the train losses).
+                    return new_p, new_s, key, loss, n
                 return new_p, new_s, key, loss
 
         # Donating the stacked params/opt/key buffers lets XLA write round
@@ -620,7 +722,9 @@ class Simulator:
             scenario=self.scenario is not None,
             batch_from=self._batch_from,
             update_bits=self._update_bits(),
-            envelope=self._envelope)
+            envelope=self._envelope,
+            guard=self._guard,
+            faults=self._faults is not None)
 
     def _chunk_call(self, params_C, opt_C, key, weights, t_cp_arg, xs):
         """One compiled chunk dispatch, threading the trivial envelope
@@ -651,6 +755,50 @@ class Simulator:
                     jnp.arange(M)))
         return self._fleet_base
 
+    # -- fault semantics (host f64 side) ------------------------------------
+    def _fault_round(self, real):
+        """Resolve a realization's retransmission + deadline semantics:
+        (real', t_cm_clients, attempts_total).
+
+        t_cm_clients is the effective per-client uplink time — the SUM of
+        every attempt's Eq. 6 airtime plus backoff waits (f64, the host
+        clock twin). With a deadline, clients whose V*t_cp + effective
+        uplink exceeds it are cut from the aggregation mask (they stay in
+        clock_mask: the server waited on them until the deadline). Both
+        decisions are host-side f64 — the compiled graph only consumes
+        their traced results — and idempotent, so re-applying to an
+        already-resolved realization is a no-op."""
+        fm = self._faults
+        t_cm = delay.effective_uplink_times(
+            self._update_bits(), self.wireless, self.pop.p,
+            real.h_att, real.attempts, fm.backoff_base, fm.backoff_factor)
+        if self._deadline is not None:
+            finish = self.fed.local_rounds * self._t_cp_clients + t_cm
+            mask = np.asarray(real.mask, bool) & (finish <= self._deadline)
+            real = dataclasses.replace(real, mask=mask)
+        return real, t_cm, int(real.attempts.sum())
+
+    def _raise_if_diverged(self, history, start: int, snap) -> int:
+        """run()-level divergence guard: a non-finite train loss on a
+        round that HAD participants means the aggregate itself is
+        poisoned (zero-participation rounds are legitimately NaN and
+        pass). Raises DivergenceError carrying the last-good snapshot;
+        returns the new checked-up-to index otherwise."""
+        for i in range(start, len(history)):
+            rec = history[i]
+            n_p = rec.n_participants
+            if (isinstance(rec.train_loss, float)
+                    and not np.isfinite(rec.train_loss)
+                    and (n_p is None or n_p > 0)):
+                raise DivergenceError(
+                    f"train loss became non-finite ({rec.train_loss}) at "
+                    f"round {rec.round} with "
+                    f"{'all' if n_p is None else n_p} participating "
+                    "clients; .state holds the last-good SimState "
+                    "snapshot, .history the records up to the failure",
+                    state=snap, history=history[:i + 1], round=rec.round)
+        return len(history)
+
     # -- per-round execution ------------------------------------------------
     def run_round(self, state: SimState, real=None, t_cm_clients=None):
         """One communication round: (state, metrics-dict). `real` is the
@@ -670,6 +818,10 @@ class Simulator:
         iters, stream = self._materialize(state)
         if self.scenario is not None and real is None:
             real = stream.next_round()
+        if self._faults is not None and real is not None:
+            real, t_cm_fault, _ = self._fault_round(real)
+            if t_cm_clients is None:
+                t_cm_clients = t_cm_fault
         if self.backend == "loop":
             params, opt_C, key, metrics = self._round_loop(
                 state.params_C, state.opt_C, state.key, iters, real)
@@ -697,6 +849,15 @@ class Simulator:
         clock_mask = jnp.asarray(real.clock_mask, jnp.float32)
         t_cp = jnp.asarray(self._t_cp_clients, jnp.float32)
         t_cm = jnp.asarray(t_cm_clients, jnp.float32)
+        if self._faults is not None:
+            # Guard rejections happen in-graph: the participant count is
+            # the compiled step's fifth output (a device scalar until the
+            # next _sync_history boundary).
+            params_C, opt_C, key, loss, n_dev = self._round_fn(
+                params_C, opt_C, key, batches, mask, clock_mask, t_cp,
+                t_cm, env)
+            return params_C, opt_C, key, {
+                "train_loss": loss, "n_participants": n_dev}
         params_C, opt_C, key, loss = self._round_fn(
             params_C, opt_C, key, batches, mask, clock_mask, t_cp, t_cm, env)
         return params_C, opt_C, key, {
@@ -723,20 +884,49 @@ class Simulator:
                 continue
             batches = stack_batches(
                 [jax.tree.map(jnp.asarray, b) for b in raw])
+            prev_opt = opt_states[m]
             delta, opt_states[m], loss_v = client_round(
                 self.local_update, params, opt_states[m], batches)
+            loss_m = float(jnp.mean(loss_v))
+            if self._guard is not None:
+                # Reference implementation of the in-graph divergence
+                # guard (mesh_rounds._guard_clients): same f32 norm, same
+                # reject/clip decisions, so the backends agree to the
+                # usual loop tolerance.
+                max_norm, reject = self._guard
+                sq = jnp.float32(0.0)
+                for d in jax.tree.leaves(delta):
+                    sq = sq + jnp.sum(jnp.asarray(d, jnp.float32) ** 2)
+                norm = float(jnp.sqrt(sq))
+                finite = np.isfinite(norm) and np.isfinite(loss_m)
+                if reject and not finite:
+                    # Rejected = dropped this round: pre-round opt state
+                    # restored, no delta, not counted a participant.
+                    opt_states[m] = prev_opt
+                    continue
+                if np.isfinite(max_norm) and finite:
+                    scale = min(1.0, max_norm / max(norm, 1e-12))
+                    # Mirror the batched clip exactly: reconstruct the
+                    # clipped params (o + d*scale) and re-derive the
+                    # delta from them, rounding included.
+                    delta = jax.tree.map(
+                        lambda o, d: (o.astype(jnp.float32)
+                                      + d.astype(jnp.float32) * scale)
+                        - o.astype(jnp.float32),
+                        params, delta)
             if self.fed.compress_updates:
                 delta = compression.decompress_update(
                     compression.compress_update(delta, keys_C[m], impl=self.impl),
                     impl=self.impl)
             deltas.append(delta)
             sizes.append(self.data_sizes[m])
-            losses.append(float(jnp.mean(loss_v)))
+            losses.append(loss_m)
         if deltas:  # zero-participation round: params unchanged
             params = aggregate_updates(params, deltas, sizes)
         out = {"train_loss": float(np.mean(losses)) if losses else float("nan")}
         if real is not None:
-            out["n_participants"] = int(mask.sum())
+            out["n_participants"] = (len(deltas) if self._guard is not None
+                                     else int(mask.sum()))
         return params, tuple(opt_states), key, out
 
     # -- chunked execution (scan backend) -----------------------------------
@@ -784,17 +974,41 @@ class Simulator:
         host = {}
         if self.scenario is not None:
             chunk = stream.draw_chunk(n)
-            t_cm = delay.per_client_uplink_time(
-                self._update_bits(), self.wireless, self.pop.p, chunk.h)
+            mask = np.asarray(chunk.mask, bool)
+            if self._faults is not None:
+                fm = self._faults
+                # Retransmission: the effective uplink time is the sum of
+                # per-attempt airtimes + backoff waits (f64 host twin,
+                # vectorized over the round axis — each row bit-identical
+                # to the per-round _fault_round transformation).
+                t_cm = delay.effective_uplink_times(
+                    self._update_bits(), self.wireless, self.pop.p,
+                    chunk.h_att, chunk.attempts,
+                    fm.backoff_base, fm.backoff_factor)
+                if self._deadline is not None:
+                    # Deadline exclusion: clients whose compute + effective
+                    # uplink overruns the server deadline miss aggregation.
+                    finish = (self.fed.local_rounds * self._t_cp_clients
+                              + t_cm)
+                    mask = mask & (finish <= self._deadline)
+                host["attempts"] = chunk.attempts.sum(axis=1)
+            else:
+                t_cm = delay.per_client_uplink_time(
+                    self._update_bits(), self.wireless, self.pop.p, chunk.h)
             # f64 host twin of the in-graph clock: bit-identical to the
             # per-round backends' accounting (delay.chunk_round_times).
             T_cm, T_cp = delay.chunk_round_times(
                 self._t_cp_clients, t_cm, chunk.clock_mask)
-            host = {"T_cm": T_cm, "T_cp": T_cp,
-                    "n_participants": chunk.n_participants}
-            xs["mask"] = pad(chunk.mask.astype(np.float32), R)
+            host.update({"T_cm": T_cm, "T_cp": T_cp,
+                         "n_participants": mask.sum(axis=1)})
+            xs["mask"] = pad(mask.astype(np.float32), R)
             xs["clock_mask"] = pad(chunk.clock_mask.astype(np.float32), R)
             xs["t_cm"] = pad(t_cm.astype(np.float32), R)
+            if self._faults is not None:
+                cap = np.inf if self._deadline is None else self._deadline
+                xs["t_cap"] = pad(np.full(n, cap, np.float32), R)
+                xs["bits_mult"] = pad(
+                    host["attempts"].astype(np.float32), R)
         return xs, host
 
     def _rewind_chunk(self, iters, stream, pre_data, pre_stream, t: int):
@@ -837,12 +1051,21 @@ class Simulator:
             if self.scenario is None:
                 T_cm, T_cp, n_part = T_cm_const, T_cp_const, None
                 bits = float(M * update_bits)
+            elif self._faults is not None:
+                T_cm = float(host["T_cm"][i])
+                T_cp = float(host["T_cp"][i])
+                # With a guard the true participant count is the in-graph
+                # post-sanitation one; client counts are exact in fp32.
+                n_part = int(ys["n_participants"][i])
+                # Every retransmission attempt's bits hit the air.
+                bits = float(host["attempts"][i] * update_bits)
             else:
                 T_cm = float(host["T_cm"][i])
                 T_cp = float(host["T_cp"][i])
                 n_part = int(host["n_participants"][i])
                 bits = float(n_part * update_bits)
-            sim_time += delay.round_time(T_cm, T_cp, V)
+            sim_time += delay.round_time(T_cm, T_cp, V,
+                                         deadline=self._deadline)
             records.append(RoundRecord(
                 round=r0 + i + 1, sim_time=sim_time, T_cm=T_cm, T_cp=T_cp,
                 train_loss=float(ys["loss"][i]),
@@ -881,6 +1104,12 @@ class Simulator:
         device state is end-of-chunk (documented deviation — the chunk is
         already in flight)."""
         iters, stream = self._materialize(state)
+        guard_on = (self._faults is not None
+                    and self._faults.divergence_guard)
+        # Last-good snapshot for DivergenceError recovery: taken BEFORE
+        # the chunk consumes (donates) the state, refreshed per chunk.
+        snap = jax.device_get(state) if guard_on else None
+        checked = 0
         params_C, opt_C, key = state.params_C, state.opt_C, state.key
         history: List[RoundRecord] = []
         sim_time = state.sim_time
@@ -925,6 +1154,11 @@ class Simulator:
             history.extend(records)
             done = history[-1].round - r0
             sim_time = history[-1].sim_time
+            if guard_on:
+                checked = self._raise_if_diverged(history, checked, snap)
+                snap = jax.device_get(self._rebuild_state(
+                    state, params_C, opt_C, key, r0 + done, sim_time,
+                    iters, stream))
             rec = history[-1]
             k = rec.round - r0
             at_boundary = k % eval_every == 0 or k == max_rounds
@@ -950,10 +1184,14 @@ class Simulator:
     # -- training -----------------------------------------------------------
     @staticmethod
     def _sync_history(history: List[RoundRecord]) -> None:
-        """Host-sync boundary: materialize any still-on-device train losses."""
+        """Host-sync boundary: materialize any still-on-device train losses
+        (and, on the fault path, participant counts)."""
         for rec in history:
             if not isinstance(rec.train_loss, float):
                 rec.train_loss = float(rec.train_loss)
+            if rec.n_participants is not None and not isinstance(
+                    rec.n_participants, int):
+                rec.n_participants = int(rec.n_participants)
 
     def run(
         self,
@@ -975,6 +1213,10 @@ class Simulator:
             return self._run_scan(state, max_rounds, target_acc, eval_every,
                                   max_sim_time)
         iters, stream = self._materialize(state)
+        guard_on = (self._faults is not None
+                    and self._faults.divergence_guard)
+        snap = jax.device_get(state) if guard_on else None
+        checked = 0
         params_C, opt_C, key = state.params_C, state.opt_C, state.key
         history: List[RoundRecord] = []
         sim_time = state.sim_time
@@ -985,13 +1227,17 @@ class Simulator:
         for k in range(1, max_rounds + 1):
             real = None
             t_cm_clients = None
+            n_attempts = None
             if self.scenario is not None:
                 # Realize the round (host-side numpy: mask + channel), take
                 # the Eq. 8 clock as the straggler max over participating
                 # clients, and feed the same realization to the round step.
                 real = stream.next_round()
-                t_cm_clients = delay.per_client_uplink_time(
-                    update_bits, self.wireless, self.pop.p, real.h)
+                if self._faults is not None:
+                    real, t_cm_clients, n_attempts = self._fault_round(real)
+                else:
+                    t_cm_clients = delay.per_client_uplink_time(
+                        update_bits, self.wireless, self.pop.p, real.h)
                 T_cm, T_cp = delay.masked_round_times(
                     self._t_cp_clients, t_cm_clients, real.clock_mask)
             if self.backend == "loop":
@@ -1000,15 +1246,20 @@ class Simulator:
             else:
                 params_C, opt_C, key, metrics = self._round_batched(
                     params_C, opt_C, key, iters, real, t_cm_clients)
-            sim_time += delay.round_time(T_cm, T_cp, V)
+            sim_time += delay.round_time(T_cm, T_cp, V,
+                                         deadline=self._deadline)
             n_part = metrics.get("n_participants")
+            if n_attempts is not None:
+                bits = float(n_attempts * update_bits)
+            else:
+                bits = float(
+                    (self.fed.n_devices if n_part is None else n_part)
+                    * update_bits)
             rec = RoundRecord(
                 round=r0 + k, sim_time=sim_time, T_cm=T_cm, T_cp=T_cp,
                 train_loss=metrics["train_loss"],
                 n_participants=n_part,
-                uplink_bits=float(
-                    (self.fed.n_devices if n_part is None else n_part)
-                    * update_bits))
+                uplink_bits=bits)
             history.append(rec)
             at_boundary = k % eval_every == 0 or k == max_rounds
             if self.eval_fn and at_boundary:
@@ -1017,11 +1268,18 @@ class Simulator:
                 rec.test_loss = float(ev.get("loss", np.nan))
             if at_boundary:
                 self._sync_history(history)
+                if guard_on:
+                    checked = self._raise_if_diverged(history, checked, snap)
+                    snap = jax.device_get(self._rebuild_state(
+                        state, params_C, opt_C, key, r0 + k, sim_time,
+                        iters, stream))
             if target_acc and rec.test_acc is not None and rec.test_acc >= target_acc:
                 break
             if max_sim_time and sim_time >= max_sim_time:
                 break
         self._sync_history(history)
+        if guard_on:
+            self._raise_if_diverged(history, checked, snap)
         new_state = self._rebuild_state(
             state, params_C, opt_C, key, r0 + len(history), sim_time,
             iters, stream)

@@ -77,9 +77,13 @@ def _group_signature(spec: ExperimentSpec, fed) -> tuple:
     inputs — model, data/partition/population draw, scenario, lr,
     compression, impl — EXCEPT the per-arm (b, V) plan, which the
     envelope absorbs, and plan constants (epsilon/nu/c) that only exist
-    to derive it."""
+    to derive it. The effective FaultModel is part of the signature —
+    guard knobs and the fault branch are compiled into the group's
+    graph, and the fault inputs (attempt times, deadlines) are per-arm
+    host values that must agree across a group's members."""
     return (spec.model, spec.dataset, spec.n_train, spec.n_test, spec.alpha,
-            spec.seed, spec.scenario, spec.heterogeneity, spec.compute,
+            spec.seed, spec.scenario, spec.effective_faults(),
+            spec.heterogeneity, spec.compute,
             spec.wireless, spec.backend, spec.impl, spec.with_eval,
             fed.n_devices, fed.lr, fed.compress_updates)
 
@@ -129,7 +133,8 @@ def _group_fns(rep: Simulator, V_env: int, B_env: int):
     chunk = mesh_rounds.build_round_chunk(
         rep.masked_loss_fn, rep.opt, V_env, rep.fed.n_devices,
         aggregation=agg, impl=rep.impl, scenario=rep.scenario is not None,
-        batch_from=rep._batch_from, envelope=True)
+        batch_from=rep._batch_from, envelope=True,
+        guard=rep._guard, faults=rep._faults is not None)
     fns = (chunk, jax.jit(mesh_rounds.build_fleet_chunk(chunk, envelope=True),
                           donate_argnums=(0, 1, 2)))
     if key is not None:
@@ -286,14 +291,32 @@ class StudyResult:
         return self.results[label]
 
     def time_to_target(self, label: str) -> np.ndarray:
-        """(S,) per-seed time to `target_acc` — the member's early-stop
-        time when it hit the target, its total simulated time otherwise
-        (the fleet and solo paths now share these semantics: both early
-        stop in-run)."""
+        """(S,) per-seed time to `target_acc` — NaN for a seed that never
+        hit the target (previously its total time leaked in, silently
+        deflating 'time-to-target' means for arms that never got there).
+        With no target_acc every seed 'hits' at its total simulated time.
+        `time_to_target_or_total` keeps the old semantics for headline
+        comparisons that need a finite per-seed number."""
+        if not self.target_acc:
+            return np.asarray([r.total_time for r in self.results[label]])
         return np.asarray([
-            (r.time_to_accuracy(self.target_acc) if self.target_acc
-             else None) or r.total_time
-            for r in self.results[label]])
+            t if (t := r.time_to_accuracy(self.target_acc)) is not None
+            else np.nan
+            for r in self.results[label]], np.float64)
+
+    def time_to_target_or_total(self, label: str) -> np.ndarray:
+        """(S,) per-seed time to target, falling back to the member's
+        total simulated time for seeds that missed — the conservative
+        finite bound the paper-style reduction/table columns compare on
+        (a missed seed costs its whole run)."""
+        tta = self.time_to_target(label)
+        totals = np.asarray([r.total_time for r in self.results[label]])
+        return np.where(np.isfinite(tta), tta, totals)
+
+    def target_hit_rate(self, label: str) -> float:
+        """Fraction of seeds that reached `target_acc` (1.0 when no
+        target was set: every run 'completes')."""
+        return float(np.isfinite(self.time_to_target(label)).mean())
 
     def final_accs(self, label: str) -> np.ndarray:
         return np.asarray([
@@ -306,6 +329,7 @@ class StudyResult:
         accs = self.final_accs(label)
         have_acc = bool(np.isfinite(accs).any())
         tta = self.time_to_target(label)
+        have_tta = bool(np.isfinite(tta).any())
         rounds = np.asarray([r.rounds for r in self.results[label]])
         parts = [h.n_participants for r in self.results[label]
                  for h in r.history if h.n_participants is not None]
@@ -316,8 +340,14 @@ class StudyResult:
                                else float("nan")),
             "final_acc_std": (float(np.nanstd(accs)) if have_acc
                               else float("nan")),
-            "time_to_target_mean": float(tta.mean()),
-            "time_to_target_std": float(tta.std()),
+            # Means over the seeds that HIT the target: one missed seed
+            # used to poison these to NaN (or worse, count its total time
+            # as a 'time to target'); the hit rate says how many made it.
+            "time_to_target_mean": (float(np.nanmean(tta)) if have_tta
+                                    else float("nan")),
+            "time_to_target_std": (float(np.nanstd(tta)) if have_tta
+                                   else float("nan")),
+            "target_hit_rate": self.target_hit_rate(label),
             "rounds_mean": float(rounds.mean()),
             "mean_participants": (float(np.mean(parts)) if parts
                                   else float("nan")),
@@ -326,9 +356,11 @@ class StudyResult:
     def reduction(self, label: str, baseline: str) -> float:
         """Paper-style '% overall-time reduction' of `label` vs `baseline`
         on mean time-to-target — like-for-like on both the solo and the
-        fleet path (both early stop in-run)."""
-        a = float(self.time_to_target(label).mean())
-        b = float(self.time_to_target(baseline).mean())
+        fleet path (both early stop in-run). Missed seeds count their
+        total run time (time_to_target_or_total), so the comparison stays
+        finite and conservative when an arm misses the target."""
+        a = float(self.time_to_target_or_total(label).mean())
+        b = float(self.time_to_target_or_total(baseline).mean())
         return 100.0 * (1.0 - a / b)
 
     def table(self) -> Tuple[str, List[tuple]]:
@@ -340,7 +372,7 @@ class StudyResult:
         for label in self.labels:
             s = self.summary(label)
             fed = self.results[label][0].fed
-            tta = self.time_to_target(label)
+            tta = self.time_to_target_or_total(label)
             hit = [r.time_to_accuracy(self.target_acc) is not None
                    for r in self.results[label]] if self.target_acc else []
             rows.append((

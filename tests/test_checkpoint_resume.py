@@ -91,6 +91,81 @@ def test_load_state_rejects_non_state(tmp_path):
         load_state(path)
 
 
+def _saved_state(spec, tmp_path, seed=0, name="ckpt.pkl"):
+    sim = spec.build()
+    state, _ = sim.run(sim.init(seed), max_rounds=2, eval_every=2)
+    path = os.path.join(tmp_path, name)
+    save_state(path, state)
+    return path
+
+
+def test_load_state_rejects_version_skew(tmp_path):
+    import pickle
+
+    path = _saved_state(_spec("scan", None), tmp_path)
+    with open(path, "rb") as f:
+        payload = pickle.load(f)
+    payload["__repro_simstate__"] = 999
+    with open(path, "wb") as f:
+        pickle.dump(payload, f)
+    with pytest.raises(ValueError, match="schema v999"):
+        load_state(path)
+
+
+def test_load_state_rejects_corrupt_signature(tmp_path):
+    import pickle
+
+    path = _saved_state(_spec("scan", None), tmp_path)
+    with open(path, "rb") as f:
+        payload = pickle.load(f)
+    treedef, leaves = payload["signature"]
+    payload["signature"] = (treedef, leaves[:-1])  # truncated leaf list
+    with open(path, "wb") as f:
+        pickle.dump(payload, f)
+    with pytest.raises(ValueError, match="corrupt"):
+        load_state(path)
+
+
+def test_load_state_rejects_wrong_spec_via_like(tmp_path):
+    path = _saved_state(_spec("scan", None), tmp_path)
+    other = _spec("scan", None).replace(
+        fed=FedConfig(n_devices=4, batch_size=8, theta=0.62, lr=0.05,
+                      compress_updates=True))
+    with pytest.raises(ValueError, match="different spec"):
+        load_state(path, like=other.build().init(0))
+    # the matching spec passes the same check
+    state = load_state(path, like=_spec("scan", None).build().init(0))
+    assert isinstance(state, SimState)
+
+
+def test_load_state_rejects_truncated_pickle(tmp_path):
+    path = _saved_state(_spec("scan", None), tmp_path)
+    raw = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(raw[: len(raw) // 2])
+    with pytest.raises(ValueError, match="not a readable checkpoint"):
+        load_state(path)
+
+
+def test_load_state_accepts_legacy_raw_pickle(tmp_path):
+    """Pre-envelope checkpoints were a bare pickled SimState; they must
+    keep loading (and resuming) unchanged."""
+    import pickle
+
+    spec = _spec("scan", "dropout")
+    sim = spec.build()
+    state, _ = sim.run(sim.init(0), max_rounds=2, eval_every=2)
+    host = jax.device_get(state)
+    path = os.path.join(tmp_path, "legacy.pkl")
+    with open(path, "wb") as f:
+        pickle.dump(host, f)
+    restored = load_state(path, like=spec.build().init(0))
+    assert isinstance(restored, SimState) and restored.round == 2
+    _, resumed = spec.build().run(restored, max_rounds=2, eval_every=2)
+    _, ref = spec.build().run(state, max_rounds=2, eval_every=2)
+    _tail_matches(ref.history, resumed.history)
+
+
 def test_max_sim_time_stop_leaves_resumable_state():
     """A max_sim_time stop that truncates mid-chunk must leave the
     state's host streams at the truncation round, not the chunk end: the

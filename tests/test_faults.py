@@ -1,0 +1,532 @@
+"""Fault-injection & recovery layer (federated/faults.py): deadline
+truncation of the Eq. 8 clock, retransmission time/bits accounting,
+crash/rejoin lifecycle, divergence guards, and the invariant everything
+rests on — an inactive FaultModel is bit-identical to no FaultModel, and
+an active one keeps scan == batched bit-for-bit through one trace."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
+from repro.core import delay, defl
+from repro.federated import scenarios
+from repro.federated.faults import DivergenceError, FaultModel
+from repro.federated.simulation import (SimState, Simulator, load_state,
+                                        save_state)
+from repro.optim import sgd
+
+
+def _quad_loss(params, batch):
+    diff = params["w"] - batch["target"]
+    return 0.5 * jnp.sum(diff * diff), {}
+
+
+class _TargetIterator:
+    """Batch source WITHOUT the index protocol (generic pre-stacked data
+    path on the scan backend)."""
+
+    def __init__(self, target, batch_size):
+        self.target = np.asarray(target, np.float32)
+        self.batch_size = batch_size
+
+    def next_batch(self):
+        return {"target": np.tile(self.target, (self.batch_size, 1))}
+
+
+def _quad_sim(backend, scenario=None, faults=None, compress=True,
+              momentum=0.9, seed=0, targets=None):
+    M, d, b = 4, 16, 2
+    fed = FedConfig(n_devices=M, batch_size=b, lr=0.05, seed=seed,
+                    compress_updates=compress)
+    scen = scenarios.get(scenario) if scenario is not None else None
+    pop = (scen.population(M, seed=seed) if scen is not None else
+           delay.draw_population(M, ComputeConfig(), WirelessConfig(), 0, 0.0))
+    if targets is None:
+        targets = [np.linspace(0.0, m, d) * 0.1 for m in range(M)]
+    iters = [_TargetIterator(t, b) for t in targets]
+    return Simulator(
+        _quad_loss, {"w": jnp.zeros(d)}, iters,
+        np.array([10, 20, 30, 40]), fed, sgd(fed.lr, momentum), pop,
+        backend=backend, scenario=scen, faults=faults)
+
+
+def _run(sim, **kw):
+    _, res = sim.run(sim.init(), **kw)
+    return res
+
+
+def _assert_bit_identical(res_scan, res_batched):
+    for a, b in zip(jax.tree.leaves(res_batched.params),
+                    jax.tree.leaves(res_scan.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for rb, rs in zip(res_batched.history, res_scan.history):
+        assert rb.round == rs.round
+        np.testing.assert_array_equal(rb.train_loss, rs.train_loss)
+        assert rb.sim_time == rs.sim_time
+        assert rb.T_cm == rs.T_cm and rb.T_cp == rs.T_cp
+        assert rb.n_participants == rs.n_participants
+        assert rb.uplink_bits == rs.uplink_bits
+    assert len(res_batched.history) == len(res_scan.history)
+
+
+def _durations(res):
+    times = [r.sim_time for r in res.history]
+    return np.diff([0.0] + times)
+
+
+# ---------------------------------------------------------------------------
+# FaultModel: activation, validation, derived quantities
+# ---------------------------------------------------------------------------
+
+
+def test_fault_model_activation_flags():
+    assert FaultModel().active is False
+    # the guards alone don't activate (they're on whenever ANY fault is)
+    assert FaultModel(reject_nonfinite=False).active is False
+    assert FaultModel(divergence_guard=False).active is False
+    assert FaultModel(max_retries=1).active is True
+    assert FaultModel(deadline=1.0).active is True
+    assert FaultModel(deadline_factor=2.0).active is True
+    assert FaultModel(crash_rate=0.1).active is True
+    assert FaultModel(max_update_norm=1.0).active is True
+    assert FaultModel(max_retries=2).n_attempts == 3
+
+
+@pytest.mark.parametrize("bad", [
+    dict(deadline=0.0),
+    dict(deadline_factor=-1.0),
+    dict(deadline=1.0, deadline_factor=1.5),
+    dict(max_retries=-1),
+    dict(backoff_base=-0.1),
+    dict(backoff_factor=0.5),
+    dict(crash_rate=1.0),
+    dict(crash_rate=-0.1),
+    dict(rejoin_rounds=0),
+    dict(max_update_norm=0.0),
+])
+def test_fault_model_validate_rejects(bad):
+    with pytest.raises(ValueError):
+        FaultModel(**bad).validate()
+
+
+def test_fault_model_resolve_deadline_and_guard_spec():
+    assert FaultModel().resolve_deadline(3.0) is None
+    assert FaultModel(deadline=2.5).resolve_deadline(3.0) == 2.5
+    assert FaultModel(deadline_factor=1.5).resolve_deadline(3.0) == 4.5
+    assert FaultModel().guard_spec() == (float("inf"), True)
+    assert FaultModel(max_update_norm=0.1,
+                      reject_nonfinite=False).guard_spec() == (0.1, False)
+
+
+def test_expected_participation_composes_fault_knobs():
+    scen = scenarios.get("unreliable_edge")
+    fm = scen.faults
+    assert fm is not None and fm.active
+    want = (fm.availability() * (1.0 - scen.dropout)
+            * fm.link_success(scen.link_failure))
+    assert scen.expected_participation == pytest.approx(want)
+    # and the legacy formula when no faults are attached
+    plain = scenarios.get("dropout")
+    assert plain.expected_participation == pytest.approx(
+        (1 - plain.dropout) * (1 - plain.link_failure))
+
+
+# ---------------------------------------------------------------------------
+# Inactive model == no model (bit-identical)
+# ---------------------------------------------------------------------------
+
+
+def test_inactive_fault_model_is_bit_identical():
+    ref = _run(_quad_sim("scan", "hetero_storm"), max_rounds=5, eval_every=2)
+    res = _run(_quad_sim("scan", "hetero_storm", faults=FaultModel()),
+               max_rounds=5, eval_every=2)
+    _assert_bit_identical(res, ref)
+
+
+def test_faults_without_scenario_overlay_uniform():
+    sim = _quad_sim("scan", None, faults=FaultModel(max_retries=1))
+    assert sim.scenario is not None and sim.scenario.name == "uniform"
+    assert sim._faults is not None
+    res = _run(sim, max_rounds=3)
+    assert sim.trace_count == 1
+    assert all(r.n_participants == 4 for r in res.history)
+
+
+# ---------------------------------------------------------------------------
+# Deadline-bounded rounds
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_truncates_clock_and_excludes_stragglers():
+    ref = _run(_quad_sim("scan", "stragglers"), max_rounds=8, eval_every=4)
+    d0 = float(_durations(ref).max())
+    D = 0.75 * d0
+    fm = FaultModel(deadline=D)
+    sim = _quad_sim("scan", "stragglers", faults=fm)
+    assert sim._deadline == pytest.approx(D)
+    res = _run(sim, max_rounds=8, eval_every=4)
+    assert sim.trace_count == 1
+    durs = _durations(res)
+    # property: no round's wall clock exceeds the deadline...
+    assert np.all(durs <= D * (1 + 1e-12))
+    # ...the straggler cohort misses it and is cut from aggregation...
+    assert all(r.n_participants < 4 for r in res.history)
+    assert all(r.n_participants >= 1 for r in res.history)
+    # ...and the run finishes strictly sooner than without the deadline.
+    assert res.total_time < ref.total_time
+    # scan == batched bit parity on the deadline path
+    rb = _run(_quad_sim("batched", "stragglers", faults=fm),
+              max_rounds=8, eval_every=4)
+    _assert_bit_identical(res, rb)
+
+
+def test_deadline_factor_resolves_against_nominal():
+    sim = _quad_sim("scan", "stragglers",
+                    faults=FaultModel(deadline_factor=1.5))
+    nominal = delay.round_time(*sim.round_times(), sim.fed.local_rounds)
+    assert sim._deadline == pytest.approx(1.5 * nominal)
+
+
+# ---------------------------------------------------------------------------
+# Retransmission: time & bits accounting
+# ---------------------------------------------------------------------------
+
+
+def test_effective_uplink_times_accounting():
+    wc = WirelessConfig()
+    M, A, bits = 5, 3, 1e5
+    rng = np.random.default_rng(7)
+    p = np.full(M, wc.tx_power_w)
+    h_att = wc.mean_channel_gain * rng.lognormal(0.0, 0.3, (M, A))
+    t_att = np.stack([delay.per_client_uplink_time(bits, wc, p, h_att[:, k])
+                      for k in range(A)], axis=-1)
+    # one attempt == the single-shot Eq. 6 time against the attempt-0 gain
+    one = delay.effective_uplink_times(bits, wc, p, h_att, np.ones(M, int))
+    np.testing.assert_array_equal(one, t_att[:, 0])
+    # a attempts == sum of the a airtimes + exponential backoff waits
+    three = delay.effective_uplink_times(
+        bits, wc, p, h_att, np.full(M, 3), backoff_base=0.1,
+        backoff_factor=2.0)
+    np.testing.assert_allclose(three, t_att.sum(axis=-1) + 0.1 + 0.2,
+                               rtol=1e-12)
+    # absent clients (0 attempts) fall back to the attempt-0 time
+    zero = delay.effective_uplink_times(bits, wc, p, h_att, np.zeros(M, int))
+    np.testing.assert_array_equal(zero, t_att[:, 0])
+
+
+def test_effective_uplink_times_vectorized_rows_bit_identical():
+    wc = WirelessConfig()
+    R, M, A, bits = 4, 6, 3, 2e5
+    rng = np.random.default_rng(3)
+    p = np.full(M, wc.tx_power_w)
+    h_att = wc.mean_channel_gain * rng.lognormal(0.0, 0.4, (R, M, A))
+    attempts = rng.integers(0, A + 1, (R, M))
+    stacked = delay.effective_uplink_times(
+        bits, wc, p, h_att, attempts, backoff_base=0.02, backoff_factor=2.0)
+    for r in range(R):
+        row = delay.effective_uplink_times(
+            bits, wc, p, h_att[r], attempts[r], backoff_base=0.02,
+            backoff_factor=2.0)
+        np.testing.assert_array_equal(stacked[r], row)
+
+
+def test_retry_stream_and_uplink_bits_accounting():
+    lossy = scenarios.Scenario(
+        "lossy", "retry accounting fixture", link_failure=0.4)
+    fm = FaultModel(max_retries=2, backoff_base=0.05)
+    sim = _quad_sim("scan", lossy, faults=fm)
+    state0 = sim.init()
+    seed = state0.seed
+    _, res = sim.run(state0, max_rounds=6, eval_every=2)
+    assert sim.trace_count == 1
+    bits = sim._update_bits()
+    # replay the realization stream and check per-round accounting
+    stream = sim.scenario.stream(sim.pop, seed)
+    A = fm.n_attempts
+    for rec in res.history:
+        real = stream.next_round()
+        # every attempt's bits hit the channel, landed or not
+        assert rec.uplink_bits == pytest.approx(real.attempts.sum() * bits)
+        # lifecycle invariants of the attempts vector
+        assert np.all(real.attempts[~real.clock_mask] == 0)
+        assert np.all(real.attempts[real.clock_mask] >= 1)
+        assert np.all(real.attempts <= A)
+        assert np.all(real.mask <= real.clock_mask)  # uploads need presence
+        assert real.h_att.shape == (4, A)
+        np.testing.assert_array_equal(real.h_att[:, 0], real.h)
+    # retries actually happened at link_failure=0.4 over 6 rounds
+    assert res.history[-1].uplink_bits >= 0
+    # parity across backends on the retry path
+    rb = _run(_quad_sim("batched", lossy, faults=fm),
+              max_rounds=6, eval_every=2)
+    _assert_bit_identical(res, rb)
+
+
+def test_backoff_waits_match_closed_form():
+    fm = FaultModel(max_retries=3, backoff_base=0.1, backoff_factor=2.0)
+    np.testing.assert_allclose(
+        fm.backoff_waits(np.array([0, 1, 2, 3, 4])),
+        [0.0, 0.0, 0.1, 0.3, 0.7])
+    assert FaultModel(max_retries=2).backoff_waits(np.array([3])).sum() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Crash / rejoin lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_crash_rejoin_epochs_span_rejoin_rounds():
+    scen = scenarios.get("uniform").replace(
+        faults=FaultModel(crash_rate=0.5, rejoin_rounds=3))
+    pop = scen.population(4, seed=0)
+    stream = scen.stream(pop, seed=0)
+    present = np.stack([stream.next_round().clock_mask for _ in range(60)])
+    crashes = 0
+    for m in range(4):
+        up = present[:, m]
+        # maximal absence streaks (drop a window-truncated trailing one)
+        streaks, run = [], 0
+        for v in up:
+            if not v:
+                run += 1
+            elif run:
+                streaks.append(run)
+                run = 0
+        for s in streaks:
+            assert s % 3 == 0  # epochs chain in whole rejoin_rounds units
+        crashes += len(streaks)
+    assert crashes > 0  # at crash_rate=0.5 over 60 rounds, certain
+
+
+def test_stream_state_roundtrip_mid_crash_epoch():
+    scen = scenarios.get("dropout").replace(
+        faults=FaultModel(crash_rate=0.5, rejoin_rounds=4, max_retries=1))
+    pop = scen.population(4, seed=0)
+    a = scen.stream(pop, seed=3)
+    for _ in range(5):
+        a.next_round()
+    snap = a.state()
+    assert "down" in snap
+    b = scen.stream(pop, seed=999)  # wrong seed, then restored
+    b.set_state(snap)
+    for _ in range(6):
+        ra, rb = a.next_round(), b.next_round()
+        np.testing.assert_array_equal(ra.mask, rb.mask)
+        np.testing.assert_array_equal(ra.clock_mask, rb.clock_mask)
+        np.testing.assert_array_equal(ra.h, rb.h)
+        np.testing.assert_array_equal(ra.attempts, rb.attempts)
+
+
+def test_stream_state_legacy_snapshot_without_down_counters():
+    scen = scenarios.get("dropout")
+    pop = scen.population(4, seed=0)
+    stream = scen.stream(pop, seed=0)
+    snap = stream.state()
+    snap.pop("down")  # pre-fault checkpoints have no down-counters
+    stream.set_state(snap)
+    assert np.all(stream._down == 0)
+    stream.next_round()  # still draws
+
+
+# ---------------------------------------------------------------------------
+# Divergence guards
+# ---------------------------------------------------------------------------
+
+
+def test_nonfinite_client_rejected_from_aggregation():
+    targets = [np.full(16, np.nan)] + [np.linspace(0.0, m, 16) * 0.1
+                                       for m in range(1, 4)]
+    fm = FaultModel(max_update_norm=1e9)  # activates; reject_nonfinite on
+    sim = _quad_sim("scan", None, faults=fm, targets=targets)
+    res = _run(sim, max_rounds=4, eval_every=2)
+    assert sim.trace_count == 1
+    for r in res.history:
+        assert np.isfinite(r.train_loss)
+        assert r.n_participants == 3  # the NaN client is dropped in-graph
+    for leaf in jax.tree.leaves(res.params):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+    rb = _run(_quad_sim("batched", None, faults=fm, targets=targets),
+              max_rounds=4, eval_every=2)
+    _assert_bit_identical(res, rb)
+    # loop backend mirrors the guard (tolerance parity, same accounting)
+    rl = _run(_quad_sim("loop", None, faults=fm, targets=targets),
+              max_rounds=4, eval_every=2)
+    assert [r.n_participants for r in rl.history] == [3] * 4
+    for a, b in zip(jax.tree.leaves(rl.params), jax.tree.leaves(res.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-7)
+
+
+def test_max_update_norm_clips_aggregate():
+    targets = [np.full(16, 10.0)] * 4
+    clipped = _quad_sim(
+        "scan", None, faults=FaultModel(max_update_norm=0.05),
+        momentum=0.0, targets=targets)
+    res = _run(clipped, max_rounds=1)
+    norm = float(np.linalg.norm(np.asarray(res.params["w"])))
+    # the aggregate is a convex combination of per-client clipped deltas
+    assert norm <= 0.05 * (1 + 1e-5)
+    free = _run(_quad_sim("scan", None, momentum=0.0, targets=targets),
+                max_rounds=1)
+    assert float(np.linalg.norm(np.asarray(free.params["w"]))) > 0.05
+
+
+@pytest.mark.parametrize("backend", ["scan", "batched"])
+def test_divergence_error_carries_last_good_state(backend):
+    targets = [np.full(16, np.nan)] * 4
+    fm = FaultModel(max_update_norm=1e9, reject_nonfinite=False)
+    sim = _quad_sim(backend, None, faults=fm, targets=targets)
+    with pytest.raises(DivergenceError) as ei:
+        sim.run(sim.init(), max_rounds=4, eval_every=1)
+    err = ei.value
+    assert err.round == 1
+    assert err.history[-1].round == 1
+    assert np.isnan(err.history[-1].train_loss)
+    assert isinstance(err.state, SimState)
+    assert err.state.round == 0  # the pre-divergence snapshot, resumable
+    for leaf in jax.tree.leaves(err.state.params_C):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+def test_divergence_guard_off_returns_nan_history():
+    targets = [np.full(16, np.nan)] * 4
+    fm = FaultModel(max_update_norm=1e9, reject_nonfinite=False,
+                    divergence_guard=False)
+    res = _run(_quad_sim("scan", None, faults=fm, targets=targets),
+               max_rounds=3)
+    assert all(np.isnan(r.train_loss) for r in res.history)
+
+
+# ---------------------------------------------------------------------------
+# Zero participation
+# ---------------------------------------------------------------------------
+
+
+def test_zero_participation_rounds_leave_params_untouched():
+    allout = scenarios.Scenario(
+        "allout", "every client absent every round", dropout=1.0)
+    results = {}
+    for backend in ("scan", "batched", "loop"):
+        res = _run(_quad_sim(backend, allout), max_rounds=3)
+        results[backend] = res
+        for r in res.history:
+            assert np.isnan(r.train_loss)  # no participants, no loss
+            assert r.n_participants == 0
+            assert r.uplink_bits == 0.0
+        # the clock still advances (server waits out the full population)
+        assert res.total_time > 0.0
+        np.testing.assert_array_equal(np.asarray(res.params["w"]),
+                                      np.zeros(16, np.float32))
+    _assert_bit_identical(results["scan"], results["batched"])
+    assert results["loop"].total_time == pytest.approx(
+        results["scan"].total_time)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / resume under an active fault stream
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_resume_mid_crash_epoch(tmp_path):
+    fm = FaultModel(crash_rate=0.4, rejoin_rounds=3, max_retries=1)
+
+    def mk():
+        return _quad_sim("scan", "dropout", faults=fm)
+
+    full = mk()
+    _, ref = full.run(full.init(), max_rounds=6, eval_every=2)
+
+    first = mk()
+    state, r1 = first.run(first.init(), max_rounds=3, eval_every=2)
+    assert state.stream is not None and "down" in state.stream
+    path = str(tmp_path / "fault.ckpt")
+    save_state(path, state)
+
+    fresh = mk()
+    loaded = load_state(path, like=fresh.init())
+    _, r2 = fresh.run(loaded, max_rounds=3, eval_every=2)
+
+    hist = list(r1.history) + list(r2.history)
+    assert [r.round for r in hist] == [r.round for r in ref.history]
+    for a, b in zip(hist, ref.history):
+        np.testing.assert_array_equal(a.train_loss, b.train_loss)
+        assert a.sim_time == b.sim_time
+        assert a.n_participants == b.n_participants
+        assert a.uplink_bits == b.uplink_bits
+    for a, b in zip(jax.tree.leaves(r2.params), jax.tree.leaves(ref.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Deadline-aware planning (Alg. 1 under truncation)
+# ---------------------------------------------------------------------------
+
+
+def _plan_fixture():
+    fed = FedConfig(n_devices=6, epsilon=0.01, nu=2.0, c=4.0)
+    pop = scenarios.get("stragglers").population(6, seed=0)
+    return fed, pop, 1e5
+
+
+def test_deadline_plan_respects_deadline():
+    fed, pop, bits = _plan_fixture()
+    base = defl.make_plan(fed, pop, bits)
+    D = 1.2 * base.T_round
+    plan = defl.deadline_plan(fed, pop, bits, D)
+    assert plan.T_round <= D * (1 + 1e-12)
+    assert plan.b >= 1 and (plan.b & (plan.b - 1)) == 0  # power of two
+    assert plan.V >= 1
+    assert np.isfinite(plan.overall_pred) and plan.overall_pred > 0
+    assert plan.overall_pred == pytest.approx(plan.H_pred * plan.T_round)
+
+
+def test_deadline_plan_infeasible_raises():
+    fed, pop, bits = _plan_fixture()
+    with pytest.raises(ValueError, match="infeasible"):
+        defl.deadline_plan(fed, pop, bits, 1e-12)
+
+
+def test_plan_for_scenario_uses_deadline_plan():
+    fed, _, bits = _plan_fixture()
+    plan = defl.make_plan(fed, scenarios.get(
+        "unreliable_edge").population(6, seed=0), bits)
+    dplan = scenarios.plan_for_scenario(fed, "unreliable_edge", bits)
+    fm = scenarios.get("unreliable_edge").faults
+    D = fm.resolve_deadline(plan.T_round)
+    assert dplan.T_round <= D * (1 + 1e-9)
+    assert dplan.solution.method == "deadline_grid"
+
+
+# ---------------------------------------------------------------------------
+# Study integration (the _run_group fault path)
+# ---------------------------------------------------------------------------
+
+
+def test_study_smoke_on_unreliable_edge():
+    from repro.federated.experiment import ExperimentSpec
+    from repro.federated.study import Study
+
+    def spec(label, lr):
+        return ExperimentSpec(
+            fed=FedConfig(n_devices=3, batch_size=4, theta=0.62, lr=lr),
+            model="mnist_cnn_tiny", n_train=120, n_test=40,
+            scenario="unreliable_edge", with_eval=False, label=label)
+
+    study = Study(arms=[("a", spec("a", 0.05)), ("b", spec("b", 0.02))],
+                  seeds=(0,), max_rounds=3, eval_every=3)
+    res = study.run()
+    for label in ("a", "b"):
+        (r,) = res[label]
+        assert len(r.history) == 3
+        assert np.isfinite(r.total_time) and r.total_time > 0
+        for rec in r.history:
+            assert 0 <= rec.n_participants <= 3
+    # same arm standalone == in-study (the fault path through _run_group)
+    solo = spec("a", 0.05).build()
+    _, ref = solo.run(solo.init(0), max_rounds=3, eval_every=3)
+    (ra,) = res["a"]
+    for a, b in zip(ra.history, ref.history):
+        np.testing.assert_array_equal(a.train_loss, b.train_loss)
+        assert a.sim_time == b.sim_time
+        assert a.n_participants == b.n_participants

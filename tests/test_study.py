@@ -217,7 +217,7 @@ def test_study_result_frame_and_json():
     study = Study(arms=[("A", _tiny_spec(4, 2, with_eval=True)),
                         ("B", _tiny_spec(8, 1, with_eval=True))],
                   seeds=(0, 1), max_rounds=4, eval_every=2,
-                  target_acc=0.999)  # unreachable: full budget, tta=total
+                  target_acc=0.999)  # unreachable: every seed misses
     res = study.run()
     assert res.labels == ("A", "B")
     header, rows = res.table()
@@ -225,8 +225,16 @@ def test_study_result_frame_and_json():
     assert [r[0] for r in rows] == ["A", "B"]
     tta = res.time_to_target("A")
     assert tta.shape == (2,)
+    # Missed seeds are NaN (not silently their total time) and the hit
+    # rate reports the miss; the _or_total variant keeps the old finite
+    # fallback for the headline comparisons.
+    assert np.isnan(tta).all()
+    assert res.target_hit_rate("A") == 0.0
+    s = res.summary("A")
+    assert np.isnan(s["time_to_target_mean"]) and s["target_hit_rate"] == 0.0
     np.testing.assert_allclose(
-        tta, [r.total_time for r in res["A"]])  # never hit -> total time
+        res.time_to_target_or_total("A"),
+        [r.total_time for r in res["A"]])  # never hit -> total time
     assert np.isfinite(res.reduction("A", "B"))
     js = res.to_json()
     assert set(js["arms"]) == {"A", "B"}
