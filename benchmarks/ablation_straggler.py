@@ -41,7 +41,7 @@ def run(quick: bool = False, scenario: str = ""):
     plans = st.plans()
     rows = []
     for (name, spec), (label, plan) in zip(st.arms, plans.items()):
-        pop = spec.population()
+        pop = spec.device_population()
         t_cm = delay.per_client_uplink_time(
             spec.update_bits(), spec.wireless, pop.p, pop.h)
         T_cm_max, T_cm_mean = float(t_cm.max()), float(t_cm.mean())

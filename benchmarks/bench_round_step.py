@@ -12,7 +12,11 @@ tracked across PRs: per-round rows ``{m, backend, rounds_per_sec,
 round_ms}``, eval-cadence rows for 'batched'/'scan' carrying an extra
 ``eval_every`` key, and at M=10 a ``fleet_s8`` row (vmapped 8-seed fleet)
 next to ``scan_seq_s8`` (the same 8 seeds run sequentially) — both
-amortized to seconds per seed-round.
+amortized to seconds per seed-round. PR 7 adds sampled-participation
+rows: a K=50 cohort drawn per round from an M=10,000 population
+(``sampled_k50``) next to its dense 50-client baseline, each carrying a
+``state_bytes`` key (the device-resident params/opt/key trio — the O(K)
+memory contract).
 
   PYTHONPATH=src python -m benchmarks.run --only round_step [--quick]
   PYTHONPATH=src python benchmarks/bench_round_step.py [--quick]
@@ -28,9 +32,13 @@ from typing import Optional
 
 sys.path.insert(0, __file__.rsplit("/", 2)[0])
 
-from repro.configs.base import FedConfig  # noqa: E402
+import jax  # noqa: E402
 
-from benchmarks.common import make_cnn_sim  # noqa: E402
+from repro.configs.base import FedConfig  # noqa: E402
+from repro.federated.experiment import (CohortSpec,  # noqa: E402
+                                        PopulationSpec)
+
+from benchmarks.common import make_cnn_sim, make_cnn_spec  # noqa: E402
 
 JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_round_step.json")
 
@@ -69,6 +77,20 @@ FLEET_ROUNDS = 10
 FLEET_EVAL = 1
 FLEET_GATE = 1.5
 FLEET_GATE_C = 1.15
+# Sampled-participation rows (PR 7): a K-client cohort drawn each round
+# from an M >> K population must cost what a dense K-client sim costs —
+# the round graph is K lanes either way; the population only lives
+# host-side. Benchmarked as M=SAMPLED_M/K=SAMPLED_K vs dense
+# M=SAMPLED_K, both through run() at eval_every=GATE_EVAL on the same
+# scenario. The --check gate requires (a) sampled throughput >=
+# SAMPLED_GATE x the dense-K baseline (the host-side cohort draw +
+# per-round gathers must stay off the critical path) and (b) the
+# device-resident state trio (params_C, opt_C, key) to byte-match the
+# dense-K trio — O(K), not O(M); (b) is exact, not a timing, so it
+# never retries.
+SAMPLED_M = 10_000
+SAMPLED_K = 50
+SAMPLED_GATE = 0.9
 # Best-of reps per M (larger M amortizes noise over longer rounds).
 REPS = {10: 5, 50: 4, 200: 3}
 
@@ -191,9 +213,59 @@ def _bench_fleet(m: int, reps: int, compress: bool) -> dict:
     return best
 
 
+def _state_trio_bytes(st) -> int:
+    """Device-buffer bytes of the per-run state the client axis scales:
+    stacked params, stacked opt state, PRNG key."""
+    return sum(leaf.nbytes for leaf in
+               jax.tree.leaves((st.params_C, st.opt_C, st.key)))
+
+
+def _bench_sampled(reps: int) -> dict:
+    """Best-of-reps seconds/round + exact state bytes: the sampled
+    (M=SAMPLED_M, K=SAMPLED_K) simulator vs the dense K-client one, both
+    run() at eval_every=GATE_EVAL on scenario='uniform' (the sampled
+    engine always runs the scenario path; giving the dense baseline the
+    same path keeps the comparison driver-for-driver)."""
+    E = GATE_EVAL
+    dense_sim = make_cnn_sim(
+        "mnist", FedConfig(n_devices=SAMPLED_K, **BENCH_FED),
+        f"dense-m{SAMPLED_K}", seed=0, backend="scan", with_eval=False,
+        cnn_cfg="mnist_cnn_small", scenario="uniform")
+    sampled_sim = make_cnn_spec(
+        "mnist", FedConfig(**BENCH_FED),
+        f"sampled-m{SAMPLED_M}-k{SAMPLED_K}", seed=0, backend="scan",
+        with_eval=False, cnn_cfg="mnist_cnn_small", scenario="uniform",
+        population=PopulationSpec(
+            M=SAMPLED_M, cohort=CohortSpec(K=SAMPLED_K))).build()
+    out = {}
+    sample = {}
+    for name, sim in (("dense", dense_sim), ("sampled", sampled_sim)):
+        st = sim.init()
+        out[f"{name}_state_bytes"] = _state_trio_bytes(st)
+        cell = {"st": st}
+        cell["st"], _ = sim.run(cell["st"], max_rounds=E, eval_every=E)
+
+        def runner(sim=sim, cell=cell):
+            cell["st"], _ = sim.run(cell["st"], max_rounds=E, eval_every=E)
+            return E
+
+        sample[name] = runner
+    best = {k: float("inf") for k in sample}
+    for _ in range(reps):
+        for k, fn in sample.items():
+            t0 = time.perf_counter()
+            rounds = fn()
+            best[k] = min(best[k], (time.perf_counter() - t0) / rounds)
+    assert sampled_sim.trace_count == 1, (
+        f"sampled scan retraced {sampled_sim.trace_count}x")
+    out["dense"], out["sampled"] = best["dense"], best["sampled"]
+    return out
+
+
 def run(quick: bool = False, smoke: bool = False, out: str = "",
         speedups: Optional[dict] = None, scan_speedups: Optional[dict] = None,
-        fleet_speedups: Optional[dict] = None):
+        fleet_speedups: Optional[dict] = None,
+        sampled_stats: Optional[dict] = None):
     """smoke=True is the CI gate: tiny config (M=10 only). `out` gets the
     timing rows plus speedup rows as a CI artifact; pass dicts as
     `speedups` / `scan_speedups` / `fleet_speedups` to receive the raw
@@ -276,6 +348,36 @@ def run(quick: bool = False, smoke: bool = False, out: str = "",
                                  "", f"{fleet_x:.2f}"))
                 if fleet_speedups is not None:
                     fleet_speedups[(m, suffix)] = fleet_x
+    # Sampled-participation rows (all modes, including --smoke: the O(K)
+    # contract is exactly what CI must hold): M=SAMPLED_M population,
+    # K=SAMPLED_K cohort, vs the dense K-client baseline.
+    sstats = _bench_sampled(reps[SAMPLED_K])
+    if sampled_stats is not None:
+        sampled_stats.update(sstats)
+    for name, m_col in (("dense", SAMPLED_K), ("sampled", SAMPLED_M)):
+        sec = sstats[name]
+        backend = ("scan" if name == "dense"
+                   else f"sampled_k{SAMPLED_K}")
+        rows_json.append({
+            "m": m_col,
+            "backend": backend,
+            "eval_every": GATE_EVAL,
+            "rounds_per_sec": 1.0 / sec,
+            "round_ms": sec * 1e3,
+            "state_bytes": sstats[f"{name}_state_bytes"],
+        })
+        rows_csv.append((f"round_step_m{m_col}_{backend}_e{GATE_EVAL}",
+                         f"{sec * 1e6:.0f}", f"{1.0 / sec:.3f}"))
+    sampled_x = sstats["dense"] / sstats["sampled"]
+    speedup_json.append({
+        "m": SAMPLED_M, "k": SAMPLED_K,
+        "sampled_over_dense_k_x": sampled_x,
+        "state_bytes_sampled": sstats["sampled_state_bytes"],
+        "state_bytes_dense_k": sstats["dense_state_bytes"],
+    })
+    rows_csv.append(
+        (f"round_step_m{SAMPLED_M}_sampled_over_dense{SAMPLED_K}", "",
+         f"{sampled_x:.2f}"))
     if not (quick or smoke):
         # Only full runs update the tracked artifact: a reduced sweep must
         # not clobber the M=200 rows of the cross-PR perf trajectory.
@@ -306,16 +408,22 @@ def main(argv=None):
                          f"uncompressed / {FLEET_GATE_C}x int8-compressed "
                          "at M=10 (the run_fleet batching win; the "
                          "compressed gate exists since the quantizer "
-                         "fusion)")
+                         "fusion), or if the sampled "
+                         f"(M={SAMPLED_M}, K={SAMPLED_K}) engine falls "
+                         f"below {SAMPLED_GATE}x the dense K-client "
+                         "baseline or its device state stops byte-"
+                         "matching the dense-K trio (O(K), not O(M))")
     ap.add_argument("--out", default="",
                     help="also write the rows JSON here (CI artifact)")
     args = ap.parse_args(argv)
     speedups: dict = {}
     scan_speedups: dict = {}
     fleet_speedups: dict = {}
+    sampled_stats: dict = {}
     header, rows = run(quick=args.quick, smoke=args.smoke, out=args.out,
                        speedups=speedups, scan_speedups=scan_speedups,
-                       fleet_speedups=fleet_speedups)
+                       fleet_speedups=fleet_speedups,
+                       sampled_stats=sampled_stats)
     print(header)
     for r in rows:
         print(",".join(map(str, r)))
@@ -385,6 +493,33 @@ def main(argv=None):
             raise SystemExit(1)
         print(f"check: fleet >= {FLEET_GATE}x (plain) / {FLEET_GATE_C}x "
               f"(int8) sequential at M=10")
+        # O(K) memory gate first: exact byte counts, no timing noise.
+        sb = sampled_stats["sampled_state_bytes"]
+        db = sampled_stats["dense_state_bytes"]
+        if sb != db:
+            print(f"FAIL: sampled (M={SAMPLED_M}, K={SAMPLED_K}) device "
+                  f"state is {sb} bytes vs {db} for dense K={SAMPLED_K}: "
+                  "the state trio must scale with K, not M")
+            raise SystemExit(1)
+        print(f"check: sampled device state byte-matches dense "
+              f"K={SAMPLED_K} ({sb} bytes; O(K), not O(M={SAMPLED_M}))")
+
+        def re_sampled(_keys):
+            s = _bench_sampled(REPS[SAMPLED_K])
+            sampled_stats.update(s)
+            x = s["dense"] / s["sampled"]
+            return {} if x >= SAMPLED_GATE else {"sampled": x}
+
+        x = sampled_stats["dense"] / sampled_stats["sampled"]
+        bad = retry("sampled/dense",
+                    {} if x >= SAMPLED_GATE else {"sampled": x}, re_sampled)
+        if bad:
+            print(f"FAIL: sampled (M={SAMPLED_M}, K={SAMPLED_K}) below "
+                  f"{SAMPLED_GATE}x the dense K={SAMPLED_K} baseline: "
+                  f"{bad}")
+            raise SystemExit(1)
+        print(f"check: sampled (M={SAMPLED_M}, K={SAMPLED_K}) >= "
+              f"{SAMPLED_GATE}x dense K={SAMPLED_K} throughput")
 
 
 if __name__ == "__main__":

@@ -55,6 +55,7 @@ def make_cnn_spec(
     with_eval: bool = True,
     cnn_cfg=None,  # model registry name | cnn.CNNConfig | None (default per dataset)
     scenario=None,  # registered scenario name | None
+    population=None,  # PopulationSpec | None (None: dense fed.n_devices)
 ) -> ExperimentSpec:
     """The CNN-FL harness (Figs. 1-2) as an ExperimentSpec: data,
     partitions, population and model wiring all live in the spec;
@@ -72,7 +73,8 @@ def make_cnn_spec(
     return ExperimentSpec(
         fed=fed, model=model, dataset=dataset, n_train=n_train,
         n_test=n_test, seed=seed, scenario=scenario, backend=backend,
-        impl=impl, with_eval=with_eval, label=label)
+        impl=impl, with_eval=with_eval, label=label,
+        population=population)
 
 
 def make_cnn_sim(*args, **kw) -> Simulator:

@@ -41,6 +41,7 @@ def make_plan(
     wireless: Optional[WirelessConfig] = None,
     method: str = "closed_form",
     participation: float = 1.0,
+    cohort_size: Optional[int] = None,
 ) -> DEFLPlan:
     """Solve the paper's optimization for a device population.
 
@@ -51,13 +52,23 @@ def make_plan(
     round-count model sees the effective M = round(participation * M) >= 1
     — fewer arriving updates per round means more rounds to the target,
     which moves the optimal talk/work point.
+    cohort_size: sampled-participation regime (K-client cohorts drawn
+    from the M-client population each round). The population statistics —
+    Eq. 7's straggler uplink max and the bottleneck compute slope g —
+    still come from the FULL population `pop` (any client can be drawn,
+    so the worst straggler still bounds a round), but the Eq. 12 round
+    count sees M_eff = round(participation * K): only the cohort's
+    updates average into a round, so the variance-reduction term that
+    drives H is cohort-conditional. `participation` composes on top
+    (dropout strikes the drawn cohort).
     """
     wireless = wireless or WirelessConfig()
     if fed.compress_updates:
         update_bits = update_bits / 4.0  # fp32 -> int8 quantized updates
     T_cm = delay.round_comm_time(update_bits, wireless, pop.p, pop.h)
     g = float(max(pop.G / pop.f))  # bottleneck compute slope (s per batch unit)
-    M_eff = max(1, int(round(fed.n_devices * participation)))
+    M_base = fed.n_devices if cohort_size is None else int(cohort_size)
+    M_eff = max(1, int(round(M_base * participation)))
     prob = kkt.DelayProblem(
         T_cm=T_cm, g=g, M=M_eff, eps=fed.epsilon, nu=fed.nu, c=fed.c)
     sol = kkt.solve(prob, method=method).quantized(prob)
@@ -84,6 +95,7 @@ def deadline_plan(
     wireless: Optional[WirelessConfig] = None,
     participation: float = 1.0,
     b_max: float = 64.0,
+    cohort_size: Optional[int] = None,
 ) -> DEFLPlan:
     """Deadline-aware variant of Algorithm 1: re-derive (b, V) when the
     server truncates every round at `deadline` seconds (faults.FaultModel).
@@ -105,6 +117,11 @@ def deadline_plan(
     points where at least one client finishes inside the deadline.
     Raises ValueError when no (b, alpha) is feasible — the deadline is
     shorter than the fastest client's single-iteration round.
+
+    cohort_size: as in `make_plan` — Eq. 12's effective M is based on the
+    K-client cohort (feasibility is still measured over the FULL
+    population: the feasible fraction of M is the expected feasible
+    fraction of a uniformly drawn cohort).
     """
     wireless = wireless or WirelessConfig()
     if fed.compress_updates:
@@ -113,6 +130,7 @@ def deadline_plan(
     T_cm = float(np.max(t_cm_m))
     g = float(max(pop.G / pop.f))
     slopes = np.asarray(pop.G, np.float64) / np.asarray(pop.f, np.float64)
+    M_base = fed.n_devices if cohort_size is None else int(cohort_size)
 
     n_pow = max(int(np.floor(np.log2(b_max))), 0)
     bs = 2.0 ** np.arange(0, n_pow + 1)
@@ -127,7 +145,7 @@ def deadline_plan(
             if not feas.any():
                 continue
             M_eff = max(1, int(round(
-                fed.n_devices * participation * feas.mean())))
+                M_base * participation * feas.mean())))
             H = kkt.communication_rounds_alpha(
                 b, alpha, M_eff, fed.epsilon, fed.nu, fed.c)
             T = min(deadline, T_cm + fed.nu * alpha * g * b)

@@ -111,6 +111,67 @@ class BatchIterator:
             yield self.next_batch()
 
 
+class ClientDataPool:
+    """Lazy per-client batch-iterator pool for population-scale M.
+
+    The dense data path materializes one `BatchIterator` per client up
+    front (an M-long Python list — fine at M <= a few hundred, absurd at
+    M = 10^5-10^6 when only K clients participate per round). The pool
+    holds an `indices_fn(m)` instead and materializes a client's iterator
+    on first touch, seeded `seed + m` — exactly the dense factory's
+    per-client seed, so a pool over the same partition produces
+    bit-identical batch streams to the dense list.
+
+    Checkpoint state is O(touched clients): untouched clients carry no
+    state (a fresh `BatchIterator(seed + m)` IS their snapshot), so
+    `state()` snapshots only the materialized ones.
+    """
+
+    def __init__(self, data: ClassificationData, indices_fn, sizes,
+                 batch_size: int, seed: int = 0):
+        self.data = data
+        self._indices_fn = indices_fn
+        self.sizes = np.asarray(sizes, np.int64)
+        self.batch_size = int(batch_size)
+        self.seed = int(seed)
+        self._iters: Dict[int, BatchIterator] = {}
+
+    @classmethod
+    def from_parts(cls, data: ClassificationData, parts, batch_size: int,
+                   seed: int = 0) -> "ClientDataPool":
+        """Pool over an explicit partition list (small-M sampled runs):
+        same indices, same per-client seeds as the dense factory."""
+        sizes = np.array([len(p) for p in parts], np.int64)
+        return cls(data, lambda m: parts[m], sizes, batch_size, seed)
+
+    def __len__(self) -> int:
+        return len(self.sizes)
+
+    def client(self, m: int) -> BatchIterator:
+        it = self._iters.get(m)
+        if it is None:
+            it = BatchIterator(self.data, self._indices_fn(m),
+                               self.batch_size, seed=self.seed + m)
+            self._iters[m] = it
+        return it
+
+    # -- snapshot / restore (SimState checkpointing) ------------------------
+    def state(self) -> Dict:
+        return {"clients": {int(m): it.state()
+                            for m, it in self._iters.items()}}
+
+    def set_state(self, state: Dict) -> None:
+        self._iters = {}
+        for m, s in state.get("clients", {}).items():
+            self.client(int(m)).set_state(s)
+
+    # -- device-resident gathering (scan backend) ---------------------------
+    def device_arrays(self) -> Dict[str, np.ndarray]:
+        return {"x": self.data.x, "y": self.data.y}
+
+    batch_from = staticmethod(BatchIterator.batch_from)
+
+
 def token_batches(stream: np.ndarray, batch: int, seq: int, step: int, seed: int = 0):
     """Slice a token stream into (batch, seq+1) training windows."""
     rng = np.random.default_rng(seed + step)

@@ -69,6 +69,46 @@ def stack_chunk_batches(iterators: List, rounds: int, V: int) -> Dict:
     return jax.tree.map(lambda *xs: np.stack(xs), *per_round)
 
 
+def _client_iter(source, m: int):
+    """Per-client iterator access over either data source shape: a
+    ClientDataPool (lazy, population-scale) or a dense iterator list."""
+    return source.client(m) if hasattr(source, "client") else source[m]
+
+
+def stack_cohort_batches(source, cohort: np.ndarray, V: int) -> Dict:
+    """One sampled round of batches -> pytree with leading (K, V) axes:
+    lane k holds client cohort[k]'s next V batches. Lanes are consumed in
+    ascending-cohort (lane) order, so at K = M (cohort == arange(M)) this
+    consumes every iterator exactly like `stack_client_batches` — the
+    data leg of the K=M bit-parity contract."""
+    per_client = []
+    for m in np.asarray(cohort):
+        it = _client_iter(source, int(m))
+        batches = [it.next_batch() for _ in range(V)]
+        per_client.append(jax.tree.map(lambda *xs: np.stack(xs), *batches))
+    return jax.tree.map(lambda *xs: np.stack(xs), *per_client)
+
+
+def stack_cohort_indices(source, cohorts: np.ndarray, V: int) -> np.ndarray:
+    """A sampled chunk of batch indices -> (R, K, V, B) int32: round r's
+    lane k draws from client cohorts[r, k]'s stream. Only participating
+    clients' iterators advance (absent clients keep their batch cursor —
+    they re-enter later exactly where they left off); per round, lanes
+    are consumed in ascending order, so at K = M this is bit-identical to
+    `stack_chunk_indices` over the full iterator list."""
+    cohorts = np.asarray(cohorts)
+    R, K = cohorts.shape
+    bs = (source.batch_size if hasattr(source, "batch_size")
+          else source[0].batch_size)
+    out = np.empty((R, K, V, bs), np.int32)
+    for r in range(R):
+        for k in range(K):
+            it = _client_iter(source, int(cohorts[r, k]))
+            for v in range(V):
+                out[r, k, v] = it.next_indices()
+    return out
+
+
 def stack_chunk_indices(iterators: List, rounds: int, V: int) -> np.ndarray:
     """A whole chunk of batch *indices* -> (R, M, V, B) int32: the scan
     backend's device-resident data path. Only the indices cross the

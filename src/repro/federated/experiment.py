@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple, Union
 
@@ -35,9 +36,11 @@ import numpy as np
 from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
 from repro.core import defl, delay
 from repro.data import BatchIterator, make_cifar_like, make_mnist_like
+from repro.data.pipeline import ClientDataPool
 from repro.federated import scenarios
 from repro.federated.faults import FaultModel
-from repro.federated.partition import partition_dirichlet, partition_sizes
+from repro.federated.partition import (partition_dirichlet, partition_sizes,
+                                       partition_virtual)
 from repro.federated.simulation import Simulator
 from repro.models import cnn
 from repro.optim import sgd
@@ -60,6 +63,60 @@ MODELS = {
 }
 
 DATASETS = {"mnist": make_mnist_like, "cifar": make_cifar_like}
+
+# Dense device state above this many clients is almost certainly a
+# mistake (the stacked params/opt carry one lane per client): emitting a
+# first-party DeprecationWarning here — an ERROR under the tier-1 filter
+# — pushes callers onto PopulationSpec(M, cohort=CohortSpec(K)).
+DENSE_M_DEPRECATION_THRESHOLD = 4096
+
+
+@dataclass(frozen=True)
+class CohortSpec:
+    """Per-round sampled participation: K clients drawn from the
+    population each round.
+
+    K        cohort size — the device-resident client state is O(K).
+    sampler  'uniform' (each round's cohort uniform without replacement)
+             | 'weighted' (D_m-weighted Gumbel top-K without
+             replacement: data-rich clients are drawn more often).
+    """
+
+    K: int
+    sampler: str = "uniform"
+
+    def __post_init__(self):
+        if self.K < 1:
+            raise ValueError(f"CohortSpec.K must be >= 1, got {self.K}")
+        if self.sampler not in ("uniform", "weighted"):
+            raise ValueError(
+                f"unknown CohortSpec.sampler {self.sampler!r}; expected "
+                "'uniform' or 'weighted'")
+
+
+@dataclass(frozen=True)
+class PopulationSpec:
+    """The client population, declaratively: its size and (optionally)
+    the per-round participation regime.
+
+    M       population size. Plain `fed.n_devices` (no PopulationSpec)
+            stays sugar for a dense M-client population — identical
+            simulators, bit for bit.
+    cohort  None runs dense (every client computes every round, device
+            state O(M)); CohortSpec(K) runs sampled participation
+            (device state O(K), population model host-side O(M)) —
+            required above DENSE_M_DEPRECATION_THRESHOLD clients.
+    """
+
+    M: int
+    cohort: Optional[CohortSpec] = None
+
+    def __post_init__(self):
+        if self.M < 1:
+            raise ValueError(f"PopulationSpec.M must be >= 1, got {self.M}")
+        if self.cohort is not None and self.cohort.K > self.M:
+            raise ValueError(
+                f"cohort K={self.cohort.K} exceeds population M={self.M}")
 
 
 @dataclass(frozen=True)
@@ -87,14 +144,29 @@ class ExperimentSpec:
                    retransmission, crash/rejoin, divergence guards. None
                    keeps the scenario's own `faults` (if any).
     heterogeneity  population lognormal spread when no scenario is given.
+    population     optional PopulationSpec. When set, its M overrides
+                   fed.n_devices (the M-free way to scale a registered
+                   spec to 10^4-10^6 clients) and its CohortSpec turns on
+                   K-client sampled participation: device state O(K),
+                   per-round cohorts drawn host-side from the M-client
+                   population. `PopulationSpec(M)` with no cohort is
+                   exactly `fed.n_devices=M` (dense — deprecated above
+                   DENSE_M_DEPRECATION_THRESHOLD clients).
+    shard_clients  shard the stacked client axis over all JAX devices
+                   (scan backend; prototype on CPU via
+                   XLA_FLAGS=--xla_force_host_platform_device_count=N).
     plan           solve Alg. 1 for (b*, theta*) against the population
                    before building (plan-or-fed: False runs `fed` as-is).
+                   Under a CohortSpec the Eq. 12 effective M is the
+                   cohort's K (defl.make_plan cohort_size).
     batch_cap      dataset-bounded cap applied to a planned b* (paper
                    §VI-B discussion); None disables.
     backend        'scan' (default) | 'batched' | 'loop'.
     """
 
     fed: FedConfig = FedConfig()
+    population: Optional[PopulationSpec] = None
+    shard_clients: bool = False
     model: Union[str, cnn.CNNConfig] = "mnist_cnn"
     dataset: str = "mnist"
     n_train: int = 1500
@@ -137,13 +209,34 @@ class ExperimentSpec:
             fm = scenarios.get(self.scenario).faults
         return fm if fm is not None and fm.active else None
 
-    def population(self) -> delay.DevicePopulation:
+    def n_devices(self) -> int:
+        """Population size M: PopulationSpec.M when given (it overrides
+        fed.n_devices), else fed.n_devices."""
+        return (self.fed.n_devices if self.population is None
+                else self.population.M)
+
+    def cohort_spec(self) -> Optional[CohortSpec]:
+        """The sampled-participation regime, or None for dense."""
+        return None if self.population is None else self.population.cohort
+
+    def base_fed(self) -> FedConfig:
+        """`fed` with the PopulationSpec's M applied (the single source of
+        truth every downstream consumer — plan, build, study grouping —
+        resolves n_devices through)."""
+        M = self.n_devices()
+        if M == self.fed.n_devices:
+            return self.fed
+        return dataclasses.replace(self.fed, n_devices=M)
+
+    def device_population(self) -> delay.DevicePopulation:
+        """Draw the (M,) device population (compute + channel). Renamed
+        from `population()`, which the PopulationSpec field now owns."""
+        M = self.n_devices()
         if self.scenario is not None:
             return scenarios.get(self.scenario).population(
-                self.fed.n_devices, self.compute, self.wireless, self.seed)
+                M, self.compute, self.wireless, self.seed)
         return delay.draw_population(
-            self.fed.n_devices, self.compute, self.wireless, self.seed,
-            self.heterogeneity)
+            M, self.compute, self.wireless, self.seed, self.heterogeneity)
 
     def update_bits(self) -> float:
         """Raw wire size of one model update (plan input; the simulator
@@ -158,24 +251,29 @@ class ExperimentSpec:
         if not self.plan:
             return None
         bits = self.update_bits()
+        fed = self.base_fed()
+        cohort = self.cohort_spec()
+        K = None if cohort is None else cohort.K
         if self.scenario is not None:
             return scenarios.plan_for_scenario(
-                self.fed, self.scenario, bits, cc=self.compute,
-                wc=self.wireless, seed=self.seed, method=self.plan_method)
-        return defl.make_plan(self.fed, pop, bits, wireless=self.wireless,
-                              method=self.plan_method)
+                fed, self.scenario, bits, cc=self.compute,
+                wc=self.wireless, seed=self.seed, method=self.plan_method,
+                cohort_size=K)
+        return defl.make_plan(fed, pop, bits, wireless=self.wireless,
+                              method=self.plan_method, cohort_size=K)
 
     def _fed_with_plan(self, plan: Optional[defl.DEFLPlan]) -> FedConfig:
+        base = self.base_fed()
         if plan is None:
-            return self.fed
-        fed = defl.plan_to_fedconfig(plan, self.fed)
+            return base
+        fed = defl.plan_to_fedconfig(plan, base)
         b = fed.batch_size if self.batch_cap is None else min(
             fed.batch_size, self.batch_cap)
         return dataclasses.replace(fed, batch_size=b, update_bytes=None)
 
     def resolve_plan(self) -> Optional[defl.DEFLPlan]:
         """The DEFL plan this spec runs under (None when plan=False)."""
-        return self._solve_plan(self.population())
+        return self._solve_plan(self.device_population())
 
     def resolve_fed(self) -> FedConfig:
         """Plan-or-fed: `fed` with the solved (b*, theta*) applied when
@@ -193,10 +291,11 @@ class ExperimentSpec:
         read their predicted columns from this via `Study.plans()`."""
         if self.plan:
             return self.resolve_plan()
+        fed = self.base_fed()
         return defl.fixed_plan(
-            self.fed, self.population(), self.update_bits(),
-            b=self.fed.batch_size, V=self.fed.local_rounds,
-            wireless=self.wireless, theta=self.fed.theta)
+            fed, self.device_population(), self.update_bits(),
+            b=fed.batch_size, V=fed.local_rounds,
+            wireless=self.wireless, theta=fed.theta)
 
     # -- materialization ----------------------------------------------------
     def build(self) -> Simulator:
@@ -207,19 +306,53 @@ class ExperimentSpec:
         dataset — keeping the device-resident one-upload data path).
         The population is drawn once and the DEFL plan solved once per
         build (both are seed-deterministic, but redundancy here would
-        double every plan=True build's KKT solve)."""
+        double every plan=True build's KKT solve).
+
+        Sampled participation (PopulationSpec.cohort) swaps the dense
+        per-client iterator list for a lazy ClientDataPool: at M <=
+        n_train it wraps the SAME Dirichlet partition with the SAME
+        per-client seeds (so a K=M sampled build is bit-identical to the
+        dense one), above that — where a disjoint split is impossible —
+        each client owns a deterministic virtual shard
+        (partition.partition_virtual), O(1) host state per client."""
         make = DATASETS[self.dataset]
-        pop = self.population()
+        pop = self.device_population()
         fed = self._fed_with_plan(self._solve_plan(pop))
+        cohort = self.cohort_spec()
+        if (cohort is None and self.backend != "loop"
+                and fed.n_devices >= DENSE_M_DEPRECATION_THRESHOLD):
+            warnings.warn(
+                f"dense device state with M={fed.n_devices} clients is "
+                "deprecated: the stacked params/opt carry one lane per "
+                "client. Use population=PopulationSpec(M=..., "
+                "cohort=CohortSpec(K=...)) for O(K) device state.",
+                DeprecationWarning, stacklevel=2)
         cfg = self.model_config()
         data = make(self.n_train, seed=self.seed)
         params = cnn.init_cnn(cfg, jax.random.PRNGKey(self.seed))
-        parts = partition_dirichlet(data, fed.n_devices, alpha=self.alpha,
-                                    seed=self.seed)
+        if cohort is not None and fed.n_devices > self.n_train:
+            # Population scale: no M-long partition list exists anywhere.
+            indices_fn, sizes = partition_virtual(
+                self.n_train, fed.n_devices, seed=self.seed)
+            data_sizes = sizes
 
-        def data_factory(seed: int):
-            return [BatchIterator(data, p, fed.batch_size, seed=seed + i)
-                    for i, p in enumerate(parts)]
+            def data_factory(seed: int):
+                return ClientDataPool(data, indices_fn, sizes,
+                                      fed.batch_size, seed=seed)
+        else:
+            parts = partition_dirichlet(data, fed.n_devices,
+                                        alpha=self.alpha, seed=self.seed)
+            data_sizes = partition_sizes(parts)
+            if cohort is not None:
+                def data_factory(seed: int):
+                    return ClientDataPool.from_parts(data, parts,
+                                                     fed.batch_size,
+                                                     seed=seed)
+            else:
+                def data_factory(seed: int):
+                    return [BatchIterator(data, p, fed.batch_size,
+                                          seed=seed + i)
+                            for i, p in enumerate(parts)]
 
         eval_fn = eval_batch_fn = None
         if self.with_eval:
@@ -262,15 +395,18 @@ class ExperimentSpec:
         envelope_key = (cfg, fed.n_devices, fed.lr, fed.compress_updates,
                         self.impl,
                         self.scenario is not None or eff_faults is not None,
-                        eff_faults)
+                        eff_faults, cohort, self.shard_clients)
         return Simulator(
             functools.partial(cnn.cnn_loss, cfg), params, data_factory,
-            partition_sizes(parts), fed, sgd(fed.lr), pop,
+            data_sizes, fed, sgd(fed.lr), pop,
             wireless=self.wireless, eval_fn=eval_fn, label=label,
             backend=self.backend, impl=self.impl, scenario=self.scenario,
             faults=self.faults, eval_batch_fn=eval_batch_fn,
             masked_loss_fn=functools.partial(cnn.cnn_loss_masked, cfg),
-            envelope_key=envelope_key)
+            envelope_key=envelope_key,
+            cohort=None if cohort is None else cohort.K,
+            cohort_sampler="uniform" if cohort is None else cohort.sampler,
+            shard_clients=self.shard_clients)
 
 
 # ---------------------------------------------------------------------------
@@ -315,6 +451,12 @@ register("mnist_smoke", ExperimentSpec(
     fed=FedConfig(n_devices=3, batch_size=8, theta=0.62, lr=0.05),
     model="mnist_cnn_small", dataset="mnist", n_train=240, n_test=80,
     label="mnist_smoke"))
+register("mnist_sampled", ExperimentSpec(
+    fed=FedConfig(batch_size=8, theta=0.62, lr=0.05),
+    population=PopulationSpec(M=40, cohort=CohortSpec(K=8)),
+    model="mnist_cnn_small", dataset="mnist", n_train=240, n_test=80,
+    scenario="dropout",
+    label="mnist_sampled"))
 register("mnist_storm", ExperimentSpec(
     fed=FedConfig(n_devices=10, epsilon=0.01, nu=2.0, c=CALIBRATED_C,
                   lr=0.05),

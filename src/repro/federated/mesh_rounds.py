@@ -299,10 +299,19 @@ def _psum_shardmap_sync(mesh, param_specs_tree, client_axes):
                 if len(axes) > 1:
                     for a in axes[1:]:
                         idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
-                w = w_all[idx].astype(jnp.float32)
-                agg = jax.lax.psum(w * n_loc.astype(jnp.float32),
+                # n_loc is this shard's (rows, ...) slice of the client
+                # axis — rows > 1 when C exceeds the device count. Each
+                # shard reduces its own rows locally, then one psum of the
+                # param-sized partial crosses the wire.
+                rows = n_loc.shape[0]
+                w = jax.lax.dynamic_slice_in_dim(
+                    w_all, idx * rows, rows).astype(jnp.float32)
+                wl = w.reshape((rows,) + (1,) * (n_loc.ndim - 1))
+                local = jnp.sum(wl * n_loc.astype(jnp.float32), axis=0,
+                                keepdims=True)
+                agg = jax.lax.psum(local,
                                    axes if len(axes) > 1 else axes[0])
-                return jnp.broadcast_to(agg[:1], n_loc.shape).astype(n_loc.dtype)
+                return jnp.broadcast_to(agg, n_loc.shape).astype(n_loc.dtype)
 
             in_specs = (spec, jax.sharding.PartitionSpec())
             return _shard_map(body, mesh=mesh, in_specs=in_specs,
@@ -490,6 +499,10 @@ def build_round_chunk(
     envelope: bool = False,
     guard=None,
     faults: bool = False,
+    sampled: bool = False,
+    mesh=None,
+    param_specs_tree=None,
+    client_axes=None,
 ):
     """Fuse a whole chunk of rounds into one `jax.lax.scan` over the round
     step: the host touches the device once per chunk instead of once per
@@ -551,10 +564,29 @@ def build_round_chunk(
                    drawn host-side into the mask (simulation._fault_round)
                    — the graph only consumes their traced results, so
                    fault rounds neither retrace nor sync.
+
+    sampled=True builds the K-cohort form of the chunk (sampled
+    participation: n_clients = K lanes, each round occupied by a freshly
+    gathered cohort of the M-client population). Lanes change owners
+    every round, so the per-lane FedAvg weights and Eq. 4 compute times
+    stop being chunk constants and ride in xs instead — two extra traced
+    leaves 'weights' (R, K) and 't_cp' (R, K); callers pass the
+    positional `weights`/`t_cp` chunk args as None. Everything else —
+    masks, clocks, faults, envelope, compression keys (lane-indexed) — is
+    unchanged, and at K = M (cohort == arange(M) every round) the xs rows
+    equal the dense chunk constants, so the math is value-identical to
+    the dense graph.
+
+    aggregation='allreduce_shardmap' shards the client axis over `mesh`
+    (forwarding mesh/param_specs_tree/client_axes to build_round_step):
+    each device reduces its own client rows locally and one param-sized
+    psum crosses the wire per round.
     """
     from repro.federated import compression
 
     step = build_round_step(loss_fn, opt, V, aggregation=aggregation,
+                            mesh=mesh, param_specs_tree=param_specs_tree,
+                            client_axes=client_axes,
                             impl=impl, envelope=envelope, guard=guard)
     compress = aggregation == "int8_stochastic"
 
@@ -565,6 +597,8 @@ def build_round_chunk(
 
         def body(carry, x):
             params, opt_state, k = carry
+            w_r = x["weights"] if sampled else weights
+            t_cp_r = x["t_cp"] if sampled else t_cp
             if batch_from is not None:
                 batches = batch_from(data, x["idx"])
             else:
@@ -575,9 +609,9 @@ def build_round_chunk(
                     k, n_clients)
             if scenario:
                 new_p, new_s, m = step(
-                    params, opt_state, batches, weights, keys=keys_C,
+                    params, opt_state, batches, w_r, keys=keys_C,
                     mask=x["mask"], clock_mask=x["clock_mask"],
-                    t_cp=t_cp, t_cm=x["t_cm"], env=env)
+                    t_cp=t_cp_r, t_cm=x["t_cm"], env=env)
                 # Mean over participating clients; NaN on a zero-
                 # participation round (same formula as the per-round
                 # backends, for bit parity). With a guard, participation
@@ -598,7 +632,7 @@ def build_round_chunk(
                                          else n * bits)
             else:
                 new_p, new_s, m = step(
-                    params, opt_state, batches, weights, keys=keys_C,
+                    params, opt_state, batches, w_r, keys=keys_C,
                     env=env)
                 ys = {"loss": jnp.mean(m["per_client_loss"])}
                 if bits is not None:
@@ -618,7 +652,7 @@ def build_round_chunk(
 
 
 def build_fleet_chunk(chunk_step: Callable, envelope: bool = False,
-                      ) -> Callable:
+                      sampled: bool = False) -> Callable:
     """vmap a `build_round_chunk` step over a leading fleet axis S.
 
     The chunk step is pure and closure-free over run state (everything it
@@ -641,9 +675,15 @@ def build_fleet_chunk(chunk_step: Callable, envelope: bool = False,
     not a loop), which is what makes the per-seed results bit-identical to
     sequential runs — asserted in tests/test_experiment_api.py (seeds) and
     tests/test_study.py (mixed-(b, V) arm groups).
+
+    sampled=True (cohort chunks): per-round weights/t_cp live in xs
+    (mapped, per-member cohorts differ) and the positional weights/t_cp
+    args are None, so their in_axes must be None even under envelope.
     """
     if envelope:
-        return jax.vmap(chunk_step, in_axes=(0, 0, 0, None, 0, None, 0, 0))
+        t_axis = None if sampled else 0
+        return jax.vmap(chunk_step,
+                        in_axes=(0, 0, 0, None, t_axis, None, 0, 0))
     return jax.vmap(chunk_step, in_axes=(0, 0, 0, None, None, None, 0))
 
 

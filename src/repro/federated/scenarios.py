@@ -113,13 +113,31 @@ class ScenarioStream:
     """
 
     def __init__(self, scenario: "Scenario", pop: delay.DevicePopulation,
-                 seed: int = 0):
+                 seed: int = 0, cohort_size: Optional[int] = None,
+                 cohort_weights=None):
         self.scenario = scenario
         self.pop = pop
+        self._seed = seed
         self._rng = np.random.default_rng(np.random.SeedSequence([seed, 0xED6E]))
         self._log_drift = np.zeros(pop.n)
         # crash/rejoin lifecycle: rounds each client stays down (0 = alive)
         self._down = np.zeros(pop.n, dtype=np.int64)
+        # Sampled participation: K-client cohorts drawn per round from a
+        # dedicated RNG so the mask/drift wire format above stays
+        # bit-identical to a dense (no-cohort) stream at the same seed.
+        if cohort_size is not None and not 1 <= int(cohort_size) <= pop.n:
+            raise ValueError(
+                f"cohort_size must be in [1, {pop.n}], got {cohort_size}")
+        self.cohort_size = None if cohort_size is None else int(cohort_size)
+        self._cohort_weights = None
+        if cohort_weights is not None:
+            w = np.asarray(cohort_weights, np.float64)
+            if w.shape != (pop.n,) or not np.all(w > 0):
+                raise ValueError(
+                    f"cohort_weights must be ({pop.n},) positive floats")
+            self._cohort_weights = w
+        self._cohort_rng = np.random.default_rng(
+            np.random.SeedSequence([seed, 0xC047]))
 
     @property
     def _faults(self) -> Optional[FaultModel]:
@@ -136,7 +154,8 @@ class ScenarioStream:
         mask/channel stream it left, mid-crash-epoch included."""
         return {"rng": self._rng.bit_generator.state,
                 "log_drift": self._log_drift.copy(),
-                "down": self._down.copy()}
+                "down": self._down.copy(),
+                "cohort_rng": self._cohort_rng.bit_generator.state}
 
     def set_state(self, state: dict) -> None:
         self._rng.bit_generator.state = state["rng"]
@@ -145,6 +164,47 @@ class ScenarioStream:
         down = state.get("down")
         self._down = (np.zeros(self.pop.n, dtype=np.int64) if down is None
                       else np.asarray(down, np.int64).copy())
+        # pre-cohort snapshots have no "cohort_rng" key: re-seed fresh
+        # (dense streams never consume this generator, so it's a no-op)
+        crng = state.get("cohort_rng")
+        if crng is None:
+            self._cohort_rng = np.random.default_rng(
+                np.random.SeedSequence([self._seed, 0xC047]))
+        else:
+            self._cohort_rng.bit_generator.state = crng
+
+    # -- cohort sampling ----------------------------------------------------
+    def draw_cohort(self) -> np.ndarray:
+        """Draw this round's participant cohort: (K,) sorted int32 client
+        ids. K = M (or no cohort configured) returns arange(M) WITHOUT
+        consuming the cohort RNG — a K=M sampled stream is state-identical
+        to a dense one, which is what the K=M bit-parity contract rests
+        on. "uniform" takes the K smallest of M uniform keys; "weighted"
+        is Gumbel top-K over the configured positive weights (exact
+        weighted sampling without replacement). Sorting makes cohort
+        lanes ascend in client id, so at K=M the lane order is exactly
+        the dense client order."""
+        M = self.pop.n
+        K = M if self.cohort_size is None else self.cohort_size
+        if K == M:
+            return np.arange(M, dtype=np.int32)
+        if self._cohort_weights is None:
+            key = self._cohort_rng.random(M)
+        else:
+            u = self._cohort_rng.random(M)
+            key = -(np.log(self._cohort_weights) - np.log(-np.log(u)))
+        idx = np.argpartition(key, K)[:K]
+        return np.sort(idx).astype(np.int32)
+
+    def draw_cohorts(self, rounds: int) -> np.ndarray:
+        """Next `rounds` cohorts stacked to (R, K) int32 — R sequential
+        `draw_cohort()` calls, bit for bit (the cohort twin of the
+        draw_chunk == R x next_round contract)."""
+        if rounds == 0:
+            K = (self.pop.n if self.cohort_size is None
+                 else self.cohort_size)
+            return np.empty((0, K), np.int32)
+        return np.stack([self.draw_cohort() for _ in range(rounds)])
 
     def _draw_round(self):
         """One round's raw draws: (uploaded, present, h, attempts, h_att).
@@ -309,8 +369,11 @@ class Scenario:
             G=G, f=f, p=np.full(n_devices, wc.tx_power_w), h=h)
 
     # -- per-round stream -------------------------------------------------
-    def stream(self, pop: delay.DevicePopulation, seed: int = 0) -> ScenarioStream:
-        return ScenarioStream(self, pop, seed)
+    def stream(self, pop: delay.DevicePopulation, seed: int = 0,
+               cohort_size: Optional[int] = None,
+               cohort_weights=None) -> ScenarioStream:
+        return ScenarioStream(self, pop, seed, cohort_size=cohort_size,
+                              cohort_weights=cohort_weights)
 
     @property
     def expected_participation(self) -> float:
@@ -425,6 +488,7 @@ def plan_for_scenario(
     wc: Optional[WirelessConfig] = None,
     seed: int = 0,
     method: str = "closed_form",
+    cohort_size: Optional[int] = None,
 ) -> defl.DEFLPlan:
     """Solve Alg. 1 against the scenario's realized population.
 
@@ -432,6 +496,10 @@ def plan_for_scenario(
     a straggler or cell-edge cohort shifts (b*, theta*) — and expected
     partial participation shrinks the effective M in the Eq. 12 round-
     count model (fewer updates per round average into the global model).
+    With `cohort_size=K` (sampled participation) the Eq. 12 effective M
+    is based on the K-client cohort instead of the population, while the
+    Eq. 5/7 straggler maxes stay population-wide (any client can be
+    drawn) — see defl.make_plan.
 
     A scenario whose FaultModel sets a round deadline re-solves under the
     truncated delay model (defl.deadline_plan): the unconstrained plan is
@@ -443,12 +511,14 @@ def plan_for_scenario(
     scenario = get(scenario)
     pop = scenario.population(fed.n_devices, cc, wc, seed)
     plan = defl.make_plan(fed, pop, update_bits, wireless=wc, method=method,
-                          participation=scenario.expected_participation)
+                          participation=scenario.expected_participation,
+                          cohort_size=cohort_size)
     fm = scenario.faults
     if fm is not None and fm.active and (
             fm.deadline is not None or fm.deadline_factor is not None):
         D = fm.resolve_deadline(plan.T_round)
         plan = defl.deadline_plan(
             fed, pop, update_bits, D, wireless=wc,
-            participation=scenario.expected_participation)
+            participation=scenario.expected_participation,
+            cohort_size=cohort_size)
     return plan

@@ -101,6 +101,8 @@ from repro.federated.client import (
     stack_chunk_batches,
     stack_chunk_indices,
     stack_client_batches,
+    stack_cohort_batches,
+    stack_cohort_indices,
 )
 from repro.federated.server import aggregate_updates
 from repro.optim.api import Optimizer
@@ -391,6 +393,9 @@ class Simulator:
         masked_loss_fn: Optional[Callable] = None,  # (p, batch, mask, n)
         envelope_key: Optional[Any] = None,  # study.py graph-cache key
         faults: Optional[FaultModel] = None,  # fault/recovery overlay
+        cohort: Optional[int] = None,  # K-client sampled participation
+        cohort_sampler: str = "uniform",  # 'uniform' | 'weighted' (by D_m)
+        shard_clients: bool = False,  # shard the client axis over devices
     ):
         """eval_batch_fn evaluates a whole stacked member axis at once —
         (S, ...) param leaves -> dict of (S,) metrics — so fleet/study
@@ -410,9 +415,42 @@ class Simulator:
         any scenario — including none, which overlays onto 'uniform' so
         the realization stream exists. An inactive FaultModel is ignored
         entirely: the compiled graphs, RNG streams and accounting are
-        bit-identical to not passing one."""
+        bit-identical to not passing one.
+
+        `cohort=K` turns on sampled participation: each round a K-client
+        cohort is drawn from the M-client population (uniformly, or
+        D_m-weighted with cohort_sampler='weighted') and only its members
+        compute/upload. Device client-state shrinks to O(K) — the stacked
+        params/opt carry K lanes, re-initialized from the global model
+        every round (FedAvg broadcasts it, so this is automatic for
+        params; the local optimizer must be stateless) — while the
+        population model (data partitions, scenario masks, channel
+        state) stays O(M) host-side. K = M runs the sampled machinery
+        over the full population and is bit-identical to the dense path.
+
+        `shard_clients=True` shards the stacked client axis over all
+        JAX devices (scan backend): FedAvg aggregation becomes a
+        shard_map psum (mesh_rounds._psum_shardmap_sync). Prototype on
+        CPU via XLA_FLAGS=--xla_force_host_platform_device_count=N."""
         if backend not in ("scan", "batched", "loop"):
             raise ValueError(f"unknown backend {backend!r}")
+        if cohort_sampler not in ("uniform", "weighted"):
+            raise ValueError(
+                f"unknown cohort_sampler {cohort_sampler!r}; "
+                "expected 'uniform' or 'weighted'")
+        if cohort is not None:
+            if backend == "loop":
+                raise ValueError(
+                    "cohort (sampled participation) requires backend "
+                    "'scan' or 'batched' — the loop reference is dense-only")
+            if not 1 <= int(cohort) <= pop.n:
+                raise ValueError(
+                    f"cohort must be in [1, {pop.n}], got {cohort}")
+        self._cohort = None if cohort is None else int(cohort)
+        self._sampled = self._cohort is not None
+        self._cohort_weights = (
+            np.asarray(np.asarray(data_sizes), np.float64)
+            if (self._sampled and cohort_sampler == "weighted") else None)
         self.loss_fn = loss_fn
         self._data_src = data
         self.data_sizes = data_sizes
@@ -431,6 +469,11 @@ class Simulator:
         if faults is not None and faults.active:
             base = self.scenario or scenarios.get("uniform")
             self.scenario = base.replace(faults=faults)
+        if self._sampled and self.scenario is None:
+            # Cohort draws live on the ScenarioStream: promote to the
+            # neutral 'uniform' scenario so the stream exists (same
+            # pattern as the faults overlay above).
+            self.scenario = scenarios.get("uniform")
         fm = self.scenario.faults if self.scenario is not None else None
         self._faults = fm if (fm is not None and fm.active) else None
         self._guard = None
@@ -454,11 +497,51 @@ class Simulator:
         self._env_cache: Optional[dict] = None
         probe = self._make_iters(fed.seed)
         assert len(probe) == fed.n_devices == pop.n
+        if hasattr(probe, "client") and not self._sampled:
+            raise ValueError(
+                "a ClientDataPool data source requires cohort sampling "
+                "(cohort=K) — the dense backends stack every client's "
+                "batches, which is exactly what the pool exists to avoid")
         self._init_params = jax.tree.map(jnp.asarray, init_params)
+        if self._sampled and jax.tree.leaves(opt.init(self._init_params)):
+            raise ValueError(
+                "sampled participation carries no per-client optimizer "
+                "state between rounds (cohort lanes change owners every "
+                "round; clients re-initialize from the global model) — "
+                "use a stateless local optimizer (plain SGD)")
+        # Sharded client axis: FedAvg aggregation as a shard_map psum
+        # over a 1-D 'clients' device mesh.
+        self._mesh = self._param_specs = None
+        self.shard_clients = bool(shard_clients)
+        if shard_clients:
+            if backend != "scan":
+                raise ValueError(
+                    f"shard_clients requires backend='scan', not {backend!r}")
+            if fed.compress_updates:
+                raise ValueError(
+                    "shard_clients with compress_updates is unsupported: "
+                    "the int8 quantizer uses its own aggregation path")
+            n_dev = jax.device_count()
+            C = self._cohort if self._sampled else fed.n_devices
+            if C % n_dev:
+                raise ValueError(
+                    f"client axis ({C} lanes) must divide evenly over the "
+                    f"{n_dev} available devices")
+            self._mesh = jax.sharding.Mesh(
+                np.array(jax.devices()), ("clients",))
+            spec = jax.sharding.PartitionSpec("clients")
+            self._param_specs = jax.tree.map(
+                lambda _: spec, self._init_params)
         # Static per-client compute times (Eq. 4); uplink times depend on
         # the realized per-round channel and are computed per round.
         self._t_cp_clients = delay.per_client_compute_time(
             fed.batch_size, pop.G, pop.f)
+        # Host f32 twin of the FedAvg size-weight vector: the sampled path
+        # gathers per-round (R, K) cohort rows from it instead of
+        # uploading M-sized arrays per chunk. The cast matches the dense
+        # path's jnp.float32 conversion exactly, so a gathered K=M row is
+        # bit-identical to the dense chunk constant.
+        self._sizes_host = np.asarray(np.asarray(data_sizes), np.float32)
         # Shape-only view of the global model: _update_bits computes wire
         # sizes from this, so delay accounting never dispatches a device op
         # or blocks the async queue (see the _update_bits docstring).
@@ -492,7 +575,11 @@ class Simulator:
             # back to pre-stacked (R, C, V, ...) host batches per chunk.
             self._data_dev = self._batch_from = None
             its = probe
-            if (its
+            if hasattr(its, "client"):  # ClientDataPool: one shared dataset
+                self._data_dev = jax.tree.map(
+                    jnp.asarray, its.device_arrays())
+                self._batch_from = its.batch_from
+            elif (its
                     and all(hasattr(it, "next_indices")
                             and hasattr(it, "device_arrays") for it in its)
                     and getattr(its[0], "data", None) is not None
@@ -526,13 +613,16 @@ class Simulator:
         build with a factory (ExperimentSpec does)."""
         seed = int(self.fed.seed if seed is None else seed)
         M = self.fed.n_devices
+        # Sampled participation: the stacked device state carries K cohort
+        # lanes, not M clients — O(K) regardless of population size.
+        C = self._cohort if self._sampled else M
         if self.backend == "loop":
             params = self._init_params
             opt_C: Any = tuple(self.opt.init(params) for _ in range(M))
         else:
-            params = mesh_rounds.replicate_clients(self._init_params, M)
+            params = mesh_rounds.replicate_clients(self._init_params, C)
             opt_C = jax.vmap(
-                lambda _: self.opt.init(self._init_params))(jnp.arange(M))
+                lambda _: self.opt.init(self._init_params))(jnp.arange(C))
         # stream/data stay None — "factory-fresh at `seed`", which is
         # exactly what _materialize constructs with no fast-forward, so
         # init() never has to build (and immediately discard) the
@@ -540,29 +630,42 @@ class Simulator:
         return SimState(params_C=params, opt_C=opt_C,
                         key=jax.random.PRNGKey(seed), seed=seed)
 
-    def _make_iters(self, seed: int) -> List:
-        if callable(self._data_src):
-            return list(self._data_src(seed))
-        return list(self._data_src)
+    def _make_iters(self, seed: int):
+        src = (self._data_src(seed) if callable(self._data_src)
+               else self._data_src)
+        # A ClientDataPool is one lazy object, not a per-client list.
+        return src if hasattr(src, "client") else list(src)
 
     @staticmethod
-    def _snapshot_iters(iters: List) -> Optional[tuple]:
+    def _snapshot_iters(iters) -> Optional[Any]:
+        if hasattr(iters, "client"):  # ClientDataPool: O(touched clients)
+            return iters.state()
         if all(hasattr(it, "state") and hasattr(it, "set_state")
                for it in iters):
             return tuple(it.state() for it in iters)
         return None
 
+    @staticmethod
+    def _restore_iters(iters, snap) -> None:
+        if hasattr(iters, "client"):
+            iters.set_state(snap)
+        else:
+            for it, s in zip(iters, snap):
+                it.set_state(s)
+
     def _materialize(self, state: SimState):
         """Live host-side streams positioned at `state`: data iterators
         (factory-fresh, then fast-forwarded from the state's snapshots)
-        and the scenario realization stream."""
+        and the scenario realization stream (cohort-configured when
+        sampled — its snapshot carries the cohort-RNG cursor too)."""
         iters = self._make_iters(state.seed)
         if state.data is not None:
-            for it, s in zip(iters, state.data):
-                it.set_state(s)
+            self._restore_iters(iters, state.data)
         stream = None
         if self.scenario is not None:
-            stream = self.scenario.stream(self.pop, state.seed)
+            stream = self.scenario.stream(
+                self.pop, state.seed, cohort_size=self._cohort,
+                cohort_weights=self._cohort_weights)
             if state.stream is not None:
                 stream.set_state(state.stream)
         return iters, stream
@@ -653,6 +756,8 @@ class Simulator:
     def _build_batched_round(self):
         fed = self.fed
         M, V = fed.n_devices, fed.local_rounds
+        if self._sampled:
+            M = self._cohort  # K cohort lanes (PRNG keys are lane-indexed)
         compress = fed.compress_updates
         agg = "int8_stochastic" if compress else "allreduce"
         envelope = self._envelope
@@ -672,6 +777,29 @@ class Simulator:
                     params_C, opt_C, batches, weights, keys=keys_C, env=env)
                 # Unweighted client mean, matching the loop backend's metric.
                 return new_p, new_s, key, jnp.mean(metrics["per_client_loss"])
+        elif self._sampled:
+            fault = self._faults is not None
+
+            # Sampled form: cohort lanes change owners every round, so
+            # the FedAvg size-weights arrive as a traced argument (the
+            # gathered (K,) cohort row) instead of a closed-over constant.
+            def round_fn(params_C, opt_C, key, batches, sizes,
+                         mask, clock_mask, t_cp, t_cm, env=None):
+                keys_C = None
+                if compress:
+                    key, keys_C = compression.sequential_client_keys(key, M)
+                new_p, new_s, metrics = step(
+                    params_C, opt_C, batches, sizes, keys=keys_C,
+                    mask=mask, clock_mask=clock_mask, t_cp=t_cp, t_cm=t_cm,
+                    env=env)
+                msk = metrics.get("mask_eff", mask)
+                n = jnp.sum(msk)
+                loss = (jnp.sum(metrics["per_client_loss"] * msk)
+                        / jnp.where(n > 0, n, 1.0))
+                loss = jnp.where(n > 0, loss, jnp.nan)
+                if fault:
+                    return new_p, new_s, key, loss, n
+                return new_p, new_s, key, loss
         else:
             sizes = self._sizes_f32
             fault = self._faults is not None
@@ -714,17 +842,24 @@ class Simulator:
         as arguments, which is what lets run_fleet vmap it over a fleet
         axis (mesh_rounds.build_fleet_chunk)."""
         fed = self.fed
-        agg = "int8_stochastic" if fed.compress_updates else "allreduce"
+        agg = ("int8_stochastic" if fed.compress_updates
+               else ("allreduce_shardmap" if self._mesh is not None
+                     else "allreduce"))
+        n_lanes = self._cohort if self._sampled else fed.n_devices
         return mesh_rounds.build_round_chunk(
             self.masked_loss_fn if self._envelope else self.loss_fn,
-            self.opt, fed.local_rounds, fed.n_devices,
+            self.opt, fed.local_rounds, n_lanes,
             aggregation=agg, impl=self.impl,
             scenario=self.scenario is not None,
             batch_from=self._batch_from,
             update_bits=self._update_bits(),
             envelope=self._envelope,
             guard=self._guard,
-            faults=self._faults is not None)
+            faults=self._faults is not None,
+            sampled=self._sampled,
+            mesh=self._mesh,
+            param_specs_tree=self._param_specs,
+            client_axes=("clients",) if self._mesh is not None else None)
 
     def _chunk_call(self, params_C, opt_C, key, weights, t_cp_arg, xs):
         """One compiled chunk dispatch, threading the trivial envelope
@@ -739,7 +874,8 @@ class Simulator:
         if self._fleet_fn is None:
             self._fleet_fn = jax.jit(
                 mesh_rounds.build_fleet_chunk(self._chunk_raw,
-                                              envelope=self._envelope),
+                                              envelope=self._envelope,
+                                              sampled=self._sampled),
                 donate_argnums=(0, 1, 2))
         return self._fleet_fn
 
@@ -748,11 +884,11 @@ class Simulator:
         never donated itself (run_fleet broadcasts a new stacked buffer
         out of it per call), so reuse across calls is safe."""
         if self._fleet_base is None:
-            M = self.fed.n_devices
+            C = self._cohort if self._sampled else self.fed.n_devices
             self._fleet_base = (
-                mesh_rounds.replicate_clients(self._init_params, M),
+                mesh_rounds.replicate_clients(self._init_params, C),
                 jax.vmap(lambda _: self.opt.init(self._init_params))(
-                    jnp.arange(M)))
+                    jnp.arange(C)))
         return self._fleet_base
 
     # -- fault semantics (host f64 side) ------------------------------------
@@ -777,6 +913,22 @@ class Simulator:
             mask = np.asarray(real.mask, bool) & (finish <= self._deadline)
             real = dataclasses.replace(real, mask=mask)
         return real, t_cm, int(real.attempts.sum())
+
+    @staticmethod
+    def _gather_real(real, cohort):
+        """Restrict an M-wide realization to the cohort's columns. Fault
+        semantics (retransmission clocks, deadline cuts) are resolved
+        M-wide FIRST, then gathered — sampling selects who participates,
+        it never changes what would have happened to them."""
+        return dataclasses.replace(
+            real,
+            mask=np.asarray(real.mask)[cohort],
+            clock_mask=np.asarray(real.clock_mask)[cohort],
+            h=np.asarray(real.h)[cohort],
+            attempts=(None if real.attempts is None
+                      else np.asarray(real.attempts)[cohort]),
+            h_att=(None if real.h_att is None
+                   else np.asarray(real.h_att)[cohort]))
 
     def _raise_if_diverged(self, history, start: int, snap) -> int:
         """run()-level divergence guard: a non-finite train loss on a
@@ -815,40 +967,70 @@ class Simulator:
                 "this simulation has no scenario — the mask/channel inputs "
                 "would be silently ignored. Construct the Simulator with "
                 "scenario=... or drop the argument.")
+        if real is not None and self._sampled:
+            raise ValueError(
+                "run_round(real=...) is unsupported with sampled cohorts: "
+                "an externally supplied M-wide realization has no cohort "
+                "to condition on. Drop the argument (the state's stream "
+                "draws both) or run dense.")
         iters, stream = self._materialize(state)
+        cohort = None
         if self.scenario is not None and real is None:
+            if self._sampled:
+                cohort = stream.draw_cohort()
             real = stream.next_round()
         if self._faults is not None and real is not None:
             real, t_cm_fault, _ = self._fault_round(real)
             if t_cm_clients is None:
                 t_cm_clients = t_cm_fault
+        if cohort is not None:
+            real = self._gather_real(real, cohort)
+            if t_cm_clients is not None:
+                t_cm_clients = np.asarray(t_cm_clients)[cohort]
         if self.backend == "loop":
             params, opt_C, key, metrics = self._round_loop(
                 state.params_C, state.opt_C, state.key, iters, real)
         else:
             params, opt_C, key, metrics = self._round_batched(
                 state.params_C, state.opt_C, state.key, iters, real,
-                t_cm_clients)
+                t_cm_clients, cohort)
         new_state = self._rebuild_state(
             state, params, opt_C, key, state.round + 1, state.sim_time,
             iters, stream)
         return new_state, metrics
 
     def _round_batched(self, params_C, opt_C, key, iters, real,
-                       t_cm_clients=None):
-        batches = stack_client_batches(iters, self.fed.local_rounds)
+                       t_cm_clients=None, cohort=None):
+        V = self.fed.local_rounds
+        batches = (stack_cohort_batches(iters, cohort, V)
+                   if cohort is not None else stack_client_batches(iters, V))
         env = self._trivial_env() if self._envelope else None
         if self.scenario is None:
             params_C, opt_C, key, loss = self._round_fn(
                 params_C, opt_C, key, batches, env)
             return params_C, opt_C, key, {"train_loss": loss}  # device scalar
         if t_cm_clients is None:  # direct run_round callers; run() shares its vector
+            p = self.pop.p if cohort is None else self.pop.p[cohort]
             t_cm_clients = delay.per_client_uplink_time(
-                self._update_bits(), self.wireless, self.pop.p, real.h)
+                self._update_bits(), self.wireless, p, real.h)
         mask = jnp.asarray(real.mask, jnp.float32)
         clock_mask = jnp.asarray(real.clock_mask, jnp.float32)
-        t_cp = jnp.asarray(self._t_cp_clients, jnp.float32)
+        t_cp = jnp.asarray(self._t_cp_clients if cohort is None
+                           else self._t_cp_clients[cohort], jnp.float32)
         t_cm = jnp.asarray(t_cm_clients, jnp.float32)
+        if cohort is not None:
+            sizes = jnp.asarray(self._sizes_host[cohort])
+            if self._faults is not None:
+                params_C, opt_C, key, loss, n_dev = self._round_fn(
+                    params_C, opt_C, key, batches, sizes, mask, clock_mask,
+                    t_cp, t_cm, env)
+                return params_C, opt_C, key, {
+                    "train_loss": loss, "n_participants": n_dev}
+            params_C, opt_C, key, loss = self._round_fn(
+                params_C, opt_C, key, batches, sizes, mask, clock_mask,
+                t_cp, t_cm, env)
+            return params_C, opt_C, key, {
+                "train_loss": loss, "n_participants": real.n_participants}
         if self._faults is not None:
             # Guard rejections happen in-graph: the participant count is
             # the compiled step's fifth output (a device scalar until the
@@ -951,6 +1133,7 @@ class Simulator:
         iterator/stream consumption is identical to a native run's."""
         V, b = self.fed.local_rounds, self.fed.batch_size
         M = self.fed.n_devices
+        L = self._cohort if self._sampled else M  # lanes in the xs leaves
         V_env, B_env = envelope if envelope is not None else (V, b)
         pad = self._pad_rounds
 
@@ -958,15 +1141,25 @@ class Simulator:
             a = np.asarray(a)
             if (V_env, B_env) == (V, b):
                 return pad(a, R)
-            out = np.zeros((R, M, V_env, B_env) + a.shape[4:], a.dtype)
+            out = np.zeros((R, L, V_env, B_env) + a.shape[4:], a.dtype)
             out[:n, :, :V, :b] = a
             return out
 
+        # Cohorts are drawn first (dedicated RNG, independent of the
+        # realization stream) so only participating clients' data
+        # iterators advance; _rewind_chunk replays in the same order.
+        cohorts = stream.draw_cohorts(n) if self._sampled else None
         if self._data_dev is not None:
-            idx = stack_chunk_indices(iters, n, V)
+            idx = (stack_cohort_indices(iters, cohorts, V) if self._sampled
+                   else stack_chunk_indices(iters, n, V))
             xs = {"idx": pad_env(idx)}
         else:
-            batches = stack_chunk_batches(iters, n, V)
+            if self._sampled:
+                rounds_b = [stack_cohort_batches(iters, cohorts[r], V)
+                            for r in range(n)]
+                batches = jax.tree.map(lambda *bs: np.stack(bs), *rounds_b)
+            else:
+                batches = stack_chunk_batches(iters, n, V)
             xs = {"batches": jax.tree.map(pad_env, batches)}
         valid = np.zeros(R, bool)
         valid[:n] = True
@@ -975,12 +1168,16 @@ class Simulator:
         if self.scenario is not None:
             chunk = stream.draw_chunk(n)
             mask = np.asarray(chunk.mask, bool)
+            clock_mask = np.asarray(chunk.clock_mask)
             if self._faults is not None:
                 fm = self._faults
                 # Retransmission: the effective uplink time is the sum of
                 # per-attempt airtimes + backoff waits (f64 host twin,
                 # vectorized over the round axis — each row bit-identical
-                # to the per-round _fault_round transformation).
+                # to the per-round _fault_round transformation). Fault
+                # semantics resolve POPULATION-wide (M columns) even under
+                # sampling, so the cohort gather below sees exactly the
+                # rows a dense run would.
                 t_cm = delay.effective_uplink_times(
                     self._update_bits(), self.wireless, self.pop.p,
                     chunk.h_att, chunk.attempts,
@@ -991,19 +1188,38 @@ class Simulator:
                     finish = (self.fed.local_rounds * self._t_cp_clients
                               + t_cm)
                     mask = mask & (finish <= self._deadline)
-                host["attempts"] = chunk.attempts.sum(axis=1)
             else:
                 t_cm = delay.per_client_uplink_time(
                     self._update_bits(), self.wireless, self.pop.p, chunk.h)
+            if self._sampled:
+                # Everything below the gather sees only cohort columns —
+                # bits, attempts and the round clock are conditioned on
+                # the sampled cohort (absent clients never hit the air).
+                g = lambda a: np.take_along_axis(np.asarray(a), cohorts,
+                                                 axis=1)
+                mask, clock_mask, t_cm = g(mask), g(clock_mask), g(t_cm)
+                t_cp_rows = np.take(self._t_cp_clients, cohorts)
+                if self._faults is not None:
+                    host["attempts"] = g(chunk.attempts).sum(axis=1)
+            else:
+                t_cp_rows = self._t_cp_clients
+                if self._faults is not None:
+                    host["attempts"] = chunk.attempts.sum(axis=1)
             # f64 host twin of the in-graph clock: bit-identical to the
             # per-round backends' accounting (delay.chunk_round_times).
-            T_cm, T_cp = delay.chunk_round_times(
-                self._t_cp_clients, t_cm, chunk.clock_mask)
+            T_cm, T_cp = delay.chunk_round_times(t_cp_rows, t_cm, clock_mask)
             host.update({"T_cm": T_cm, "T_cp": T_cp,
                          "n_participants": mask.sum(axis=1)})
             xs["mask"] = pad(mask.astype(np.float32), R)
-            xs["clock_mask"] = pad(chunk.clock_mask.astype(np.float32), R)
+            xs["clock_mask"] = pad(clock_mask.astype(np.float32), R)
             xs["t_cm"] = pad(t_cm.astype(np.float32), R)
+            if self._sampled:
+                # Per-round cohort rows of the chunk-constant dense args:
+                # FedAvg size weights (raw sizes — the step renormalizes
+                # in-graph) and compute times, as the SAME f32 values the
+                # dense path uploads.
+                xs["weights"] = pad(np.take(self._sizes_host, cohorts), R)
+                xs["t_cp"] = pad(t_cp_rows.astype(np.float32), R)
             if self._faults is not None:
                 cap = np.inf if self._deadline is None else self._deadline
                 xs["t_cap"] = pad(np.full(n, cap, np.float32), R)
@@ -1018,9 +1234,18 @@ class Simulator:
         the snapshot protocol can't be rewound — acceptable only if they
         are stateless (the same assumption checkpointing makes)."""
         V = self.fed.local_rounds
+        if self._sampled:
+            # Cohorts first, data second — the exact _chunk_inputs order.
+            # Index replay (next_indices) is RNG-identical to next_batch.
+            stream.set_state(pre_stream)
+            cohorts = stream.draw_cohorts(t)
+            stream.draw_chunk(t)
+            if pre_data is not None:
+                self._restore_iters(iters, pre_data)
+                stack_cohort_indices(iters, cohorts, V)
+            return
         if pre_data is not None:
-            for it, s in zip(iters, pre_data):
-                it.set_state(s)
+            self._restore_iters(iters, pre_data)
             if self._data_dev is not None:
                 stack_chunk_indices(iters, t, V)
             else:
@@ -1030,7 +1255,11 @@ class Simulator:
             stream.draw_chunk(t)
 
     def _chunk_args(self):
-        """(weights, t_cp) chunk-fn arguments for this configuration."""
+        """(weights, t_cp) chunk-fn arguments for this configuration.
+        Sampled sims carry both as per-round xs leaves (the gathered
+        cohort rows) instead of chunk-constant arguments."""
+        if self._sampled:
+            return None, None
         if self.scenario is None:
             return self._weights, None
         return self._sizes_f32, self._t_cp_dev
@@ -1228,24 +1457,37 @@ class Simulator:
             real = None
             t_cm_clients = None
             n_attempts = None
+            cohort = None
             if self.scenario is not None:
                 # Realize the round (host-side numpy: mask + channel), take
                 # the Eq. 8 clock as the straggler max over participating
                 # clients, and feed the same realization to the round step.
+                if self._sampled:
+                    cohort = stream.draw_cohort()
                 real = stream.next_round()
                 if self._faults is not None:
                     real, t_cm_clients, n_attempts = self._fault_round(real)
                 else:
                     t_cm_clients = delay.per_client_uplink_time(
                         update_bits, self.wireless, self.pop.p, real.h)
+                if cohort is not None:
+                    # Fault semantics above resolved M-wide; everything
+                    # from here on (clock, bits, attempts, the step) is
+                    # conditioned on the cohort's columns.
+                    real = self._gather_real(real, cohort)
+                    t_cm_clients = np.asarray(t_cm_clients)[cohort]
+                    if n_attempts is not None:
+                        n_attempts = int(real.attempts.sum())
+                t_cp_vec = (self._t_cp_clients if cohort is None
+                            else self._t_cp_clients[cohort])
                 T_cm, T_cp = delay.masked_round_times(
-                    self._t_cp_clients, t_cm_clients, real.clock_mask)
+                    t_cp_vec, t_cm_clients, real.clock_mask)
             if self.backend == "loop":
                 params_C, opt_C, key, metrics = self._round_loop(
                     params_C, opt_C, key, iters, real)
             else:
                 params_C, opt_C, key, metrics = self._round_batched(
-                    params_C, opt_C, key, iters, real, t_cm_clients)
+                    params_C, opt_C, key, iters, real, t_cm_clients, cohort)
             sim_time += delay.round_time(T_cm, T_cp, V,
                                          deadline=self._deadline)
             n_part = metrics.get("n_participants")
@@ -1371,6 +1613,15 @@ class Simulator:
             params_S, opt_S, key_S = jax.tree.map(
                 lambda *xs: jnp.stack(xs),
                 *[(st.params_C, st.opt_C, st.key) for st in states])
+            # Fleet-memory ceiling fix: drop our references to the members'
+            # unstacked device buffers now that the stacked (S, C, ...)
+            # copies exist — otherwise S per-member state trios stay alive
+            # alongside the (donated) stacked fleet state for the whole
+            # run, doubling peak device memory. The caller's own state
+            # objects are unaffected; the returned states carry fresh
+            # slices of the final stacked buffers.
+            states = [dataclasses.replace(
+                st, params_C=None, opt_C=None, key=None) for st in states]
         mats = [self._materialize(st) for st in states]
         weights, t_cp_arg = self._chunk_args()
         fleet_fn = self._get_fleet_fn()

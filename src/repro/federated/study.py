@@ -85,6 +85,7 @@ def _group_signature(spec: ExperimentSpec, fed) -> tuple:
             spec.seed, spec.scenario, spec.effective_faults(),
             spec.heterogeneity, spec.compute,
             spec.wireless, spec.backend, spec.impl, spec.with_eval,
+            spec.population, spec.shard_clients,
             fed.n_devices, fed.lr, fed.compress_updates)
 
 
@@ -129,13 +130,20 @@ def _group_fns(rep: Simulator, V_env: int, B_env: int):
                 return _GROUP_FNS[key]
         except TypeError:  # unhashable user key: build uncached
             key = None
-    agg = "int8_stochastic" if rep.fed.compress_updates else "allreduce"
+    agg = ("int8_stochastic" if rep.fed.compress_updates
+           else ("allreduce_shardmap" if rep._mesh is not None
+                 else "allreduce"))
+    n_lanes = rep._cohort if rep._sampled else rep.fed.n_devices
     chunk = mesh_rounds.build_round_chunk(
-        rep.masked_loss_fn, rep.opt, V_env, rep.fed.n_devices,
+        rep.masked_loss_fn, rep.opt, V_env, n_lanes,
         aggregation=agg, impl=rep.impl, scenario=rep.scenario is not None,
         batch_from=rep._batch_from, envelope=True,
-        guard=rep._guard, faults=rep._faults is not None)
-    fns = (chunk, jax.jit(mesh_rounds.build_fleet_chunk(chunk, envelope=True),
+        guard=rep._guard, faults=rep._faults is not None,
+        sampled=rep._sampled, mesh=rep._mesh,
+        param_specs_tree=rep._param_specs,
+        client_axes=("clients",) if rep._mesh is not None else None)
+    fns = (chunk, jax.jit(mesh_rounds.build_fleet_chunk(
+               chunk, envelope=True, sampled=rep._sampled),
                           donate_argnums=(0, 1, 2)))
     if key is not None:
         _GROUP_FNS[key] = fns
@@ -170,7 +178,10 @@ def _run_group(members: List[_Member], max_rounds: int, eval_every: int,
     weights, _ = rep._chunk_args()
     scenario = rep.scenario is not None
     t_cp_S = None
-    if scenario:
+    if scenario and not rep._sampled:
+        # Sampled groups carry per-round (R, K) t_cp rows in xs instead
+        # (lanes change owners every round); weights is None for the
+        # same reason (_chunk_args).
         t_cp_S = jnp.asarray(
             np.stack([m.sim._t_cp_clients for m in members]), jnp.float32)
     env_S = jax.tree.map(
@@ -286,6 +297,9 @@ class StudyResult:
     groups: Tuple[Tuple[str, ...], ...]  # grouping report (labels/group)
     target_acc: Optional[float] = None
     max_sim_time: Optional[float] = None
+    # label -> cohort size K for sampled-participation arms (None = dense).
+    cohorts: Dict[str, Optional[int]] = dataclasses.field(
+        default_factory=dict)
 
     def __getitem__(self, label: str) -> List[SimResult]:
         return self.results[label]
@@ -365,18 +379,22 @@ class StudyResult:
 
     def table(self) -> Tuple[str, List[tuple]]:
         """Paper-style per-arm rows:
-        label,b,V,rounds,mean_participants,overall_time_s,acc,time_to_target
-        (time/acc as mean+-std bands when the study ran multiple seeds)."""
+        label,b,V,K,rounds,mean_participants,overall_time_s,acc,
+        time_to_target — K is the sampled cohort size (blank for dense
+        arms); time/acc as mean+-std bands when the study ran multiple
+        seeds."""
         multi = len(self.seeds) > 1
         rows = []
         for label in self.labels:
             s = self.summary(label)
             fed = self.results[label][0].fed
+            K = self.cohorts.get(label)
             tta = self.time_to_target_or_total(label)
             hit = [r.time_to_accuracy(self.target_acc) is not None
                    for r in self.results[label]] if self.target_acc else []
             rows.append((
                 label, fed.batch_size, fed.local_rounds,
+                K if K is not None else "",
                 round(s["rounds_mean"], 1),
                 (round(s["mean_participants"], 1)
                  if np.isfinite(s["mean_participants"]) else ""),
@@ -385,7 +403,7 @@ class StudyResult:
                 (_fmt(float(tta.mean()), float(tta.std()), 2, multi)
                  if (not self.target_acc or any(hit)) else ""),
             ))
-        return ("label,b,V,rounds,mean_participants,overall_time_s,acc,"
+        return ("label,b,V,K,rounds,mean_participants,overall_time_s,acc,"
                 "time_to_target_s", rows)
 
     def to_json(self) -> dict:
@@ -416,6 +434,7 @@ class StudyResult:
             fed = self.results[label][0].fed
             arms[label] = {
                 "b": fed.batch_size, "V": fed.local_rounds, "lr": fed.lr,
+                "K": self.cohorts.get(label),
                 "compress_updates": fed.compress_updates,
                 "summary": self.summary(label),
                 "per_seed": per_seed,
@@ -557,7 +576,10 @@ class Study:
             results=results, states=states,
             groups=tuple(tuple(label for label, _, _ in groups[sig])
                          for sig in order),
-            target_acc=self.target_acc, max_sim_time=self.max_sim_time)
+            target_acc=self.target_acc, max_sim_time=self.max_sim_time,
+            cohorts={label: (c.K if (c := spec.cohort_spec()) is not None
+                             else None)
+                     for label, spec in self.arms})
 
     def _bit_probe(self, group) -> None:
         """One-round native-vs-enveloped bit comparison per arm of a

@@ -1,0 +1,404 @@
+"""Sampled-participation round engine: K-client cohorts drawn per round
+from an M-client population, device state O(K).
+
+Contracts under test:
+  * K = M sampled is bit-identical to dense on every registered scenario
+    (losses, clocks, participation, uplink bits, params) — with and
+    without compression, with and without faults;
+  * sampled scan == sampled batched bit-parity at K < M (one trace);
+  * cohort draws are deterministic per seed, survive a state
+    snapshot/restore, and the K = M draw consumes NO cohort RNG;
+  * checkpoint/resume mid-run is bit-identical to an uninterrupted run;
+  * device state really is O(K) (stacked params carry K lanes, not M);
+  * the spec API: PopulationSpec/CohortSpec wiring, the dense-M
+    deprecation, population-scale (M >> n_train) smoke;
+  * the DEFL plan sees the cohort-conditional effective M (Eq. 12);
+  * misuse errors: stateful local optimizer, loop backend, run_round
+    with a pre-drawn realization.
+"""
+import dataclasses
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
+from repro.core import defl, delay
+from repro.data.pipeline import BatchIterator, ClientDataPool
+from repro.federated import experiment, scenarios
+from repro.federated.experiment import (CohortSpec, ExperimentSpec,
+                                        PopulationSpec)
+from repro.federated.faults import FaultModel
+from repro.federated.simulation import Simulator, load_state, save_state
+from repro.federated.study import Study
+from repro.optim import sgd
+
+
+def _quad_loss(params, batch):
+    diff = params["w"] - batch["target"]
+    return 0.5 * jnp.sum(diff * diff), {}
+
+
+class _TargetIterator:
+    """Batch source without the index protocol (generic pre-stacked
+    data path)."""
+
+    def __init__(self, target, batch_size):
+        self.target = np.asarray(target, np.float32)
+        self.batch_size = batch_size
+
+    def next_batch(self):
+        return {"target": np.tile(self.target, (self.batch_size, 1))}
+
+
+def _quad_sim(backend, scenario, *, M=6, K=None, sampler="uniform",
+              compress=False, faults=None, seed=0):
+    d, b = 16, 2
+    fed = FedConfig(n_devices=M, batch_size=b, lr=0.05, seed=seed,
+                    compress_updates=compress)
+    scen = scenarios.get(scenario) if scenario is not None else None
+    pop = (scen.population(M, seed=seed) if scen is not None else
+           delay.draw_population(M, ComputeConfig(), WirelessConfig(), 0, 0.0))
+    iters = [_TargetIterator(np.linspace(0.0, m, d) * 0.1, b)
+             for m in range(M)]
+    return Simulator(
+        _quad_loss, {"w": jnp.zeros(d)}, iters,
+        10 * np.arange(1, M + 1), fed, sgd(fed.lr), pop,
+        backend=backend, scenario=scen, faults=faults,
+        cohort=K, cohort_sampler=sampler)
+
+
+def _run(sim, **kw):
+    _, res = sim.run(sim.init(), **kw)
+    return res
+
+
+def _assert_bit_identical(res_a, res_b):
+    for a, b in zip(jax.tree.leaves(res_a.params),
+                    jax.tree.leaves(res_b.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert len(res_a.history) == len(res_b.history)
+    for ra, rb in zip(res_a.history, res_b.history):
+        assert ra.round == rb.round
+        np.testing.assert_array_equal(ra.train_loss, rb.train_loss)
+        assert ra.sim_time == rb.sim_time
+        assert ra.T_cm == rb.T_cm and ra.T_cp == rb.T_cp
+        assert ra.n_participants == rb.n_participants
+        assert ra.uplink_bits == rb.uplink_bits
+
+
+# -- K = M dense equivalence --------------------------------------------------
+
+# 7 rounds at eval_every=3: ragged final chunk included.
+@pytest.mark.parametrize("scenario", list(scenarios.names()))
+@pytest.mark.parametrize("compress", [False, True])
+def test_sampled_K_eq_M_bit_identical_to_dense(scenario, compress):
+    dense = _run(_quad_sim("scan", scenario, M=4, compress=compress),
+                 max_rounds=7, eval_every=3)
+    sampled = _run(_quad_sim("scan", scenario, M=4, K=4, compress=compress),
+                   max_rounds=7, eval_every=3)
+    _assert_bit_identical(sampled, dense)
+
+
+def test_sampled_K_eq_M_with_faults_matches_dense():
+    fm = FaultModel(deadline_factor=1.5, max_retries=1)
+    dense = _run(_quad_sim("scan", "stragglers", M=4, faults=fm),
+                 max_rounds=6, eval_every=3)
+    sampled = _run(_quad_sim("scan", "stragglers", M=4, K=4, faults=fm),
+                   max_rounds=6, eval_every=3)
+    _assert_bit_identical(sampled, dense)
+
+
+# -- sampled scan == batched --------------------------------------------------
+
+@pytest.mark.parametrize("scenario", ["dropout", "unreliable_edge", None])
+@pytest.mark.parametrize("compress", [False, True])
+def test_sampled_scan_matches_batched(scenario, compress):
+    rb = _run(_quad_sim("batched", scenario, M=6, K=3, compress=compress),
+              max_rounds=7, eval_every=3)
+    sim = _quad_sim("scan", scenario, M=6, K=3, compress=compress)
+    rs = _run(sim, max_rounds=7, eval_every=3)
+    _assert_bit_identical(rs, rb)
+    assert sim.trace_count == 1
+
+
+def test_sampled_faults_scan_matches_batched():
+    fm = FaultModel(deadline_factor=1.5, max_retries=2)
+    rb = _run(_quad_sim("batched", "stragglers", M=6, K=3, faults=fm),
+              max_rounds=6, eval_every=3)
+    rs = _run(_quad_sim("scan", "stragglers", M=6, K=3, faults=fm),
+              max_rounds=6, eval_every=3)
+    _assert_bit_identical(rs, rb)
+
+
+def test_weighted_sampler_runs_and_matches_across_backends():
+    rb = _run(_quad_sim("batched", "dropout", M=6, K=3, sampler="weighted"),
+              max_rounds=5, eval_every=2)
+    rs = _run(_quad_sim("scan", "dropout", M=6, K=3, sampler="weighted"),
+              max_rounds=5, eval_every=2)
+    _assert_bit_identical(rs, rb)
+    parts = [r.n_participants for r in rs.history]
+    assert all(p is None or p <= 3 for p in parts)
+
+
+# -- cohort draws -------------------------------------------------------------
+
+def _stream(K=3, M=6, seed=0, weights=None):
+    scen = scenarios.get("dropout")
+    pop = scen.population(M, seed=seed)
+    return scen.stream(pop, seed, cohort_size=K, cohort_weights=weights)
+
+
+def test_cohort_draw_deterministic_sorted_unique():
+    a = [_stream(seed=3).draw_cohort() for _ in range(5)]
+    b = [_stream(seed=3).draw_cohort() for _ in range(5)]
+    np.testing.assert_array_equal(a[0], b[0])
+    for c in a:
+        assert c.dtype == np.int32 and c.shape == (3,)
+        assert (np.diff(c) > 0).all()  # sorted, unique
+        assert c.min() >= 0 and c.max() < 6
+    # draw_cohorts(R) == R x draw_cohort(), bit for bit
+    s1, s2 = _stream(seed=3), _stream(seed=3)
+    stacked = s1.draw_cohorts(4)
+    singles = np.stack([s2.draw_cohort() for _ in range(4)])
+    np.testing.assert_array_equal(stacked, singles)
+
+
+def test_cohort_draw_K_eq_M_is_arange_and_consumes_no_rng():
+    s = _stream(K=6, M=6)
+    before = s.state()["cohort_rng"]
+    np.testing.assert_array_equal(s.draw_cohort(), np.arange(6))
+    assert s.state()["cohort_rng"] == before
+
+
+def test_cohort_state_snapshot_restore():
+    s = _stream(seed=9)
+    s.draw_cohorts(3)
+    snap = s.state()
+    ahead = s.draw_cohorts(4)
+    s.set_state(snap)
+    np.testing.assert_array_equal(s.draw_cohorts(4), ahead)
+
+
+def test_weighted_cohort_favors_heavy_clients():
+    w = np.array([1e-6, 1e-6, 1e-6, 1.0, 1.0, 1.0])
+    s = _stream(K=3, M=6, weights=w)
+    draws = np.concatenate([s.draw_cohort() for _ in range(50)])
+    heavy = (draws >= 3).mean()
+    assert heavy > 0.95
+
+
+# -- checkpoint / resume ------------------------------------------------------
+
+def test_sampled_resume_bit_identical(tmp_path):
+    full = _run(_quad_sim("scan", "dropout", M=6, K=3, seed=5),
+                max_rounds=6, eval_every=2)
+    simA = _quad_sim("scan", "dropout", M=6, K=3, seed=5)
+    mid, _ = simA.run(simA.init(), max_rounds=3, eval_every=2)
+    path = os.path.join(tmp_path, "state.pkl")
+    save_state(path, mid)
+    simB = _quad_sim("scan", "dropout", M=6, K=3, seed=5)
+    _, resumed = simB.run(load_state(path), max_rounds=3, eval_every=2)
+    for x, y in zip(full.history[3:], resumed.history):
+        assert x.round == y.round
+        np.testing.assert_array_equal(x.train_loss, y.train_loss)
+        assert x.sim_time == y.sim_time
+        assert x.n_participants == y.n_participants
+    for a, b in zip(jax.tree.leaves(full.params),
+                    jax.tree.leaves(resumed.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- O(K) device state --------------------------------------------------------
+
+def test_sampled_device_state_is_O_K():
+    sim = _quad_sim("scan", "dropout", M=64, K=4)
+    st = sim.init()
+    for leaf in jax.tree.leaves(st.params_C):
+        assert leaf.shape[0] == 4  # K lanes, not M
+    st, _ = sim.run(st, max_rounds=2, eval_every=2)
+    for leaf in jax.tree.leaves(st.params_C):
+        assert leaf.shape[0] == 4
+
+
+# -- spec API -----------------------------------------------------------------
+
+def test_population_spec_validation():
+    with pytest.raises(ValueError):
+        CohortSpec(K=0)
+    with pytest.raises(ValueError):
+        CohortSpec(K=2, sampler="roulette")
+    with pytest.raises(ValueError):
+        PopulationSpec(M=4, cohort=CohortSpec(K=8))  # K > M
+
+
+def test_population_spec_dense_sugar_bit_parity():
+    base = dict(model="mnist_cnn_tiny", dataset="mnist", n_train=48,
+                n_test=16, scenario="dropout")
+    via_fed = ExperimentSpec(
+        fed=FedConfig(n_devices=4, batch_size=4, theta=0.62, lr=0.05),
+        **base)
+    via_pop = ExperimentSpec(
+        fed=FedConfig(batch_size=4, theta=0.62, lr=0.05),
+        population=PopulationSpec(M=4), **base)
+    ra = _run(via_fed.build(), max_rounds=3, eval_every=3)
+    rb = _run(via_pop.build(), max_rounds=3, eval_every=3)
+    _assert_bit_identical(ra, rb)
+
+
+def test_dense_M_above_threshold_deprecated():
+    spec = ExperimentSpec(
+        fed=FedConfig(batch_size=4, theta=0.62, lr=0.05),
+        model="mnist_cnn_tiny", dataset="mnist", n_train=48, n_test=16,
+        population=PopulationSpec(
+            M=experiment.DENSE_M_DEPRECATION_THRESHOLD))
+    with warnings.catch_warnings():
+        # The tier-1 filter turns first-party DeprecationWarnings into
+        # errors; the warning fires before any M-sized work happens.
+        warnings.simplefilter("error", DeprecationWarning)
+        with pytest.raises(DeprecationWarning, match="PopulationSpec"):
+            spec.build()
+
+
+def test_registered_sampled_spec_runs():
+    spec = experiment.get("mnist_sampled")
+    K = spec.cohort_spec().K
+    sim = spec.build()
+    st = sim.init(0)
+    for leaf in jax.tree.leaves(st.params_C):
+        assert leaf.shape[0] == K
+    _, res = sim.run(st, max_rounds=2, eval_every=2)
+    assert len(res.history) == 2
+    assert sim.trace_count == 1
+
+
+def test_population_scale_smoke():
+    """The headline acceptance shape: M far beyond n_train (virtual
+    shard partition, no M-long host lists) with O(K) device state."""
+    spec = ExperimentSpec(
+        fed=FedConfig(batch_size=4, theta=0.62, lr=0.05),
+        model="mnist_cnn_tiny", dataset="mnist", n_train=96, n_test=16,
+        scenario="dropout",
+        population=PopulationSpec(M=100_000, cohort=CohortSpec(K=8)))
+    sim = spec.build()
+    st = sim.init(0)
+    for leaf in jax.tree.leaves(st.params_C):
+        assert leaf.shape[0] == 8
+    _, res = sim.run(st, max_rounds=2, eval_every=2)
+    assert len(res.history) == 2
+    for rec in res.history:
+        assert rec.n_participants is None or rec.n_participants <= 8
+
+
+# -- data pool ----------------------------------------------------------------
+
+def test_client_pool_matches_dense_iterators():
+    """Pool-backed clients replay the exact dense per-client batch
+    streams (same seeds, same RNG consumption)."""
+    from repro.data.synthetic import make_mnist_like
+    data = make_mnist_like(64, seed=0)
+    parts = [np.arange(m * 16, (m + 1) * 16) for m in range(4)]
+    dense = [BatchIterator(data, p, 8, seed=7 + m)
+             for m, p in enumerate(parts)]
+    pool = ClientDataPool.from_parts(data, parts, 8, seed=7)
+    for m in range(4):
+        it = pool.client(m)
+        for _ in range(3):
+            a, b = dense[m].next_batch(), it.next_batch()
+            np.testing.assert_array_equal(a["x"], b["x"])
+            np.testing.assert_array_equal(a["y"], b["y"])
+
+
+def test_client_pool_state_is_O_touched():
+    from repro.data.synthetic import make_mnist_like
+    data = make_mnist_like(64, seed=0)
+    pool = ClientDataPool(data, lambda m: np.arange(16),
+                          np.full(1000, 16), 8, seed=0)
+    pool.client(3).next_batch()
+    pool.client(998).next_batch()
+    assert set(pool.state()["clients"].keys()) == {3, 998}
+
+
+# -- DEFL plan ----------------------------------------------------------------
+
+def test_make_plan_cohort_conditional_M_eff():
+    fed = FedConfig(n_devices=1000, epsilon=0.01, nu=2.0)
+    pop = delay.draw_population(16, ComputeConfig(), WirelessConfig(), 0, 0.5)
+    dense = defl.make_plan(fed, pop, 8e6)
+    cohort = defl.make_plan(fed, pop, 8e6, cohort_size=10)
+    assert dense.problem.M == 1000
+    assert cohort.problem.M == 10
+    # Population stats (straggler T_cm, bottleneck g) are unchanged —
+    # any of the M clients can be drawn.
+    assert cohort.T_cm == dense.T_cm
+    # Fewer averaged updates per round -> more predicted rounds.
+    assert cohort.H_pred >= dense.H_pred
+
+
+def test_deadline_plan_cohort_conditional_M_eff():
+    fed = FedConfig(n_devices=1000, epsilon=0.01, nu=2.0)
+    pop = delay.draw_population(16, ComputeConfig(), WirelessConfig(), 0, 0.5)
+    dense = defl.deadline_plan(fed, pop, 8e6, deadline=1e4)
+    cohort = defl.deadline_plan(fed, pop, 8e6, deadline=1e4, cohort_size=10)
+    assert cohort.problem.M <= 10 < dense.problem.M
+
+
+# -- study integration --------------------------------------------------------
+
+def test_study_sampled_arm_groups_and_table():
+    fed = FedConfig(batch_size=8, theta=0.62, lr=0.05)
+    base = dict(model="mnist_cnn_tiny", dataset="mnist", n_train=48,
+                n_test=16, scenario="dropout")
+    pop = PopulationSpec(M=12, cohort=CohortSpec(K=4))
+    arms = [
+        ("sA", ExperimentSpec(fed=fed, population=pop, **base)),
+        ("sB", ExperimentSpec(fed=dataclasses.replace(fed, batch_size=4),
+                              population=pop, **base)),
+        ("dense", ExperimentSpec(
+            fed=dataclasses.replace(fed, n_devices=4), **base)),
+    ]
+    res = Study(arms=arms, seeds=(0,), max_rounds=3, eval_every=3).run()
+    # Sampled arms fuse into one vmapped group; dense shapes differ.
+    assert ("sA", "sB") in res.groups
+    header, rows = res.table()
+    cols = header.split(",")
+    assert "K" in cols
+    k_idx = cols.index("K")
+    by_label = {r[0]: r for r in rows}
+    assert by_label["sA"][k_idx] == 4 and by_label["dense"][k_idx] == ""
+    assert res.to_json()["arms"]["sA"]["K"] == 4
+    # Grouped sampled member == solo sampled run, bit for bit.
+    sim = arms[0][1].build()
+    _, solo = sim.run(sim.init(0), max_rounds=3, eval_every=3)
+    _assert_bit_identical(res["sA"][0], solo)
+
+
+# -- misuse errors ------------------------------------------------------------
+
+def test_sampled_requires_stateless_local_opt():
+    with pytest.raises(ValueError, match="stateless"):
+        d, M = 16, 6
+        fed = FedConfig(n_devices=M, batch_size=2, lr=0.05)
+        pop = delay.draw_population(M, ComputeConfig(), WirelessConfig(),
+                                    0, 0.0)
+        iters = [_TargetIterator(np.zeros(d), 2) for _ in range(M)]
+        Simulator(_quad_loss, {"w": jnp.zeros(d)}, iters,
+                  np.full(M, 10), fed, sgd(fed.lr, momentum=0.9), pop,
+                  backend="scan", cohort=3)
+
+
+def test_sampled_rejects_loop_backend():
+    with pytest.raises(ValueError):
+        _quad_sim("loop", "dropout", M=6, K=3)
+
+
+def test_sampled_run_round_rejects_predrawn_realization():
+    sim = _quad_sim("batched", "dropout", M=6, K=3)
+    st = sim.init()
+    stream = sim._materialize(st)[1]
+    real = stream.next_round()
+    with pytest.raises(ValueError):
+        sim.run_round(st, real=real)
