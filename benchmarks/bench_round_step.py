@@ -37,6 +37,7 @@ import jax  # noqa: E402
 from repro.configs.base import FedConfig  # noqa: E402
 from repro.federated.experiment import (CohortSpec,  # noqa: E402
                                         PopulationSpec)
+from repro.federated.faults import FaultModel  # noqa: E402
 
 from benchmarks.common import make_cnn_sim, make_cnn_spec  # noqa: E402
 
@@ -262,6 +263,52 @@ def _bench_sampled(reps: int) -> dict:
     return out
 
 
+def _chunk_hlo(faults) -> str:
+    """Lowered HLO text of the compiled scan-chunk graph for a tiny CNN
+    sim at the given FaultModel — the graph-byte probe behind the
+    inactive-quorum gate. Lowering is deterministic, so equal configs
+    produce equal text."""
+    fed = FedConfig(n_devices=4, **BENCH_FED)
+    spec = make_cnn_spec("mnist", fed, "hlo-probe", n_train=48, n_test=16,
+                         seed=0, backend="scan", with_eval=False,
+                         cnn_cfg="mnist_cnn_tiny", scenario="dropout")
+    sim = spec.replace(faults=faults).build()
+    st = sim.init()
+    iters, stream = sim._materialize(st)
+    xs, _ = sim._chunk_inputs(iters, stream, 2, 2)
+    weights, t_cp = sim._chunk_args()
+    args = [st.params_C, st.opt_C, st.key, weights, t_cp, sim._data_dev, xs]
+    if sim._envelope:
+        args.append(sim._trivial_env())
+    return sim._chunk_fn.lower(*args).as_text()
+
+
+def check_quorum_graph() -> None:
+    """Exact graph-byte gate (never retried — no timing in it): a sim
+    carrying an inactive FaultModel must lower to HLO byte-identical to
+    the no-faults sim (zero ops paid for the resilience knobs when they
+    are off), and setting `min_quorum` on an otherwise-identical active
+    FaultModel must CHANGE the graph (the quorum gate really compiles in
+    — proves the identity probe is not vacuous). Raises SystemExit(1) on
+    violation."""
+    plain = _chunk_hlo(None)
+    inactive = _chunk_hlo(FaultModel())
+    if plain != inactive:
+        print("FAIL: an inactive FaultModel changes the compiled chunk "
+              "graph (must be byte-identical to faults=None)")
+        raise SystemExit(1)
+    print("check: inactive FaultModel lowers byte-identical to faults=None "
+          f"({len(plain)} HLO bytes)")
+    base = _chunk_hlo(FaultModel(deadline_factor=2.0))
+    quorum = _chunk_hlo(FaultModel(deadline_factor=2.0, min_quorum=2))
+    if base == quorum:
+        print("FAIL: min_quorum=2 lowers the SAME graph as min_quorum=None "
+              "— the quorum gate is not being compiled in")
+        raise SystemExit(1)
+    print("check: min_quorum compiles quorum ops only when set "
+          f"({len(base)} vs {len(quorum)} HLO bytes)")
+
+
 def run(quick: bool = False, smoke: bool = False, out: str = "",
         speedups: Optional[dict] = None, scan_speedups: Optional[dict] = None,
         fleet_speedups: Optional[dict] = None,
@@ -412,7 +459,11 @@ def main(argv=None):
                          f"(M={SAMPLED_M}, K={SAMPLED_K}) engine falls "
                          f"below {SAMPLED_GATE}x the dense K-client "
                          "baseline or its device state stops byte-"
-                         "matching the dense-K trio (O(K), not O(M))")
+                         "matching the dense-K trio (O(K), not O(M)); "
+                         "also asserts — exactly, never retried — that "
+                         "an inactive FaultModel lowers to HLO byte-"
+                         "identical to faults=None and that min_quorum "
+                         "compiles quorum ops only when set")
     ap.add_argument("--out", default="",
                     help="also write the rows JSON here (CI artifact)")
     args = ap.parse_args(argv)
@@ -428,6 +479,8 @@ def main(argv=None):
     for r in rows:
         print(",".join(map(str, r)))
     if args.check:
+        # Exact graph gate first: no timing, no retry.
+        check_quorum_graph()
         # Timing gates on shared runners are noisy: a failing comparison
         # is re-measured ONCE (only the failing M / fleet config, not the
         # whole sweep) before it fails the run — a genuine regression

@@ -17,6 +17,8 @@ time-to-target semantics (each member stops when it reaches 90%; the band
 is mean +- std over realization seeds)."""
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 from benchmarks.common import make_cnn_spec
@@ -64,12 +66,15 @@ def study_for(dataset: str, scenario: str, seed: int = 0, seeds: int = 1,
 
 
 def run(quick: bool = False, scenario: str = "", seed: int = 0,
-        seeds: int = 1):
+        seeds: int = 1, checkpoint_dir: str = "", resume: bool = True):
     """One row per (scenario, dataset, method) from the grouped study,
     plus the DEFL-vs-FedAvg reduction row per comparison. With seeds > 1
     every arm's column becomes a mean +- std confidence band over the
     (arm x seed) fleet; time-to-target is each member's own early-stop
-    time on both paths."""
+    time on both paths. `checkpoint_dir` turns on per-(arm, seed)
+    crash-safe autosave/resume (Study.run) under one subdirectory per
+    (scenario, dataset) comparison — a killed sweep picks up where it
+    left off."""
     rows = []
     payload = {}
     scens = (scenario,) if scenario else SCENARIO_NAMES
@@ -77,7 +82,11 @@ def run(quick: bool = False, scenario: str = "", seed: int = 0,
     for scen in scens:
         for ds in datasets:
             res = study_for(ds, scen, seed=seed, seeds=seeds,
-                            quick=quick).run()
+                            quick=quick).run(
+                checkpoint_dir=(os.path.join(checkpoint_dir,
+                                             f"{scen}_{ds}")
+                                if checkpoint_dir else None),
+                resume=resume)
             payload[f"{scen}/{ds}"] = res.to_json()
             multi = seeds > 1
             for label in res.labels:

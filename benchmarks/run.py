@@ -70,6 +70,15 @@ def main(argv=None) -> None:
                     help="write a machine-readable JSON document of every "
                          "benchmark that ran (StudyResult payloads for "
                          "study-backed figures)")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="crash-safe per-(arm, seed) autosave for study-"
+                         "backed benchmarks (Study.run(checkpoint_dir=...)): "
+                         "a killed run resumes from the saved members "
+                         "bit-identically")
+    ap.add_argument("--no-resume", action="store_true",
+                    help="with --checkpoint-dir: ignore existing member "
+                         "checkpoints and re-run everything (files are "
+                         "overwritten)")
     args = ap.parse_args(argv)
     names = args.only.split(",") if args.only else list(BENCHES)
     payloads = {}
@@ -88,6 +97,13 @@ def main(argv=None) -> None:
             else:
                 print(f"# === {name}: not seed-aware; running as-is ===",
                       flush=True)
+        if args.checkpoint_dir:
+            if "checkpoint_dir" in inspect.signature(fn).parameters:
+                kw["checkpoint_dir"] = args.checkpoint_dir
+                kw["resume"] = not args.no_resume
+            else:
+                print(f"# === {name}: not checkpoint-aware; running "
+                      "as-is ===", flush=True)
         t0 = time.time()
         out = fn(**kw)
         header, rows = out[0], out[1]

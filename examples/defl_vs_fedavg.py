@@ -3,7 +3,8 @@ paper's CNN task with real training + simulated delay accounting —
 reproduces Fig. 2 qualitatively, per edge scenario.
 
   PYTHONPATH=src python examples/defl_vs_fedavg.py [--quick] \
-      [--scenario stragglers] [--seeds 8] [--json PATH]
+      [--scenario stragglers] [--seeds 8] [--json PATH] \
+      [--checkpoint-dir DIR] [--no-resume]
 
 Each (scenario, dataset) comparison is one declarative Study
 (benchmarks/fig2_defl_vs_fedavg.study_for): the DEFL/FedAvg/Rand arms
@@ -30,9 +31,18 @@ def main():
     ap.add_argument("--seeds", type=int, default=1)
     ap.add_argument("--json", default="",
                     help="write the StudyResult JSON payloads here")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="crash-safe per-(arm, seed) autosave: a killed "
+                         "sweep resumes from the saved members "
+                         "bit-identically")
+    ap.add_argument("--no-resume", action="store_true",
+                    help="with --checkpoint-dir: ignore existing member "
+                         "checkpoints and re-run everything")
     args = ap.parse_args()
     header, rows, payload = run(quick=args.quick, scenario=args.scenario,
-                                seeds=args.seeds)
+                                seeds=args.seeds,
+                                checkpoint_dir=args.checkpoint_dir,
+                                resume=not args.no_resume)
     print(header)
     for r in rows:
         print(",".join(map(str, r)))

@@ -96,6 +96,7 @@ def deadline_plan(
     participation: float = 1.0,
     b_max: float = 64.0,
     cohort_size: Optional[int] = None,
+    spare: int = 0,
 ) -> DEFLPlan:
     """Deadline-aware variant of Algorithm 1: re-derive (b, V) when the
     server truncates every round at `deadline` seconds (faults.FaultModel).
@@ -122,7 +123,17 @@ def deadline_plan(
     K-client cohort (feasibility is still measured over the FULL
     population: the feasible fraction of M is the expected feasible
     fraction of a uniformly drawn cohort).
+    spare: over-provisioned cohorts (CohortSpec.spare): each round draws
+    K + spare candidates and keeps the K deadline-feasible-fastest, so
+    the expected feasible participation rises from K * feas to
+    min(K, (K + spare) * feas) — the Eq. 12 effective M sees the
+    correction. spare requires cohort_size; spare=0 reduces exactly to
+    the plain cohort formula.
     """
+    if spare and cohort_size is None:
+        raise ValueError("spare over-provisioning requires cohort_size=K")
+    if spare < 0:
+        raise ValueError(f"spare must be >= 0, got {spare}")
     wireless = wireless or WirelessConfig()
     if fed.compress_updates:
         update_bits = update_bits / 4.0
@@ -144,8 +155,16 @@ def deadline_plan(
             feas = finish <= deadline
             if not feas.any():
                 continue
-            M_eff = max(1, int(round(
-                M_base * participation * feas.mean())))
+            if cohort_size is None or spare == 0:
+                M_eff = max(1, int(round(
+                    M_base * participation * feas.mean())))
+            else:
+                # Over-provisioning: K + spare candidates, keep the K
+                # feasible-fastest — expected feasible participation
+                # saturates at the cohort size.
+                exp_feas = (cohort_size + spare) * feas.mean()
+                M_eff = max(1, int(round(
+                    min(float(M_base), exp_feas) * participation)))
             H = kkt.communication_rounds_alpha(
                 b, alpha, M_eff, fed.epsilon, fed.nu, fed.c)
             T = min(deadline, T_cm + fed.nu * alpha * g * b)

@@ -129,6 +129,18 @@ def effective_uplink_times(
 # ---------------------------------------------------------------------------
 
 
+def finish_times(t_cp, t_cm, V: int) -> np.ndarray:
+    """Per-client round finish time V * T_cp^m + T_cm^m (f64, Eqs. 4+6).
+
+    The per-client form of Eq. 8's straggler argument: when a round
+    deadline is in force, `finish <= deadline` is the feasibility mask
+    (simulation's deadline cut), and sorting by it picks the
+    deadline-feasible-fastest candidates of an over-provisioned cohort
+    (CohortSpec.spare)."""
+    return (np.asarray(t_cp, np.float64) * V
+            + np.asarray(t_cm, np.float64))
+
+
 def round_time(T_cm: float, T_cp: float, V: int, deadline=None) -> float:
     """Eq. 8: T = T_cm + V * T_cp — truncated at the server's round
     deadline when one is set (deadline-bounded rounds: the server stops

@@ -80,10 +80,17 @@ class CohortSpec:
     sampler  'uniform' (each round's cohort uniform without replacement)
              | 'weighted' (D_m-weighted Gumbel top-K without
              replacement: data-rich clients are drawn more often).
+    spare    over-provisioning: each round draws K + spare candidates
+             from the same cohort RNG stream and keeps the K deadline-
+             feasible-fastest (ties by client index) — resilience
+             against deadline-cut stragglers without growing the
+             device-resident cohort. spare=0 (default) is bit-identical
+             to today's draw.
     """
 
     K: int
     sampler: str = "uniform"
+    spare: int = 0
 
     def __post_init__(self):
         if self.K < 1:
@@ -92,6 +99,9 @@ class CohortSpec:
             raise ValueError(
                 f"unknown CohortSpec.sampler {self.sampler!r}; expected "
                 "'uniform' or 'weighted'")
+        if not isinstance(self.spare, int) or self.spare < 0:
+            raise ValueError(
+                f"CohortSpec.spare must be an int >= 0, got {self.spare!r}")
 
 
 @dataclass(frozen=True)
@@ -117,6 +127,11 @@ class PopulationSpec:
         if self.cohort is not None and self.cohort.K > self.M:
             raise ValueError(
                 f"cohort K={self.cohort.K} exceeds population M={self.M}")
+        if (self.cohort is not None
+                and self.cohort.K + self.cohort.spare > self.M):
+            raise ValueError(
+                f"cohort K+spare={self.cohort.K + self.cohort.spare} "
+                f"exceeds population M={self.M}")
 
 
 @dataclass(frozen=True)
@@ -258,7 +273,8 @@ class ExperimentSpec:
             return scenarios.plan_for_scenario(
                 fed, self.scenario, bits, cc=self.compute,
                 wc=self.wireless, seed=self.seed, method=self.plan_method,
-                cohort_size=K)
+                cohort_size=K,
+                spare=0 if cohort is None else cohort.spare)
         return defl.make_plan(fed, pop, bits, wireless=self.wireless,
                               method=self.plan_method, cohort_size=K)
 
@@ -406,6 +422,7 @@ class ExperimentSpec:
             envelope_key=envelope_key,
             cohort=None if cohort is None else cohort.K,
             cohort_sampler="uniform" if cohort is None else cohort.sampler,
+            cohort_spare=0 if cohort is None else cohort.spare,
             shard_clients=self.shard_clients)
 
 

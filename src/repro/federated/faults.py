@@ -31,6 +31,15 @@ unboundedly. A `FaultModel` layers the missing production behaviors on a
                      epochs span rounds: the down-counters ride in
                      ScenarioStream.state() so checkpoint/resume
                      continues an epoch bit-identically.
+  quorum gating      a round whose post-dropout/deadline/guard
+                     participation falls below `min_quorum` (an absolute
+                     count, or a fraction of the cohort) is resolved
+                     in-graph by `quorum_policy`: 'reject' makes the
+                     params/opt writes a no-op (the round never happened
+                     to the model) while the Eq. 8 clock still pays the
+                     failed round's wall time plus `redispatch_cost`
+                     seconds of re-dispatch overhead; 'accept' merely
+                     counts the violation (`RoundRecord.rejected`).
   divergence guards  in-graph per-client update sanitation at aggregation
                      (mesh_rounds.build_round_step(guard=...)): non-finite
                      updates/losses are rejected (client dropped that
@@ -78,6 +87,18 @@ class FaultModel:
     divergence_guard  run()-level guard: snapshot state per chunk and
                       raise DivergenceError on a non-finite round loss
                       with participants, instead of a NaN history.
+    min_quorum        quorum gate: the minimum participation a round
+                      needs to count. An int is an absolute client
+                      count; a float in (0, 1] is a fraction of the
+                      cohort (resolved with ceil at Simulator build —
+                      `resolve_quorum`). None = no gate.
+    quorum_policy     what a below-quorum round does: 'reject' no-ops
+                      the params/opt update in-graph (clock still pays
+                      the round plus `redispatch_cost`); 'accept' keeps
+                      the update and only counts the violation.
+    redispatch_cost   extra simulated seconds a rejected round costs on
+                      top of its wall time (server re-dispatch overhead;
+                      'reject' policy only).
     """
 
     deadline: Optional[float] = None
@@ -90,6 +111,9 @@ class FaultModel:
     reject_nonfinite: bool = True
     max_update_norm: Optional[float] = None
     divergence_guard: bool = True
+    min_quorum: Optional[float] = None  # int count | float fraction
+    quorum_policy: str = "reject"
+    redispatch_cost: float = 0.0
 
     @property
     def active(self) -> bool:
@@ -98,7 +122,8 @@ class FaultModel:
                     or self.deadline_factor is not None
                     or self.max_retries > 0
                     or self.crash_rate > 0
-                    or self.max_update_norm is not None)
+                    or self.max_update_norm is not None
+                    or self.min_quorum is not None)
 
     @property
     def n_attempts(self) -> int:
@@ -132,6 +157,27 @@ class FaultModel:
         if self.max_update_norm is not None and self.max_update_norm <= 0:
             raise ValueError(
                 f"max_update_norm must be > 0, got {self.max_update_norm}")
+        if self.min_quorum is not None:
+            q = self.min_quorum
+            if isinstance(q, bool) or not isinstance(
+                    q, (int, float, np.integer, np.floating)):
+                raise ValueError(
+                    f"min_quorum must be an int count or a float fraction, "
+                    f"got {q!r}")
+            if isinstance(q, (int, np.integer)):
+                if q < 1:
+                    raise ValueError(
+                        f"min_quorum as a count must be >= 1, got {q}")
+            elif not 0.0 < q <= 1.0:
+                raise ValueError(
+                    f"min_quorum as a fraction must be in (0, 1], got {q}")
+        if self.quorum_policy not in ("reject", "accept"):
+            raise ValueError(
+                f"unknown quorum_policy {self.quorum_policy!r}; "
+                "expected 'reject' or 'accept'")
+        if self.redispatch_cost < 0:
+            raise ValueError(
+                f"redispatch_cost must be >= 0, got {self.redispatch_cost}")
 
     def resolve_deadline(self, nominal_round_time: float) -> Optional[float]:
         """The deadline in seconds, resolving `deadline_factor` against
@@ -142,6 +188,23 @@ class FaultModel:
         if self.deadline_factor is not None:
             return float(self.deadline_factor * nominal_round_time)
         return None
+
+    def resolve_quorum(self, cohort_size: int) -> Optional[int]:
+        """The quorum as an absolute client count for a `cohort_size`-
+        client round (K when sampled, M dense). Fractions resolve with
+        ceil, floored at 1; None when no quorum is configured."""
+        if self.min_quorum is None:
+            return None
+        q = self.min_quorum
+        if isinstance(q, (int, np.integer)):
+            q_abs = int(q)
+        else:
+            q_abs = max(1, int(np.ceil(float(q) * cohort_size)))
+        if q_abs > cohort_size:
+            raise ValueError(
+                f"min_quorum {q!r} resolves to {q_abs} clients but rounds "
+                f"have only {cohort_size} — no round could ever pass")
+        return q_abs
 
     def guard_spec(self) -> tuple:
         """Static (max_norm, reject_nonfinite) pair compiled into the
@@ -177,22 +240,64 @@ class FaultModel:
         return dataclasses.replace(self, **kw)
 
 
+@dataclass(frozen=True)
+class RecoveryPolicy:
+    """Auto-recovery from divergence, consumed by
+    `Simulator.run(recovery=...)`: on a `DivergenceError` the run rewinds
+    to the carried last-good SimState, deterministically shrinks the
+    learning rate by `lr_backoff` (cumulative across restarts), optionally
+    tightens the norm guard by `tighten_guard` (multiplies the model's
+    `max_update_norm`; a no-op when none is set), and re-runs — at most
+    `max_restarts` times before the error propagates. Every restart is
+    recorded in `SimResult.restarts` (attempt, round, lr scale, guard,
+    message) so recovered runs stay auditable."""
+
+    max_restarts: int = 3
+    lr_backoff: float = 0.5
+    tighten_guard: Optional[float] = None
+
+    def validate(self) -> None:
+        if self.max_restarts < 1:
+            raise ValueError(
+                f"max_restarts must be >= 1, got {self.max_restarts}")
+        if not 0.0 < self.lr_backoff <= 1.0:
+            raise ValueError(
+                f"lr_backoff must be in (0, 1], got {self.lr_backoff}")
+        if self.tighten_guard is not None and not (
+                0.0 < self.tighten_guard <= 1.0):
+            raise ValueError(
+                f"tighten_guard must be in (0, 1], got {self.tighten_guard}")
+
+
 class DivergenceError(RuntimeError):
     """Raised by Simulator.run() (divergence_guard on) when a round's
     train loss goes non-finite with participants — e.g. the guard's
     non-finite rejection was disabled, or the aggregate itself diverged.
 
     Carries enough to recover instead of rerunning from scratch:
-      state    the last-good SimState host snapshot (taken at the chunk /
-               eval boundary BEFORE the offending rounds) — resumable via
-               Simulator.run(state, ...)
-      history  RoundRecords up to and including the offending round
-      round    global round number where the loss went non-finite
+      state        the last-good SimState host snapshot (taken at the
+                   chunk / eval boundary BEFORE the offending rounds) —
+                   resumable via Simulator.run(state, ...)
+      history      RoundRecords up to and including the offending round
+      round        global round number where the loss went non-finite
+      faults       the run's FaultModel (None on guard-less sims)
+      guard        the compiled (max_norm, reject_nonfinite) guard spec
+                   in effect, or None
+      finite_mask  (C,) bool per-client finite-loss mask of the offending
+                   round (which clients' local losses were still finite) —
+                   distinguishes "one client NaN'd" from "global blow-up"
+                   without a re-run. None when the backend didn't surface
+                   it (loop reference).
     """
 
     def __init__(self, message: str, state=None, history=None,
-                 round: int = -1):
+                 round: int = -1, faults=None, guard=None,
+                 finite_mask=None):
         super().__init__(message)
         self.state = state
         self.history = list(history) if history is not None else []
         self.round = int(round)
+        self.faults = faults
+        self.guard = guard
+        self.finite_mask = (None if finite_mask is None
+                            else np.asarray(finite_mask, bool))

@@ -500,6 +500,7 @@ def build_round_chunk(
     guard=None,
     faults: bool = False,
     sampled: bool = False,
+    quorum: str = None,
     mesh=None,
     param_specs_tree=None,
     client_axes=None,
@@ -563,7 +564,21 @@ def build_round_chunk(
                    participants x bits). Deadline/retry exclusions are
                    drawn host-side into the mask (simulation._fault_round)
                    — the graph only consumes their traced results, so
-                   fault rounds neither retrace nor sync.
+                   fault rounds neither retrace nor sync. ys additionally
+                   stacks 'finite' (R, C) — each round's per-client
+                   finite-loss mask, the DivergenceError diagnostic.
+
+    quorum (static; None | 'reject' | 'accept') compiles the quorum gate
+    in-graph: xs gains a traced (R,) leaf 'quorum_min' (the round's
+    minimum participant count) and ys a per-round 'rejected' flag
+    (post-guard participation < quorum_min). Under 'reject' the xs also
+    carry 'q_penalty' (R,) re-dispatch seconds: a rejected round's
+    params/opt writes are masked out exactly like an invalid padded round
+    (the model never sees it) while the PRNG key still advances (the
+    compression keys were drawn — the per-round backends' stream does the
+    same), and the in-graph 'T_round' gains the penalty. 'accept' only
+    raises the flag. quorum=None builds a byte-identical graph to
+    pre-quorum code — no extra ops, no extra xs leaves.
 
     sampled=True builds the K-cohort form of the chunk (sampled
     participation: n_clients = K lanes, each round occupied by a freshly
@@ -584,6 +599,12 @@ def build_round_chunk(
     """
     from repro.federated import compression
 
+    if quorum not in (None, "reject", "accept"):
+        raise ValueError(
+            f"quorum must be None, 'reject' or 'accept', got {quorum!r}")
+    if quorum is not None and not scenario:
+        raise ValueError("quorum gating needs the scenario path "
+                         "(participation masks) — scenario=True")
     step = build_round_step(loss_fn, opt, V, aggregation=aggregation,
                             mesh=mesh, param_specs_tree=param_specs_tree,
                             client_axes=client_axes,
@@ -624,13 +645,32 @@ def build_round_chunk(
                 T_round = m["T_round"]
                 if faults:
                     T_round = jnp.minimum(x["t_cap"], T_round)
+                rejected = None
+                if quorum is not None:
+                    # Quorum gate on the POST-guard participation: below
+                    # quorum raises the flag; 'reject' additionally pays
+                    # the re-dispatch penalty in the in-graph clock (the
+                    # host f64 twin mirrors it) and no-ops the state
+                    # writes below.
+                    rejected = n < x["quorum_min"]
+                    if quorum == "reject":
+                        T_round = T_round + jnp.where(
+                            rejected, x["q_penalty"], 0.0)
                 ys = {"loss": loss, "n_participants": n,
                       "T_cm": m["T_cm"], "T_cp": m["T_cp"],
                       "T_round": T_round}
+                if rejected is not None:
+                    ys["rejected"] = rejected
+                if faults:
+                    # Per-client finite-loss mask: the DivergenceError
+                    # diagnostic (which clients were still finite on the
+                    # offending round).
+                    ys["finite"] = jnp.isfinite(m["per_client_loss"])
                 if bits is not None:
                     ys["uplink_bits"] = (x["bits_mult"] * bits if faults
                                          else n * bits)
             else:
+                rejected = None
                 new_p, new_s, m = step(
                     params, opt_state, batches, w_r, keys=keys_C,
                     env=env)
@@ -638,7 +678,15 @@ def build_round_chunk(
                 if bits is not None:
                     ys["uplink_bits"] = n_clients * bits
             valid = x["valid"]
-            keep = lambda nw, old: jnp.where(valid, nw, old.astype(nw.dtype))  # noqa: E731
+            ok = valid
+            if quorum == "reject":
+                # A quorum-rejected round is the padded-round trick
+                # applied in-graph: params/opt keep their pre-round
+                # values. The PRNG key still advances (its compression
+                # keys were drawn — the per-round backends consume the
+                # stream identically), unlike a padded round's.
+                ok = jnp.logical_and(valid, jnp.logical_not(rejected))
+            keep = lambda nw, old: jnp.where(ok, nw, old.astype(nw.dtype))  # noqa: E731
             new_p = jax.tree.map(keep, new_p, params)
             new_s = jax.tree.map(keep, new_s, opt_state)
             new_key = jnp.where(valid, new_key, k)

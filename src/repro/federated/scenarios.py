@@ -183,7 +183,15 @@ class ScenarioStream:
         is Gumbel top-K over the configured positive weights (exact
         weighted sampling without replacement). Sorting makes cohort
         lanes ascend in client id, so at K=M the lane order is exactly
-        the dense client order."""
+        the dense client order.
+
+        Over-provisioned cohorts (CohortSpec.spare) reuse this draw
+        unchanged with cohort_size = K + spare: one random(M) vector is
+        consumed regardless of K, so drawing K + spare candidates
+        advances the cohort RNG exactly as drawing K would — spare=0 is
+        structurally bit-identical to today. The feasible-fastest
+        down-select to K happens in the Simulator, after fault
+        realizations resolve M-wide."""
         M = self.pop.n
         K = M if self.cohort_size is None else self.cohort_size
         if K == M:
@@ -489,6 +497,7 @@ def plan_for_scenario(
     seed: int = 0,
     method: str = "closed_form",
     cohort_size: Optional[int] = None,
+    spare: int = 0,
 ) -> defl.DEFLPlan:
     """Solve Alg. 1 against the scenario's realized population.
 
@@ -520,5 +529,5 @@ def plan_for_scenario(
         plan = defl.deadline_plan(
             fed, pop, update_bits, D, wireless=wc,
             participation=scenario.expected_participation,
-            cohort_size=cohort_size)
+            cohort_size=cohort_size, spare=spare)
     return plan

@@ -81,9 +81,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import pickle
+import tempfile
 import warnings
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence
 
 import jax
@@ -93,7 +95,7 @@ import numpy as np
 from repro.configs.base import FedConfig, WirelessConfig
 from repro.core import delay
 from repro.federated import compression, mesh_rounds, scenarios
-from repro.federated.faults import DivergenceError, FaultModel
+from repro.federated.faults import DivergenceError, FaultModel, RecoveryPolicy
 from repro.federated.client import (
     client_round,
     make_local_update,
@@ -124,6 +126,11 @@ class RoundRecord:
     # Total uplink bits the round actually carried (participants x bits
     # per update, exact compression.compressed_bits accounting).
     uplink_bits: Optional[float] = None
+    # Quorum gate (faults.FaultModel.min_quorum): True when this round's
+    # participation fell below quorum. Under quorum_policy='reject' the
+    # round's params/opt update was a no-op and sim_time additionally
+    # paid the re-dispatch cost. None on quorum-less runs.
+    rejected: Optional[bool] = None
 
 
 @dataclass
@@ -132,6 +139,11 @@ class SimResult:
     params: Any
     label: str
     fed: FedConfig
+    # Auto-recovery audit trail (Simulator.run(recovery=...)): one dict
+    # per restart — attempt, offending/resume rounds, the cumulative lr
+    # scale and guard norm applied, and the error message. Empty on runs
+    # that never diverged.
+    restarts: List[dict] = field(default_factory=list)
 
     @property
     def total_time(self) -> float:
@@ -140,6 +152,11 @@ class SimResult:
     @property
     def rounds(self) -> int:
         return len(self.history)
+
+    @property
+    def rounds_rejected(self) -> int:
+        """Rounds the quorum gate rejected (0 on quorum-less runs)."""
+        return sum(1 for r in self.history if r.rejected)
 
     def time_to_accuracy(self, acc: float) -> Optional[float]:
         for r in self.history:
@@ -244,18 +261,42 @@ def _state_signature(state: SimState) -> tuple:
     return (treedef, leaves)
 
 
+def _atomic_pickle(path: str, payload: Any) -> None:
+    """Crash-safe pickle write: serialize into a temp file in the
+    TARGET's directory (os.replace must not cross filesystems), fsync,
+    then atomically rename into place. A kill at any instant leaves
+    either the previous file or none — never a torn pickle that would
+    surface as a confusing UnpicklingError instead of the versioned-
+    envelope ValueError."""
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(
+        dir=d, prefix=os.path.basename(path) + ".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            pickle.dump(payload, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
 def save_state(path: str, state: SimState) -> None:
     """Checkpoint a SimState: device leaves are fetched with
     `jax.device_get` and the whole value (host stream/iterator snapshots
     included) is serialized under a versioned envelope carrying the
-    state's shape signature. `load_state` + `Simulator.run` continues the
-    run bit-identically (tests/test_checkpoint_resume.py)."""
+    state's shape signature, written crash-safely (temp file + fsync +
+    atomic rename — `_atomic_pickle`). `load_state` + `Simulator.run`
+    continues the run bit-identically (tests/test_checkpoint_resume.py)."""
     host = jax.device_get(state)
     payload = {"__repro_simstate__": _STATE_VERSION,
                "signature": _state_signature(host),
                "state": host}
-    with open(path, "wb") as f:
-        pickle.dump(payload, f)
+    _atomic_pickle(path, payload)
 
 
 def load_state(path: str, like: Optional[SimState] = None) -> SimState:
@@ -357,6 +398,20 @@ def _validate_run_args(max_rounds: int, eval_every: int) -> None:
             f"eval_every must be an int >= 1, got {eval_every!r}")
 
 
+def _scaled_optimizer(opt: Optimizer, scale: float) -> Optimizer:
+    """`opt` with every update scaled by `scale` — exact learning-rate
+    backoff for SGD-family optimizers (updates are linear in lr), used by
+    the recovery path (`RecoveryPolicy.lr_backoff`). Deterministic: the
+    scale is a compiled constant of the restarted run's graphs."""
+    s = jnp.float32(scale)
+
+    def update(grads, state, params=None):
+        updates, state = opt.update(grads, state, params)
+        return jax.tree.map(lambda u: u * s, updates), state
+
+    return Optimizer(init=opt.init, update=update)
+
+
 # ---------------------------------------------------------------------------
 # Simulator: the pure functional core
 # ---------------------------------------------------------------------------
@@ -395,6 +450,7 @@ class Simulator:
         faults: Optional[FaultModel] = None,  # fault/recovery overlay
         cohort: Optional[int] = None,  # K-client sampled participation
         cohort_sampler: str = "uniform",  # 'uniform' | 'weighted' (by D_m)
+        cohort_spare: int = 0,  # over-provisioned candidates per round
         shard_clients: bool = False,  # shard the client axis over devices
     ):
         """eval_batch_fn evaluates a whole stacked member axis at once —
@@ -432,6 +488,19 @@ class Simulator:
         JAX devices (scan backend): FedAvg aggregation becomes a
         shard_map psum (mesh_rounds._psum_shardmap_sync). Prototype on
         CPU via XLA_FLAGS=--xla_force_host_platform_device_count=N."""
+        # Original constructor arguments, captured before any overlay/
+        # promotion below mutates the derived views: the recovery path
+        # (_recovery_variant) rebuilds a near-identical Simulator from
+        # these with only the optimizer scale / guard norm changed.
+        self._ctor = dict(
+            loss_fn=loss_fn, init_params=init_params, data=data,
+            data_sizes=data_sizes, fed=fed, opt=opt, pop=pop,
+            wireless=wireless, eval_fn=eval_fn, label=label,
+            backend=backend, impl=impl, scenario=scenario,
+            eval_batch_fn=eval_batch_fn, masked_loss_fn=masked_loss_fn,
+            envelope_key=envelope_key, faults=faults, cohort=cohort,
+            cohort_sampler=cohort_sampler, cohort_spare=cohort_spare,
+            shard_clients=shard_clients)
         if backend not in ("scan", "batched", "loop"):
             raise ValueError(f"unknown backend {backend!r}")
         if cohort_sampler not in ("uniform", "weighted"):
@@ -448,6 +517,22 @@ class Simulator:
                     f"cohort must be in [1, {pop.n}], got {cohort}")
         self._cohort = None if cohort is None else int(cohort)
         self._sampled = self._cohort is not None
+        if not isinstance(cohort_spare, (int, np.integer)) or cohort_spare < 0:
+            raise ValueError(
+                f"cohort_spare must be an int >= 0, got {cohort_spare!r}")
+        if cohort_spare and not self._sampled:
+            raise ValueError(
+                "cohort_spare (over-provisioned cohorts) requires sampled "
+                "participation — pass cohort=K as well")
+        if self._sampled and self._cohort + int(cohort_spare) > pop.n:
+            raise ValueError(
+                f"cohort + cohort_spare ({cohort} + {cohort_spare}) must "
+                f"not exceed the population size {pop.n}")
+        self._spare = int(cohort_spare)
+        # Candidate-draw width: each round draws K + spare candidates and
+        # keeps the K deadline-feasible-fastest (_select_cohorts).
+        self._cohort_draw = (
+            None if self._cohort is None else self._cohort + self._spare)
         self._cohort_weights = (
             np.asarray(np.asarray(data_sizes), np.float64)
             if (self._sampled and cohort_sampler == "weighted") else None)
@@ -483,6 +568,17 @@ class Simulator:
             # A trivial guard (no clipping, no rejection) builds no ops at
             # all — the graph stays byte-identical to the guard-less one.
             self._guard = None if (g[0] == float("inf") and not g[1]) else g
+        # Quorum gate: resolved to an absolute participant count against
+        # the round's cohort size (K when sampled, M dense). None when no
+        # quorum is configured — then NO quorum ops/inputs are built and
+        # the compiled graphs stay byte-identical to a quorum-less sim.
+        self._quorum = self._quorum_policy = None
+        if self._faults is not None:
+            q = self._faults.resolve_quorum(
+                self._cohort if self._sampled else fed.n_devices)
+            if q is not None:
+                self._quorum = q
+                self._quorum_policy = self._faults.quorum_policy
         # Envelope-form graphs: when the masked loss is available, the
         # compiled batched/scan graphs run mesh_rounds' (V, b)-envelope
         # round step at the TRIVIAL envelope (V_env=V, B_env=b, all-ones
@@ -664,7 +760,7 @@ class Simulator:
         stream = None
         if self.scenario is not None:
             stream = self.scenario.stream(
-                self.pop, state.seed, cohort_size=self._cohort,
+                self.pop, state.seed, cohort_size=self._cohort_draw,
                 cohort_weights=self._cohort_weights)
             if state.stream is not None:
                 stream.set_state(state.stream)
@@ -765,6 +861,24 @@ class Simulator:
             self.masked_loss_fn if envelope else self.loss_fn, self.opt, V,
             aggregation=agg, impl=self.impl, envelope=envelope,
             guard=self._guard)
+        q_min, q_policy = self._quorum, self._quorum_policy
+
+        def fault_tail(new_p, new_s, old_p, old_s, key, loss, n, metrics):
+            """Shared fault-path epilogue: the per-lane finite mask (the
+            DivergenceError diagnostic) plus the quorum gate — below
+            quorum under policy 'reject' the params/opt write reverts to
+            the round's inputs (the batched twin of the scan body's
+            ok-gated keep mask; same jnp.where, bit-identical)."""
+            extras = {"finite": jnp.isfinite(metrics["per_client_loss"])}
+            if q_min is not None:
+                rejected = n < jnp.float32(q_min)
+                if q_policy == "reject":
+                    rv = lambda nw, old: jnp.where(  # noqa: E731
+                        rejected, old.astype(nw.dtype), nw)
+                    new_p = jax.tree.map(rv, new_p, old_p)
+                    new_s = jax.tree.map(rv, new_s, old_s)
+                extras["rejected"] = rejected
+            return new_p, new_s, key, loss, n, extras
 
         if self.scenario is None:
             weights = self._weights
@@ -798,7 +912,8 @@ class Simulator:
                         / jnp.where(n > 0, n, 1.0))
                 loss = jnp.where(n > 0, loss, jnp.nan)
                 if fault:
-                    return new_p, new_s, key, loss, n
+                    return fault_tail(new_p, new_s, params_C, opt_C, key,
+                                      loss, n, metrics)
                 return new_p, new_s, key, loss
         else:
             sizes = self._sizes_f32
@@ -826,7 +941,8 @@ class Simulator:
                     # Guard rejections are decided in-graph, so the true
                     # participant count is a device scalar here (synced at
                     # eval boundaries like the train losses).
-                    return new_p, new_s, key, loss, n
+                    return fault_tail(new_p, new_s, params_C, opt_C, key,
+                                      loss, n, metrics)
                 return new_p, new_s, key, loss
 
         # Donating the stacked params/opt/key buffers lets XLA write round
@@ -857,6 +973,7 @@ class Simulator:
             guard=self._guard,
             faults=self._faults is not None,
             sampled=self._sampled,
+            quorum=None if self._quorum is None else self._quorum_policy,
             mesh=self._mesh,
             param_specs_tree=self._param_specs,
             client_axes=("clients",) if self._mesh is not None else None)
@@ -930,25 +1047,85 @@ class Simulator:
             h_att=(None if real.h_att is None
                    else np.asarray(real.h_att)[cohort]))
 
-    def _raise_if_diverged(self, history, start: int, snap) -> int:
+    def _chunk_uplink(self, chunk):
+        """M-wide (mask, t_cm) for a chunk realization: the effective
+        per-client uplink times (retransmission sums on the fault path,
+        single-shot Eq. 6 otherwise) and the aggregation mask after the
+        deadline cut. f64 host twin, vectorized over the round axis —
+        each row bit-identical to the per-round _fault_round resolution.
+        Fault semantics resolve POPULATION-wide even under sampling, so
+        cohort gathers see exactly the rows a dense run would."""
+        mask = np.asarray(chunk.mask, bool)
+        if self._faults is not None:
+            fm = self._faults
+            t_cm = delay.effective_uplink_times(
+                self._update_bits(), self.wireless, self.pop.p,
+                chunk.h_att, chunk.attempts,
+                fm.backoff_base, fm.backoff_factor)
+            if self._deadline is not None:
+                finish = delay.finish_times(
+                    self._t_cp_clients, t_cm, self.fed.local_rounds)
+                mask = mask & (finish <= self._deadline)
+        else:
+            t_cm = delay.per_client_uplink_time(
+                self._update_bits(), self.wireless, self.pop.p, chunk.h)
+        return mask, t_cm
+
+    def _select_cohorts(self, cands: np.ndarray, t_cm: np.ndarray,
+                        ) -> np.ndarray:
+        """Over-provisioned cohort selection: keep the K deadline-
+        feasible-fastest of each round's (K + spare) candidate draw.
+
+        Ranking is by the f64 per-client finish time V*t_cp + t_cm
+        (delay.finish_times) with deadline-infeasible candidates sorted
+        last and ties broken by client index; the kept K are returned
+        sorted ascending (the cohort-index convention draw_cohort
+        establishes). Selection happens AFTER the M-wide fault
+        resolution (t_cm is the effective uplink time) and BEFORE any
+        cohort gather — sampling selects who participates, it never
+        changes what would have happened to them."""
+        K = self._cohort
+        finish_all = delay.finish_times(
+            self._t_cp_clients, t_cm, self.fed.local_rounds)
+        finish = np.take_along_axis(finish_all, cands, axis=1)
+        infeas = (finish > self._deadline if self._deadline is not None
+                  else np.zeros(finish.shape, bool))
+        out = np.empty((cands.shape[0], K), np.int32)
+        for r in range(cands.shape[0]):
+            # lexsort: LAST key is primary — feasible first, then
+            # fastest, ties by client id.
+            order = np.lexsort((cands[r], finish[r], infeas[r]))
+            out[r] = np.sort(cands[r][order[:K]])
+        return out
+
+    def _raise_if_diverged(self, history, start: int, snap,
+                           finites=None) -> int:
         """run()-level divergence guard: a non-finite train loss on a
         round that HAD participants means the aggregate itself is
         poisoned (zero-participation rounds are legitimately NaN and
-        pass). Raises DivergenceError carrying the last-good snapshot;
-        returns the new checked-up-to index otherwise."""
+        pass). Raises DivergenceError carrying the last-good snapshot —
+        plus the offending round's per-lane finite mask (`finites`,
+        aligned with `history`, when the backend collected them) and the
+        FaultModel / guard spec in force, so a diagnosing caller sees
+        WHICH clients went non-finite without re-running. Returns the
+        new checked-up-to index otherwise."""
         for i in range(start, len(history)):
             rec = history[i]
             n_p = rec.n_participants
             if (isinstance(rec.train_loss, float)
                     and not np.isfinite(rec.train_loss)
                     and (n_p is None or n_p > 0)):
+                fin = finites[i] if finites is not None and i < len(finites) else None
                 raise DivergenceError(
                     f"train loss became non-finite ({rec.train_loss}) at "
                     f"round {rec.round} with "
                     f"{'all' if n_p is None else n_p} participating "
                     "clients; .state holds the last-good SimState "
                     "snapshot, .history the records up to the failure",
-                    state=snap, history=history[:i + 1], round=rec.round)
+                    state=snap, history=history[:i + 1], round=rec.round,
+                    faults=self._faults, guard=self._guard,
+                    finite_mask=(None if fin is None
+                                 else jax.device_get(fin)))
         return len(history)
 
     # -- per-round execution ------------------------------------------------
@@ -984,6 +1161,16 @@ class Simulator:
             if t_cm_clients is None:
                 t_cm_clients = t_cm_fault
         if cohort is not None:
+            if self._spare:
+                # Rank the K+spare candidates by effective finish time
+                # (M-wide fault semantics already resolved above).
+                if t_cm_clients is None:
+                    t_cm_clients = delay.per_client_uplink_time(
+                        self._update_bits(), self.wireless, self.pop.p,
+                        real.h)
+                cohort = self._select_cohorts(
+                    np.asarray(cohort)[None],
+                    np.asarray(t_cm_clients, np.float64)[None])[0]
             real = self._gather_real(real, cohort)
             if t_cm_clients is not None:
                 t_cm_clients = np.asarray(t_cm_clients)[cohort]
@@ -1021,11 +1208,11 @@ class Simulator:
         if cohort is not None:
             sizes = jnp.asarray(self._sizes_host[cohort])
             if self._faults is not None:
-                params_C, opt_C, key, loss, n_dev = self._round_fn(
+                params_C, opt_C, key, loss, n_dev, extras = self._round_fn(
                     params_C, opt_C, key, batches, sizes, mask, clock_mask,
                     t_cp, t_cm, env)
                 return params_C, opt_C, key, {
-                    "train_loss": loss, "n_participants": n_dev}
+                    "train_loss": loss, "n_participants": n_dev, **extras}
             params_C, opt_C, key, loss = self._round_fn(
                 params_C, opt_C, key, batches, sizes, mask, clock_mask,
                 t_cp, t_cm, env)
@@ -1035,11 +1222,11 @@ class Simulator:
             # Guard rejections happen in-graph: the participant count is
             # the compiled step's fifth output (a device scalar until the
             # next _sync_history boundary).
-            params_C, opt_C, key, loss, n_dev = self._round_fn(
+            params_C, opt_C, key, loss, n_dev, extras = self._round_fn(
                 params_C, opt_C, key, batches, mask, clock_mask, t_cp,
                 t_cm, env)
             return params_C, opt_C, key, {
-                "train_loss": loss, "n_participants": n_dev}
+                "train_loss": loss, "n_participants": n_dev, **extras}
         params_C, opt_C, key, loss = self._round_fn(
             params_C, opt_C, key, batches, mask, clock_mask, t_cp, t_cm, env)
         return params_C, opt_C, key, {
@@ -1057,6 +1244,10 @@ class Simulator:
             key, keys_C = compression.sequential_client_keys(key, M)
         mask = np.ones(M, bool) if real is None else np.asarray(real.mask, bool)
         opt_states = list(opt_states)
+        # Quorum gate reference: pre-round opt snapshot so a rejected
+        # round can revert every client's local-opt advance (the loop
+        # twin of the batched/scan no-op write).
+        pre_opts = list(opt_states) if self._quorum is not None else None
         for m, it in enumerate(iters):
             # Data is drawn for every client every round — participating or
             # not — matching stack_client_batches on the batched backend so
@@ -1103,12 +1294,26 @@ class Simulator:
             deltas.append(delta)
             sizes.append(self.data_sizes[m])
             losses.append(loss_m)
-        if deltas:  # zero-participation round: params unchanged
+        rejected = None
+        if self._quorum is not None and real is not None:
+            # Same participant count the batched/scan gates compare:
+            # post-guard when a guard is in force, the raw mask otherwise.
+            n_q = (len(deltas) if self._guard is not None
+                   else int(mask.sum()))
+            rejected = n_q < self._quorum
+        if rejected and self._quorum_policy == "reject":
+            # Below quorum: the whole round is a no-op write — no
+            # aggregation, pre-round opt states restored. (The clock
+            # still advances; run() pays the re-dispatch cost.)
+            opt_states = pre_opts
+        elif deltas:  # zero-participation round: params unchanged
             params = aggregate_updates(params, deltas, sizes)
         out = {"train_loss": float(np.mean(losses)) if losses else float("nan")}
         if real is not None:
             out["n_participants"] = (len(deltas) if self._guard is not None
                                      else int(mask.sum()))
+            if rejected is not None:
+                out["rejected"] = rejected
         return params, tuple(opt_states), key, out
 
     # -- chunked execution (scan backend) -----------------------------------
@@ -1145,10 +1350,21 @@ class Simulator:
             out[:n, :, :V, :b] = a
             return out
 
-        # Cohorts are drawn first (dedicated RNG, independent of the
-        # realization stream) so only participating clients' data
-        # iterators advance; _rewind_chunk replays in the same order.
-        cohorts = stream.draw_cohorts(n) if self._sampled else None
+        # Cohort candidates are drawn first (dedicated RNG, independent
+        # of the realization stream) so only selected clients' data
+        # iterators advance. The chunk realization is drawn NEXT — before
+        # the data advance — because over-provisioned draws (spare > 0)
+        # rank the K+spare candidates by realized finish time; the RNG
+        # streams are independent generators, so the spare=0 draws are
+        # bit-identical to the historical cohorts->data->chunk order
+        # (_rewind_chunk replays this exact order).
+        cohorts = chunk = mask_M = t_cm_M = None
+        if self._sampled:
+            cands = stream.draw_cohorts(n)
+            chunk = stream.draw_chunk(n)
+            mask_M, t_cm_M = self._chunk_uplink(chunk)
+            cohorts = (self._select_cohorts(cands, t_cm_M)
+                       if self._spare else cands)
         if self._data_dev is not None:
             idx = (stack_cohort_indices(iters, cohorts, V) if self._sampled
                    else stack_chunk_indices(iters, n, V))
@@ -1166,31 +1382,13 @@ class Simulator:
         xs["valid"] = valid
         host = {}
         if self.scenario is not None:
-            chunk = stream.draw_chunk(n)
-            mask = np.asarray(chunk.mask, bool)
+            if not self._sampled:
+                chunk = stream.draw_chunk(n)
+                # Retransmission sums + deadline exclusion, resolved
+                # M-wide (f64 host twin — see _chunk_uplink).
+                mask_M, t_cm_M = self._chunk_uplink(chunk)
+            mask, t_cm = mask_M, t_cm_M
             clock_mask = np.asarray(chunk.clock_mask)
-            if self._faults is not None:
-                fm = self._faults
-                # Retransmission: the effective uplink time is the sum of
-                # per-attempt airtimes + backoff waits (f64 host twin,
-                # vectorized over the round axis — each row bit-identical
-                # to the per-round _fault_round transformation). Fault
-                # semantics resolve POPULATION-wide (M columns) even under
-                # sampling, so the cohort gather below sees exactly the
-                # rows a dense run would.
-                t_cm = delay.effective_uplink_times(
-                    self._update_bits(), self.wireless, self.pop.p,
-                    chunk.h_att, chunk.attempts,
-                    fm.backoff_base, fm.backoff_factor)
-                if self._deadline is not None:
-                    # Deadline exclusion: clients whose compute + effective
-                    # uplink overruns the server deadline miss aggregation.
-                    finish = (self.fed.local_rounds * self._t_cp_clients
-                              + t_cm)
-                    mask = mask & (finish <= self._deadline)
-            else:
-                t_cm = delay.per_client_uplink_time(
-                    self._update_bits(), self.wireless, self.pop.p, chunk.h)
             if self._sampled:
                 # Everything below the gather sees only cohort columns —
                 # bits, attempts and the round clock are conditioned on
@@ -1225,6 +1423,14 @@ class Simulator:
                 xs["t_cap"] = pad(np.full(n, cap, np.float32), R)
                 xs["bits_mult"] = pad(
                     host["attempts"].astype(np.float32), R)
+                if self._quorum is not None:
+                    # Padded tail rows carry quorum_min = 0: n >= 0 never
+                    # rejects, so padding can't trip the gate.
+                    xs["quorum_min"] = pad(
+                        np.full(n, self._quorum, np.float32), R)
+                    if self._quorum_policy == "reject":
+                        xs["q_penalty"] = pad(np.full(
+                            n, self._faults.redispatch_cost, np.float32), R)
         return xs, host
 
     def _rewind_chunk(self, iters, stream, pre_data, pre_stream, t: int):
@@ -1235,11 +1441,14 @@ class Simulator:
         are stateless (the same assumption checkpointing makes)."""
         V = self.fed.local_rounds
         if self._sampled:
-            # Cohorts first, data second — the exact _chunk_inputs order.
+            # Candidates -> chunk -> data, the exact _chunk_inputs order.
             # Index replay (next_indices) is RNG-identical to next_batch.
             stream.set_state(pre_stream)
             cohorts = stream.draw_cohorts(t)
-            stream.draw_chunk(t)
+            chunk = stream.draw_chunk(t)
+            if self._spare:
+                _, t_cm = self._chunk_uplink(chunk)
+                cohorts = self._select_cohorts(cohorts, t_cm)
             if pre_data is not None:
                 self._restore_iters(iters, pre_data)
                 stack_cohort_indices(iters, cohorts, V)
@@ -1293,12 +1502,17 @@ class Simulator:
                 T_cp = float(host["T_cp"][i])
                 n_part = int(host["n_participants"][i])
                 bits = float(n_part * update_bits)
+            rej = bool(ys["rejected"][i]) if "rejected" in ys else None
             sim_time += delay.round_time(T_cm, T_cp, V,
                                          deadline=self._deadline)
+            if rej and self._quorum_policy == "reject":
+                # Rejected rounds pay wall time AND the re-dispatch
+                # penalty (host f64 twin of the in-graph T_round term).
+                sim_time += self._faults.redispatch_cost
             records.append(RoundRecord(
                 round=r0 + i + 1, sim_time=sim_time, T_cm=T_cm, T_cp=T_cp,
                 train_loss=float(ys["loss"][i]),
-                n_participants=n_part, uplink_bits=bits))
+                n_participants=n_part, uplink_bits=bits, rejected=rej))
         return records
 
     def run_chunk(self, state: SimState, rounds: int):
@@ -1339,6 +1553,9 @@ class Simulator:
         # the chunk consumes (donates) the state, refreshed per chunk.
         snap = jax.device_get(state) if guard_on else None
         checked = 0
+        # Per-round (C,) finite masks aligned with `history` — the
+        # DivergenceError diagnostic payload (fault-path scan output).
+        finites: List[Any] = []
         params_C, opt_C, key = state.params_C, state.opt_C, state.key
         history: List[RoundRecord] = []
         sim_time = state.sim_time
@@ -1384,7 +1601,11 @@ class Simulator:
             done = history[-1].round - r0
             sim_time = history[-1].sim_time
             if guard_on:
-                checked = self._raise_if_diverged(history, checked, snap)
+                if "finite" in ys:
+                    finites.extend(ys["finite"][:len(records)])
+                checked = self._raise_if_diverged(
+                    history, checked, snap,
+                    finites=finites if finites else None)
                 snap = jax.device_get(self._rebuild_state(
                     state, params_C, opt_C, key, r0 + done, sim_time,
                     iters, stream))
@@ -1429,6 +1650,7 @@ class Simulator:
         target_acc: Optional[float] = None,
         eval_every: int = 1,
         max_sim_time: Optional[float] = None,
+        recovery: Optional[RecoveryPolicy] = None,
     ):
         """Run up to `max_rounds` MORE rounds from `state`:
         (state', SimResult). Round numbering and the Eq. 8 clock continue
@@ -1436,8 +1658,18 @@ class Simulator:
         state produces exactly the history an uninterrupted run would.
         The input state's device buffers are donated (consumed) — rebind
         to the returned state; branch points need a host snapshot first
-        (`jax.device_get(state)` / `save_state`)."""
+        (`jax.device_get(state)` / `save_state`).
+
+        `recovery=RecoveryPolicy(...)` arms the auto-recovering driver:
+        a DivergenceError (divergence-guarded fault runs) is caught, the
+        run rewinds to the error's last-good SimState snapshot, the
+        learning rate is deterministically backed off (and the guard
+        norm optionally tightened), and the run resumes — up to
+        max_restarts attempts, each logged in SimResult.restarts."""
         _validate_run_args(max_rounds, eval_every)
+        if recovery is not None:
+            return self._run_recovering(state, recovery, max_rounds,
+                                        target_acc, eval_every, max_sim_time)
         if self.backend == "scan":
             return self._run_scan(state, max_rounds, target_acc, eval_every,
                                   max_sim_time)
@@ -1446,6 +1678,7 @@ class Simulator:
                     and self._faults.divergence_guard)
         snap = jax.device_get(state) if guard_on else None
         checked = 0
+        finites: List[Any] = []
         params_C, opt_C, key = state.params_C, state.opt_C, state.key
         history: List[RoundRecord] = []
         sim_time = state.sim_time
@@ -1471,6 +1704,12 @@ class Simulator:
                     t_cm_clients = delay.per_client_uplink_time(
                         update_bits, self.wireless, self.pop.p, real.h)
                 if cohort is not None:
+                    if self._spare:
+                        # K+spare candidates -> the K feasible-fastest,
+                        # ranked on the M-wide effective uplink times.
+                        cohort = self._select_cohorts(
+                            np.asarray(cohort)[None],
+                            np.asarray(t_cm_clients, np.float64)[None])[0]
                     # Fault semantics above resolved M-wide; everything
                     # from here on (clock, bits, attempts, the step) is
                     # conditioned on the cohort's columns.
@@ -1490,6 +1729,14 @@ class Simulator:
                     params_C, opt_C, key, iters, real, t_cm_clients, cohort)
             sim_time += delay.round_time(T_cm, T_cp, V,
                                          deadline=self._deadline)
+            rej = metrics.get("rejected")
+            if rej is not None:
+                # Device scalar on the batched backend — the host sync is
+                # the per-round parity reference's price; the scan
+                # backend reads it from the chunk's stacked outputs.
+                rej = bool(rej)
+                if rej and self._quorum_policy == "reject":
+                    sim_time += self._faults.redispatch_cost
             n_part = metrics.get("n_participants")
             if n_attempts is not None:
                 bits = float(n_attempts * update_bits)
@@ -1501,8 +1748,10 @@ class Simulator:
                 round=r0 + k, sim_time=sim_time, T_cm=T_cm, T_cp=T_cp,
                 train_loss=metrics["train_loss"],
                 n_participants=n_part,
-                uplink_bits=bits)
+                uplink_bits=bits, rejected=rej)
             history.append(rec)
+            if guard_on:
+                finites.append(metrics.get("finite"))
             at_boundary = k % eval_every == 0 or k == max_rounds
             if self.eval_fn and at_boundary:
                 ev = self.eval_fn(self._params_from(params_C))
@@ -1511,7 +1760,8 @@ class Simulator:
             if at_boundary:
                 self._sync_history(history)
                 if guard_on:
-                    checked = self._raise_if_diverged(history, checked, snap)
+                    checked = self._raise_if_diverged(
+                        history, checked, snap, finites=finites)
                     snap = jax.device_get(self._rebuild_state(
                         state, params_C, opt_C, key, r0 + k, sim_time,
                         iters, stream))
@@ -1521,13 +1771,87 @@ class Simulator:
                 break
         self._sync_history(history)
         if guard_on:
-            self._raise_if_diverged(history, checked, snap)
+            self._raise_if_diverged(history, checked, snap, finites=finites)
         new_state = self._rebuild_state(
             state, params_C, opt_C, key, r0 + len(history), sim_time,
             iters, stream)
         return new_state, SimResult(
             history=history, params=self._params_from(params_C),
             label=self.label, fed=self.fed)
+
+    # -- crash-safe auto-recovery -------------------------------------------
+    def _recovery_variant(self, lr_scale: float, fm) -> "Simulator":
+        """A rebuilt Simulator for a restart attempt: identical to this
+        one except the optimizer's updates are scaled by `lr_scale`
+        (exact lr backoff for SGD-family optimizers) and the FaultModel
+        is replaced by `fm` (guard-tightened when the policy asks).
+        Rebuilding recompiles the round graphs — acceptable on the rare
+        recovery path, and the only way the scale/guard become compiled
+        constants (determinism over cleverness)."""
+        kw = dict(self._ctor)
+        kw["opt"] = _scaled_optimizer(kw["opt"], lr_scale)
+        if fm is not None:
+            if kw.get("faults") is not None and kw["faults"].active:
+                kw["faults"] = fm
+            elif kw.get("scenario") is not None:
+                sc = scenarios.get(kw["scenario"])
+                if sc.faults is not None and sc.faults.active:
+                    kw["scenario"] = sc.replace(faults=fm)
+        return Simulator(**kw)
+
+    def _run_recovering(self, state, recovery, max_rounds, target_acc,
+                        eval_every, max_sim_time):
+        """The auto-recovering driver behind run(recovery=...): run,
+        catch DivergenceError, rewind to the carried last-good SimState,
+        deterministically back off the learning rate (and optionally
+        tighten the guard norm), re-run — bounded by
+        recovery.max_restarts, with every restart logged in the returned
+        SimResult.restarts audit trail. The error's .state is a HOST
+        snapshot (never donated away), so resuming from it is safe."""
+        recovery.validate()
+        sim = self
+        fm = self._faults
+        lr_scale = 1.0
+        restarts: List[dict] = []
+        prefix: List[RoundRecord] = []
+        r_start = int(state.round)
+        attempt = 0
+        while True:
+            rounds_left = max_rounds - (int(state.round) - r_start)
+            try:
+                state, res = sim.run(
+                    state, max_rounds=rounds_left, target_acc=target_acc,
+                    eval_every=eval_every, max_sim_time=max_sim_time)
+            except DivergenceError as e:
+                attempt += 1
+                if e.state is None or attempt > recovery.max_restarts:
+                    raise
+                good = int(e.state.round)
+                # Keep only the records the snapshot actually covers —
+                # the rounds past it (same chunk as the failure) re-run.
+                prefix.extend(r for r in e.history if r.round <= good)
+                lr_scale *= recovery.lr_backoff
+                if (recovery.tighten_guard is not None and fm is not None
+                        and fm.max_update_norm is not None
+                        and np.isfinite(fm.max_update_norm)):
+                    fm = dataclasses.replace(
+                        fm,
+                        max_update_norm=(fm.max_update_norm
+                                         * recovery.tighten_guard))
+                restarts.append({
+                    "attempt": attempt,
+                    "round": int(e.round),
+                    "resume_round": good,
+                    "lr_scale": lr_scale,
+                    "max_update_norm": (
+                        None if fm is None else fm.max_update_norm),
+                    "error": str(e)})
+                sim = self._recovery_variant(lr_scale, fm)
+                state = e.state
+                continue
+            res.history = prefix + res.history
+            res.restarts = restarts
+            return state, res
 
     # -- fleet execution (vmapped multi-seed / multi-state) ------------------
     def run_fleet(

@@ -48,6 +48,8 @@ their arms resolve to the same envelope.
 from __future__ import annotations
 
 import dataclasses
+import os
+import pickle
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -62,6 +64,7 @@ from repro.federated.simulation import (
     SimResult,
     SimState,
     Simulator,
+    _atomic_pickle,
     _unstack_members,
     _validate_run_args,
 )
@@ -139,7 +142,9 @@ def _group_fns(rep: Simulator, V_env: int, B_env: int):
         aggregation=agg, impl=rep.impl, scenario=rep.scenario is not None,
         batch_from=rep._batch_from, envelope=True,
         guard=rep._guard, faults=rep._faults is not None,
-        sampled=rep._sampled, mesh=rep._mesh,
+        sampled=rep._sampled,
+        quorum=None if rep._quorum is None else rep._quorum_policy,
+        mesh=rep._mesh,
         param_specs_tree=rep._param_specs,
         client_axes=("clients",) if rep._mesh is not None else None)
     fns = (chunk, jax.jit(mesh_rounds.build_fleet_chunk(
@@ -285,6 +290,58 @@ def _fmt(mean: float, std: float, nd: int, multi: bool) -> str:
     return str(round(mean, nd))
 
 
+# -- study checkpointing ------------------------------------------------------
+# One file per completed (arm, seed) member, written crash-safely
+# (_atomic_pickle): a SIGKILL at any instant leaves only whole member
+# files, and `Study.run(checkpoint_dir=..., resume=True)` skips them and
+# runs the rest — the assembled StudyResult is bit-identical to an
+# uninterrupted run because every member is independent (the fleet axis
+# never mixes members; tests/test_chaos_resume.py proves it under a real
+# mid-study kill).
+
+_MEMBER_CKPT_VERSION = 1
+
+
+def _member_ckpt_path(directory: str, arm: int, seed: int) -> str:
+    return os.path.join(directory, f"arm{arm:03d}_seed{seed}.pkl")
+
+
+def _save_member(path: str, label: str, seed: int,
+                 state: SimState, result: SimResult) -> None:
+    res = dataclasses.replace(result, params=jax.device_get(result.params))
+    payload = {"__repro_study_member__": _MEMBER_CKPT_VERSION,
+               "label": label, "seed": int(seed),
+               "state": jax.device_get(state), "result": res}
+    _atomic_pickle(path, payload)
+
+
+def _load_member(path: str, label: str, seed: int,
+                 ) -> Tuple[SimState, SimResult]:
+    try:
+        with open(path, "rb") as f:
+            payload = pickle.load(f)
+    except (pickle.UnpicklingError, EOFError, AttributeError) as e:
+        raise ValueError(
+            f"{path!r} is not a readable study checkpoint "
+            f"(corrupt or truncated pickle): {e}") from e
+    if not (isinstance(payload, dict)
+            and "__repro_study_member__" in payload):
+        raise ValueError(
+            f"{path!r} does not hold a study member checkpoint")
+    version = payload["__repro_study_member__"]
+    if version != _MEMBER_CKPT_VERSION:
+        raise ValueError(
+            f"{path!r} holds member checkpoint schema v{version}, this "
+            f"build reads v{_MEMBER_CKPT_VERSION}")
+    if payload.get("label") != label or int(payload.get("seed", -1)) != seed:
+        raise ValueError(
+            f"checkpoint {path!r} holds arm {payload.get('label')!r} "
+            f"seed {payload.get('seed')!r}, expected {label!r} seed {seed} "
+            "— the study's arms/seeds changed since the checkpoint was "
+            "written; point checkpoint_dir at a fresh directory")
+    return payload["state"], payload["result"]
+
+
 @dataclass
 class StudyResult:
     """Per-arm frame of a study run: histories, final states,
@@ -365,6 +422,13 @@ class StudyResult:
             "rounds_mean": float(rounds.mean()),
             "mean_participants": (float(np.mean(parts)) if parts
                                   else float("nan")),
+            # Resilience: quorum-rejected rounds (FaultModel.min_quorum)
+            # and recovery restarts (RecoveryPolicy) summed over seeds —
+            # both 0 for studies that run without those knobs.
+            "rounds_rejected": int(sum(
+                r.rounds_rejected for r in self.results[label])),
+            "restarts": int(sum(
+                len(r.restarts) for r in self.results[label])),
         }
 
     def reduction(self, label: str, baseline: str) -> float:
@@ -380,9 +444,11 @@ class StudyResult:
     def table(self) -> Tuple[str, List[tuple]]:
         """Paper-style per-arm rows:
         label,b,V,K,rounds,mean_participants,overall_time_s,acc,
-        time_to_target — K is the sampled cohort size (blank for dense
-        arms); time/acc as mean+-std bands when the study ran multiple
-        seeds."""
+        time_to_target,rounds_rejected,restarts — K is the sampled
+        cohort size (blank for dense arms); time/acc as mean+-std bands
+        when the study ran multiple seeds; rounds_rejected/restarts are
+        seed totals of quorum-rejected rounds and recovery restarts
+        (0 when those knobs are off)."""
         multi = len(self.seeds) > 1
         rows = []
         for label in self.labels:
@@ -402,9 +468,11 @@ class StudyResult:
                 _fmt(s["final_acc_mean"], s["final_acc_std"], 4, multi),
                 (_fmt(float(tta.mean()), float(tta.std()), 2, multi)
                  if (not self.target_acc or any(hit)) else ""),
+                s["rounds_rejected"],
+                s["restarts"],
             ))
         return ("label,b,V,K,rounds,mean_participants,overall_time_s,acc,"
-                "time_to_target_s", rows)
+                "time_to_target_s,rounds_rejected,restarts", rows)
 
     def to_json(self) -> dict:
         """Machine-readable emit (benchmarks/run.py --json, the CI study
@@ -420,6 +488,8 @@ class StudyResult:
                     "total_time": r.total_time,
                     "time_to_target": (r.time_to_accuracy(self.target_acc)
                                        if self.target_acc else None),
+                    "rounds_rejected": r.rounds_rejected,
+                    "restarts": r.restarts,
                     "history": {
                         "round": [h.round for h in r.history],
                         "sim_time": [h.sim_time for h in r.history],
@@ -429,6 +499,7 @@ class StudyResult:
                         "n_participants": [h.n_participants
                                            for h in r.history],
                         "uplink_bits": [h.uplink_bits for h in r.history],
+                        "rejected": [h.rejected for h in r.history],
                     },
                 })
             fed = self.results[label][0].fed
@@ -517,8 +588,39 @@ class Study:
         return {label: spec.build() for label, spec in self.arms}
 
     def run(self, sims: Optional[Dict[str, Simulator]] = None,
-            ) -> StudyResult:
+            checkpoint_dir: Optional[str] = None,
+            resume: bool = True) -> StudyResult:
+        """Execute the study. With `checkpoint_dir` set, every completed
+        (arm, seed) member is autosaved to
+        `{checkpoint_dir}/arm{a:03d}_seed{s}.pkl` via an atomic
+        temp-file + fsync + rename write, and (with `resume=True`, the
+        default) members whose file already exists are loaded instead of
+        re-run — a killed study picks up where it left off and assembles
+        a StudyResult bit-identical to an uninterrupted run. A checkpoint
+        whose stored (label, seed) disagrees with the study raises
+        ValueError rather than silently mixing studies."""
         _validate_run_args(self.max_rounds, self.eval_every)
+        arm_of = {label: a for a, (label, _) in enumerate(self.arms)}
+        done: Dict[Tuple[str, int], Tuple[SimState, SimResult]] = {}
+        if checkpoint_dir is not None:
+            checkpoint_dir = str(checkpoint_dir)
+            os.makedirs(checkpoint_dir, exist_ok=True)
+            if resume:
+                for label, _ in self.arms:
+                    for seed in self.seeds:
+                        path = _member_ckpt_path(
+                            checkpoint_dir, arm_of[label], seed)
+                        if os.path.exists(path):
+                            done[(label, seed)] = _load_member(
+                                path, label, seed)
+
+        def finish(label: str, seed: int, st, res) -> None:
+            done[(label, seed)] = (st, res)
+            if checkpoint_dir is not None:
+                _save_member(
+                    _member_ckpt_path(checkpoint_dir, arm_of[label], seed),
+                    label, seed, st, res)
+
         built = sims if sims is not None else self.build_sims()
         sims = [(label, spec, built[label]) for label, spec in self.arms]
         if self.target_acc:
@@ -544,8 +646,6 @@ class Study:
         if self.bit_check:
             for sig in order:
                 self._bit_probe(groups[sig])
-        results: Dict[str, List[SimResult]] = {l: [] for l, _ in self.arms}
-        states: Dict[str, List[SimState]] = {l: [] for l, _ in self.arms}
         for sig in order:
             if len(sig) == 2 and sig[0] == "__solo__":
                 # No envelope form (a hand-built Simulator passed through
@@ -553,24 +653,33 @@ class Study:
                 # correct, just not grouped.
                 (label, _, sim), = groups[sig]
                 for seed in self.seeds:
+                    if (label, seed) in done:
+                        continue
                     st, res = sim.run(
                         sim.init(seed), max_rounds=self.max_rounds,
                         eval_every=self.eval_every,
                         target_acc=self.target_acc,
                         max_sim_time=self.max_sim_time)
-                    results[label].append(res)
-                    states[label].append(st)
+                    finish(label, seed, st, res)
                 continue
             members = [
                 _Member(arm=a, label=label, sim=sim, seed=seed)
                 for a, (label, spec, sim) in enumerate(groups[sig])
                 for seed in self.seeds
+                if (label, seed) not in done
             ]
+            if not members:
+                continue  # every member restored from checkpoint
             for m, (st, res) in zip(members, _run_group(
                     members, self.max_rounds, self.eval_every,
                     self.target_acc, self.max_sim_time)):
-                results[m.label].append(res)
-                states[m.label].append(st)
+                finish(m.label, m.seed, st, res)
+        results: Dict[str, List[SimResult]] = {
+            label: [done[(label, seed)][1] for seed in self.seeds]
+            for label, _ in self.arms}
+        states: Dict[str, List[SimState]] = {
+            label: [done[(label, seed)][0] for seed in self.seeds]
+            for label, _ in self.arms}
         return StudyResult(
             labels=tuple(l for l, _ in self.arms), seeds=self.seeds,
             results=results, states=states,

@@ -22,7 +22,7 @@ def test_workflow_parses_and_has_jobs():
     wf = _load_workflow()
     assert wf["name"] == "ci"
     jobs = wf["jobs"]
-    for job in ("lint", "tier1", "bench-smoke", "slow"):
+    for job in ("lint", "tier1", "bench-smoke", "chaos-smoke", "slow"):
         assert job in jobs, f"missing job {job}"
         assert "runs-on" in jobs[job]
         steps = jobs[job]["steps"]
@@ -51,8 +51,11 @@ def test_workflow_jobs_share_tier1_entrypoint():
     sched = jobs["slow"]["if"]
     assert "schedule" in sched and "workflow_dispatch" in sched
     # Default jobs must NOT run on the nightly schedule.
-    for job in ("lint", "tier1", "bench-smoke"):
+    for job in ("lint", "tier1", "bench-smoke", "chaos-smoke"):
         assert "schedule" in jobs[job]["if"]
+    # Chaos smoke runs the slow-marked SIGKILL/resume test explicitly.
+    chaos = runs("chaos-smoke")
+    assert "test_chaos_resume.py" in chaos and '-m ""' in chaos
     # Bench smoke guards the batched-vs-loop speedup and keeps an artifact.
     smoke = runs("bench-smoke")
     assert "bench_round_step.py" in smoke and "--check" in smoke
@@ -73,7 +76,7 @@ def test_workflow_caches_jax_install_keyed_on_pin():
     cache at once and a warm run skips the install entirely."""
     wf = _load_workflow()
     assert wf["env"]["JAX_PIN"]
-    for job in ("tier1", "bench-smoke", "slow"):
+    for job in ("tier1", "bench-smoke", "chaos-smoke", "slow"):
         steps = wf["jobs"][job]["steps"]
         caches = [s for s in steps if "actions/cache" in str(s.get("uses", ""))]
         assert caches, f"{job}: no actions/cache step"

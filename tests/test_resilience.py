@@ -1,0 +1,482 @@
+"""Resilient execution (PR: quorum-gated rounds, over-provisioned
+cohorts, crash-safe auto-recovering drivers):
+
+  * quorum gate: a below-quorum round under 'reject' leaves params and
+    optimizer state byte-identical while the clock still pays the round's
+    wall time plus `redispatch_cost`; scan == batched bit-for-bit on
+    every quorum path; an inactive quorum lowers a byte-identical HLO
+    graph.
+  * over-provisioned cohorts: K + spare candidates, keep the K deadline-
+    feasible-fastest — when K + spare covers the whole population the
+    sampled run reproduces the dense run's losses/clock/params exactly.
+  * recovery: DivergenceError carries a resumable payload;
+    Simulator.run(recovery=...) rewinds + lr-backoff + optional guard
+    tightening, audited in SimResult.restarts; Study.run(checkpoint_dir)
+    autosaves each (arm, seed) member atomically and resumes
+    bit-identically.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
+from repro.core import defl, delay
+from repro.federated import scenarios
+from repro.federated.experiment import (CohortSpec, ExperimentSpec,
+                                        PopulationSpec)
+from repro.federated.faults import (DivergenceError, FaultModel,
+                                    RecoveryPolicy)
+from repro.federated.simulation import (Simulator, load_state, save_state)
+from repro.federated.study import Study
+from repro.optim import sgd
+
+
+def _quad_loss(params, batch):
+    diff = params["w"] - batch["target"]
+    return 0.5 * jnp.sum(diff * diff), {}
+
+
+class _TargetIterator:
+    def __init__(self, target, batch_size):
+        self.target = np.asarray(target, np.float32)
+        self.batch_size = batch_size
+
+    def next_batch(self):
+        return {"target": np.tile(self.target, (self.batch_size, 1))}
+
+
+def _sim(backend, scenario=None, faults=None, compress=True, momentum=0.9,
+         seed=0, lr=0.05, M=4, cohort=None, spare=0, heterogeneity=0.0,
+         targets=None):
+    d, b = 16, 2
+    fed = FedConfig(n_devices=M, batch_size=b, lr=lr, seed=seed,
+                    compress_updates=compress)
+    scen = scenarios.get(scenario) if scenario is not None else None
+    pop = (scen.population(M, seed=seed) if scen is not None else
+           delay.draw_population(M, ComputeConfig(), WirelessConfig(), 0,
+                                 heterogeneity))
+    if targets is None:
+        targets = [np.linspace(0.0, m, d) * 0.1 for m in range(M)]
+    iters = [_TargetIterator(t, b) for t in targets]
+    return Simulator(
+        _quad_loss, {"w": jnp.zeros(d)}, iters, 10 * np.arange(1, M + 1),
+        fed, sgd(fed.lr, momentum), pop, backend=backend, scenario=scen,
+        faults=faults, cohort=cohort, cohort_spare=spare)
+
+
+def _run(sim, **kw):
+    _, res = sim.run(sim.init(), **kw)
+    return res
+
+
+def _assert_bit_identical(res_a, res_b):
+    for a, b in zip(jax.tree.leaves(res_a.params),
+                    jax.tree.leaves(res_b.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert len(res_a.history) == len(res_b.history)
+    for ra, rb in zip(res_a.history, res_b.history):
+        assert ra.round == rb.round
+        np.testing.assert_array_equal(ra.train_loss, rb.train_loss)
+        assert ra.sim_time == rb.sim_time
+        assert ra.n_participants == rb.n_participants
+        # None (quorum off: no flag recorded) and False both mean applied
+        assert bool(ra.rejected) == bool(rb.rejected)
+
+
+def _leaves_bytes(tree):
+    return [np.asarray(x).tobytes() for x in jax.tree.leaves(tree)]
+
+
+# ---------------------------------------------------------------------------
+# Quorum: validation + resolution
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad", [
+    dict(min_quorum=0),
+    dict(min_quorum=-1),
+    dict(min_quorum=0.0),
+    dict(min_quorum=1.5),
+    dict(quorum_policy="maybe"),
+    dict(redispatch_cost=-1.0),
+])
+def test_quorum_validate_rejects(bad):
+    with pytest.raises(ValueError):
+        FaultModel(**bad).validate()
+
+
+def test_quorum_activates_and_resolves():
+    assert FaultModel(min_quorum=2).active is True
+    assert FaultModel().resolve_quorum(4) is None
+    assert FaultModel(min_quorum=3).resolve_quorum(4) == 3
+    assert FaultModel(min_quorum=0.5).resolve_quorum(4) == 2   # ceil
+    assert FaultModel(min_quorum=0.1).resolve_quorum(4) == 1   # floor at 1
+    assert FaultModel(min_quorum=1.0).resolve_quorum(4) == 4
+    with pytest.raises(ValueError):
+        FaultModel(min_quorum=5).resolve_quorum(4)
+
+
+# ---------------------------------------------------------------------------
+# Quorum: the reject no-op property
+# ---------------------------------------------------------------------------
+
+
+def test_quorum_reject_noops_params_but_clock_advances():
+    """Under 'reject', a below-quorum round leaves params AND optimizer
+    state byte-identical while sim_time still advances and the RNG stream
+    keeps moving (rejection must not stall the compression-noise
+    schedule). Under 'accept' the same rounds are flagged but applied."""
+    fm = FaultModel(min_quorum=3)
+    # dropout @ M=4, min_quorum=3: round 1 passes, rounds 2 and 3 fail
+    # quorum (participation dips to 2).
+    sim = _sim("scan", "dropout", faults=fm)
+    st1, r1 = sim.run(sim.init(), max_rounds=1)
+    st3, r3 = sim.run(sim.init(), max_rounds=3)
+    assert [r.rejected for r in r3.history] == [False, True, True]
+    assert _leaves_bytes(st3.params_C) == _leaves_bytes(st1.params_C)
+    assert _leaves_bytes(st3.opt_C) == _leaves_bytes(st1.opt_C)
+    assert st3.sim_time > st1.sim_time
+    assert _leaves_bytes(st3.key) != _leaves_bytes(st1.key)
+
+    acc = _sim("scan", "dropout",
+               faults=FaultModel(min_quorum=3, quorum_policy="accept"))
+    sta, ra = acc.run(acc.init(), max_rounds=3)
+    assert [r.rejected for r in ra.history] == [False, True, True]
+    assert _leaves_bytes(sta.params_C) != _leaves_bytes(st1.params_C)
+
+
+def test_quorum_redispatch_cost_paid_exactly_on_rejected_rounds():
+    """redispatch_cost is billed on rejected rounds and ONLY there: the
+    per-round durations of a redispatch_cost=1.5 run exceed the cost=0
+    run's by exactly 1.5 on each rejected round and 0 elsewhere."""
+    free = _run(_sim("scan", "dropout", faults=FaultModel(min_quorum=3)),
+                max_rounds=10)
+    paid = _run(_sim("scan", "dropout",
+                     faults=FaultModel(min_quorum=3, redispatch_cost=1.5)),
+                max_rounds=10)
+    flags = [r.rejected for r in free.history]
+    assert flags == [False, True, True, False, True,
+                     False, False, False, True, False]
+    assert [r.rejected for r in paid.history] == flags
+    assert free.rounds_rejected == 4 and paid.rounds_rejected == 4
+    d_free = np.diff([0.0] + [r.sim_time for r in free.history])
+    d_paid = np.diff([0.0] + [r.sim_time for r in paid.history])
+    assert (d_free > 0).all() and (d_paid > 0).all()
+    np.testing.assert_allclose(
+        d_paid - d_free, np.where(flags, 1.5, 0.0), atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Quorum: scan == batched on every path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy,cohort,compress,quorum", [
+    ("reject", None, True, 3),
+    ("accept", None, False, 3),
+    ("reject", 3, False, 0.99),   # sampled K<M + fraction form (ceil->3)
+    ("accept", 3, True, 3),
+])
+def test_quorum_parity_scan_vs_batched(policy, cohort, compress, quorum):
+    fm = FaultModel(min_quorum=quorum, quorum_policy=policy,
+                    redispatch_cost=0.25)
+    mom = 0.0 if cohort else 0.9
+    kw = dict(scenario="dropout", faults=fm, compress=compress,
+              momentum=mom, cohort=cohort)
+    res_s = _run(_sim("scan", **kw), max_rounds=8)
+    res_b = _run(_sim("batched", **kw), max_rounds=8)
+    _assert_bit_identical(res_s, res_b)
+    assert res_s.rounds_rejected > 0  # the path under test actually fired
+
+
+def test_quorum_never_triggered_is_bit_identical():
+    """A quorum that never fires (min_quorum=1 on a scenario with full
+    attendance) must not change a single bit of the run."""
+    base = FaultModel(deadline_factor=5.0)
+    gated = FaultModel(deadline_factor=5.0, min_quorum=1)
+    res_a = _run(_sim("scan", "stragglers", faults=base), max_rounds=6)
+    res_b = _run(_sim("scan", "stragglers", faults=gated), max_rounds=6)
+    _assert_bit_identical(res_a, res_b)
+    assert all(r.rejected is None for r in res_a.history)  # quorum off
+    assert all(r.rejected is False for r in res_b.history)
+    assert res_b.rounds_rejected == 0
+
+
+def _chunk_hlo(faults):
+    """Lowered HLO text of the compiled scan-chunk graph — lowering is
+    deterministic, so equal configs produce equal text."""
+    sim = _sim("scan", "dropout", faults=faults)
+    st = sim.init()
+    iters, stream = sim._materialize(st)
+    xs, _ = sim._chunk_inputs(iters, stream, 2, 2)
+    weights, t_cp = sim._chunk_args()
+    args = [st.params_C, st.opt_C, st.key, weights, t_cp, sim._data_dev, xs]
+    if sim._envelope:
+        args.append(sim._trivial_env())
+    return sim._chunk_fn.lower(*args).as_text()
+
+
+def test_quorum_inactive_graph_byte_identical():
+    """The compile-time contract: min_quorum=None compiles ZERO quorum
+    ops (HLO byte-identical to faults=None through an inactive
+    FaultModel), and setting it changes the graph — the identity probe is
+    not vacuous."""
+    plain = _chunk_hlo(None)
+    assert _chunk_hlo(FaultModel()) == plain
+    base = _chunk_hlo(FaultModel(deadline_factor=2.0))
+    assert _chunk_hlo(FaultModel(deadline_factor=2.0, min_quorum=2)) != base
+
+
+# ---------------------------------------------------------------------------
+# Over-provisioned cohorts
+# ---------------------------------------------------------------------------
+
+
+def test_spare_validation():
+    with pytest.raises(ValueError):
+        CohortSpec(K=2, spare=-1).validate()
+    with pytest.raises(ValueError):
+        _sim("scan", cohort=None, spare=1)       # spare needs a cohort
+    with pytest.raises(ValueError):
+        _sim("scan", M=4, cohort=3, spare=2)     # K + spare > M
+    with pytest.raises(ValueError):
+        PopulationSpec(M=4, cohort=CohortSpec(K=3, spare=2)).validate()
+
+
+def test_deadline_plan_spare_requires_cohort_and_helps():
+    """spare needs cohort_size, and over-provisioning can only raise the
+    Eq. 12 effective M (more feasible candidates per round), capped at
+    K."""
+    fed = FedConfig(n_devices=10, epsilon=0.01, nu=2.0, lr=0.05)
+    pop = delay.draw_population(10, ComputeConfig(), WirelessConfig(), 0, 0.5)
+    bits = 1e5
+    t_cm = delay.per_client_uplink_time(bits, WirelessConfig(), pop.p, pop.h)
+    dl = float(np.median(pop.G / pop.f) * 8 * 4 + np.median(t_cm))
+    with pytest.raises(ValueError):
+        defl.deadline_plan(fed, pop, bits, dl, spare=2)
+    with pytest.raises(ValueError):
+        defl.deadline_plan(fed, pop, bits, dl, cohort_size=4, spare=-1)
+    plain = defl.deadline_plan(fed, pop, bits, dl, cohort_size=4)
+    spared = defl.deadline_plan(fed, pop, bits, dl, cohort_size=4, spare=4)
+    assert spared.problem.M >= plain.problem.M  # Eq. 12 effective M
+    assert spared.problem.M <= 4                # saturates at K
+    # spare=0 reduces exactly to the plain cohort plan
+    zero = defl.deadline_plan(fed, pop, bits, dl, cohort_size=4, spare=0)
+    assert (zero.b, zero.V, zero.problem.M) == \
+        (plain.b, plain.V, plain.problem.M)
+
+
+def test_spare_covering_population_matches_dense():
+    """When K + spare == M the candidate set is the whole population, so
+    keeping the K deadline-feasible-fastest reproduces the dense run
+    exactly: with a deadline that admits only 2 clients, losses, clocks,
+    participation and trained params are byte-identical to the dense
+    sim."""
+    M = 5
+    mk = lambda **kw: _sim("scan", M=M, momentum=0.0, compress=False,  # noqa: E731
+                           heterogeneity=0.5, **kw)
+    probe = mk(faults=FaultModel(deadline=1e9))
+    bits = probe._update_bits()
+    t_cm = delay.per_client_uplink_time(bits, probe.wireless,
+                                        probe.pop.p, probe.pop.h)
+    finish = np.sort(delay.finish_times(probe._t_cp_clients, t_cm,
+                                        probe.fed.local_rounds))
+    fm = FaultModel(deadline=float((finish[1] + finish[2]) / 2))
+    dense = mk(faults=fm)
+    _, rd = dense.run(dense.init(), max_rounds=6)
+    assert [r.n_participants for r in rd.history] == [2] * 6
+    samp = mk(faults=fm, cohort=3, spare=2)
+    _, rs = samp.run(samp.init(), max_rounds=6)
+    for a, b in zip(rd.history, rs.history):
+        assert np.float32(a.train_loss).tobytes() == \
+            np.float32(b.train_loss).tobytes()
+        assert a.sim_time == b.sim_time
+        assert a.n_participants == b.n_participants
+    assert _leaves_bytes(rd.params) == _leaves_bytes(rs.params)
+    # dispatch-billed uplink accounting: M clients dense, K sampled
+    assert rd.history[0].uplink_bits == M * bits
+    assert rs.history[0].uplink_bits == 3 * bits
+
+
+def test_spare_parity_and_midrun_resume():
+    """spare > 0 keeps the twin-backend contract (scan == batched) and
+    survives a mid-run save_state/load_state round trip bit-identically."""
+    fm = FaultModel(deadline_factor=1.2)
+    kw = dict(scenario="stragglers", faults=fm, momentum=0.0, M=6, cohort=3,
+              spare=2)
+    res_s = _run(_sim("scan", **kw), max_rounds=8)
+    res_b = _run(_sim("batched", **kw), max_rounds=8)
+    _assert_bit_identical(res_s, res_b)
+
+    sim = _sim("scan", **kw)
+    st4, _ = sim.run(sim.init(), max_rounds=4)
+    path = os.path.join(os.environ.get("TMPDIR", "/tmp"),
+                        "resilience_spare_state.pkl")
+    save_state(path, st4)
+    try:
+        sim2 = _sim("scan", **kw)
+        st_resumed, res_tail = sim2.run(load_state(path), max_rounds=4)
+    finally:
+        os.remove(path)
+    full = res_s.history
+    assert [r.round for r in res_tail.history] == [r.round for r in full[4:]]
+    for a, b in zip(full[4:], res_tail.history):
+        np.testing.assert_array_equal(a.train_loss, b.train_loss)
+        assert a.sim_time == b.sim_time
+        assert a.n_participants == b.n_participants
+    assert _leaves_bytes(res_s.params) == _leaves_bytes(res_tail.params)
+
+
+# ---------------------------------------------------------------------------
+# Divergence recovery
+# ---------------------------------------------------------------------------
+
+
+def _div_sim(lr=1000.0):
+    """A run that genuinely diverges under an ACTIVE guard: the huge lr
+    blows the quadratic up, reject_nonfinite=False lets the non-finite
+    aggregate through (a norm guard alone keeps the divergence check
+    armed), and the loss goes inf at round 3."""
+    return _sim("scan", faults=FaultModel(max_update_norm=1e9,
+                                          reject_nonfinite=False),
+                momentum=0.0, compress=False, lr=lr)
+
+
+def test_divergence_error_payload_is_resumable():
+    sim = _div_sim()
+    with pytest.raises(DivergenceError) as ei:
+        sim.run(sim.init(), max_rounds=12, eval_every=3)
+    e = ei.value
+    assert e.round == 3
+    assert e.state is not None and e.state.round == 0  # chunk-boundary
+    assert e.guard == (1e9, False)
+    assert e.faults is not None and e.faults.max_update_norm == 1e9
+    assert e.history[-1].round == 3
+    assert e.finite_mask is not None
+    assert e.finite_mask.dtype == np.bool_ and e.finite_mask.shape == (4,)
+    assert not e.finite_mask.any()  # global blow-up, not one bad client
+
+
+def test_recovery_restarts_and_audits():
+    """run(recovery=...) rewinds to the carried state, backs the lr off,
+    and completes: one audited restart, contiguous round numbering, a
+    monotone clock, and a finite final loss."""
+    sim = _div_sim()
+    st, res = sim.run(sim.init(), max_rounds=12, eval_every=3,
+                      recovery=RecoveryPolicy(max_restarts=8,
+                                              lr_backoff=1e-4))
+    assert len(res.restarts) == 1
+    audit = res.restarts[0]
+    assert set(audit) == {"attempt", "round", "resume_round", "lr_scale",
+                          "max_update_norm", "error"}
+    assert (audit["attempt"], audit["round"], audit["resume_round"]) == \
+        (1, 3, 0)
+    assert audit["lr_scale"] == pytest.approx(1e-4)
+    assert audit["max_update_norm"] == pytest.approx(1e9)
+    assert [r.round for r in res.history] == list(range(1, 13))
+    times = [r.sim_time for r in res.history]
+    assert all(b > a for a, b in zip(times, times[1:]))
+    assert np.isfinite(res.history[-1].train_loss)
+    assert res.history[-1].train_loss < 1.0
+
+
+def test_recovery_budget_exhausted_reraises():
+    sim = _div_sim()
+    with pytest.raises(DivergenceError) as ei:
+        sim.run(sim.init(), max_rounds=12, eval_every=3,
+                recovery=RecoveryPolicy(max_restarts=1, lr_backoff=0.9))
+    assert ei.value.round == 3
+
+
+def test_recovery_tightens_guard():
+    sim = _div_sim()
+    _, res = sim.run(sim.init(), max_rounds=12, eval_every=3,
+                     recovery=RecoveryPolicy(max_restarts=8, lr_backoff=1e-4,
+                                             tighten_guard=0.5))
+    assert [(a["attempt"], a["lr_scale"], a["max_update_norm"])
+            for a in res.restarts] == [(1, pytest.approx(1e-4),
+                                        pytest.approx(5e8))]
+    assert np.isfinite(res.history[-1].train_loss)
+
+
+@pytest.mark.parametrize("bad", [
+    dict(max_restarts=0),
+    dict(lr_backoff=0.0),
+    dict(lr_backoff=1.5),
+    dict(tighten_guard=0.0),
+])
+def test_recovery_policy_validate_rejects(bad):
+    with pytest.raises(ValueError):
+        RecoveryPolicy(**bad).validate()
+
+
+# ---------------------------------------------------------------------------
+# Crash-safe checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_save_state_is_atomic_no_stray_files(tmp_path):
+    sim = _sim("scan")
+    st, _ = sim.run(sim.init(), max_rounds=2)
+    path = tmp_path / "state.pkl"
+    save_state(str(path), st)
+    assert sorted(p.name for p in tmp_path.iterdir()) == ["state.pkl"]
+    st2 = load_state(str(path))
+    assert _leaves_bytes(st2.params_C) == _leaves_bytes(st.params_C)
+
+
+def _tiny_spec(b, V, scenario=None):
+    return ExperimentSpec(
+        fed=FedConfig(n_devices=3, batch_size=b,
+                      theta=float(np.exp(-V / 2.0)), nu=2.0, lr=0.05,
+                      compress_updates=False),
+        model="mnist_cnn_tiny", dataset="mnist", n_train=120, n_test=40,
+        seed=0, scenario=scenario, with_eval=False)
+
+
+def _tiny_study(labels=("A", "B")):
+    return Study(arms=[(labels[0], _tiny_spec(4, 2)),
+                       (labels[1], _tiny_spec(8, 1))],
+                 seeds=(0, 1), max_rounds=2, eval_every=2)
+
+
+def test_study_checkpoint_resume_is_bit_identical(tmp_path):
+    """Study.run(checkpoint_dir=...) autosaves one file per (arm, seed);
+    deleting a member and re-running resumes ONLY that member and the
+    assembled StudyResult is byte-identical to an uncheckpointed run —
+    and a fully-restored directory reproduces it without any compute."""
+    import json
+    ckpt = str(tmp_path / "ckpt")
+    ref = _tiny_study().run()
+    ref_json = json.dumps(ref.to_json(), sort_keys=True, default=float)
+    res = _tiny_study().run(checkpoint_dir=ckpt)
+    assert sorted(os.listdir(ckpt)) == [
+        "arm000_seed0.pkl", "arm000_seed1.pkl",
+        "arm001_seed0.pkl", "arm001_seed1.pkl"]
+    assert json.dumps(res.to_json(), sort_keys=True, default=float) == \
+        ref_json
+    os.remove(os.path.join(ckpt, "arm001_seed1.pkl"))
+    resumed = _tiny_study().run(checkpoint_dir=ckpt)
+    assert json.dumps(resumed.to_json(), sort_keys=True, default=float) == \
+        ref_json
+    # fully restored: no member re-runs, same payload
+    restored = _tiny_study().run(checkpoint_dir=ckpt)
+    assert json.dumps(restored.to_json(), sort_keys=True, default=float) == \
+        ref_json
+    # a checkpoint from a different study shape is refused, not absorbed
+    with pytest.raises(ValueError):
+        _tiny_study(labels=("X", "B")).run(checkpoint_dir=ckpt)
+
+
+def test_study_summary_exposes_resilience_columns():
+    res = _tiny_study().run()
+    for label in res.labels:
+        s = res.summary(label)
+        assert s["rounds_rejected"] == 0 and s["restarts"] == 0
+    header, rows = res.table()
+    assert header.endswith("rounds_rejected,restarts")
+    assert all(len(row) == len(header.split(",")) for row in rows)
+    assert all(row[-2:] == (0, 0) for row in rows)
