@@ -16,7 +16,10 @@ amortized to seconds per seed-round. PR 7 adds sampled-participation
 rows: a K=50 cohort drawn per round from an M=10,000 population
 (``sampled_k50``) next to its dense 50-client baseline, each carrying a
 ``state_bytes`` key (the device-resident params/opt/key trio — the O(K)
-memory contract).
+memory contract). PR 9 adds async event-engine rows at M=10: the
+compiled event queue at its synchronous limit (buffer K=M, constant
+staleness; ``async_k10``) on matched work (E = R*M events) next to the
+scan backend on the same uniform scenario (``scan_uniform``).
 
   PYTHONPATH=src python -m benchmarks.run --only round_step [--quick]
   PYTHONPATH=src python benchmarks/bench_round_step.py [--quick]
@@ -92,6 +95,19 @@ FLEET_GATE_C = 1.15
 SAMPLED_M = 10_000
 SAMPLED_K = 50
 SAMPLED_GATE = 0.9
+# Async event-queue rows (PR 9): the compiled event engine
+# (backend='async', buffer K=M, constant staleness — the synchronous
+# limit) vs the scan backend on MATCHED WORK: R rounds of M client
+# updates = E = R*M events, both through run() at eval_every=GATE_EVAL
+# on scenario='uniform'. Parity (1.0x) is NOT the bar: the synchronous
+# round vmaps its M client GEMMs into one batched dispatch, which a
+# one-client-per-event queue structurally cannot (measured 0.55-0.65x
+# across b/V/compression on the 2-core reference CPU). The gate
+# protects the event-step machinery itself — argmin pop, buffer adds,
+# the ack-release branch — whose regressions show up well below the
+# measured band.
+ASYNC_M = 10
+ASYNC_GATE = 0.5
 # Best-of reps per M (larger M amortizes noise over longer rounds).
 REPS = {10: 5, 50: 4, 200: 3}
 
@@ -263,6 +279,83 @@ def _bench_sampled(reps: int) -> dict:
     return out
 
 
+def _bench_async(reps: int) -> dict:
+    """Best-of-reps seconds/round on matched work: the async event
+    engine at buffer K=M (every aggregation consumes one update per
+    client on 'uniform' — E = R*M events) vs the scan backend's R
+    synchronized rounds, both through run() at eval_every=GATE_EVAL."""
+    from repro.federated.events import AsyncSpec
+    E = GATE_EVAL
+    fed = FedConfig(n_devices=ASYNC_M, **BENCH_FED)
+    scan_sim = make_cnn_sim(
+        "mnist", fed, f"scan-async-base-m{ASYNC_M}", seed=0,
+        backend="scan", with_eval=False, cnn_cfg="mnist_cnn_small",
+        scenario="uniform")
+    async_sim = make_cnn_spec(
+        "mnist", fed, f"async-m{ASYNC_M}", seed=0, backend="async",
+        with_eval=False, cnn_cfg="mnist_cnn_small", scenario="uniform",
+        async_spec=AsyncSpec(buffer_size=ASYNC_M,
+                             staleness="constant")).build()
+    sample = {}
+    for name, sim in (("scan_base", scan_sim), ("async", async_sim)):
+        cell = {"st": sim.init()}
+        cell["st"], _ = sim.run(cell["st"], max_rounds=E, eval_every=E)
+
+        def runner(sim=sim, cell=cell):
+            cell["st"], _ = sim.run(cell["st"], max_rounds=E, eval_every=E)
+            return E
+
+        sample[name] = runner
+    best = {k: float("inf") for k in sample}
+    for _ in range(reps):
+        for k, fn in sample.items():
+            t0 = time.perf_counter()
+            rounds = fn()
+            best[k] = min(best[k], (time.perf_counter() - t0) / rounds)
+    assert async_sim.trace_count == 1, (
+        f"async event chunk retraced {async_sim.trace_count}x")
+    return best
+
+
+def check_async_identity() -> None:
+    """Exact gate (no timing, never retried): the synchronous limit of
+    the event engine — AsyncSpec(buffer_size=M, staleness='constant') on
+    scenario='uniform' — must reproduce the scan backend's loss
+    trajectory and final params. Under ack-at-aggregation each buffer
+    fill consumes exactly one update per client, all dispatched from the
+    same global model: FedAvg on the event clock. Raises SystemExit(1)
+    on divergence."""
+    import numpy as np
+    from repro.federated.events import AsyncSpec
+    m, rounds = 4, 6
+    fed = FedConfig(n_devices=m, **BENCH_FED)
+    scan_sim = make_cnn_sim(
+        "mnist", fed, "ident-scan", n_train=96, n_test=32, seed=0,
+        backend="scan", with_eval=False, cnn_cfg="mnist_cnn_tiny",
+        scenario="uniform")
+    async_sim = make_cnn_spec(
+        "mnist", fed, "ident-async", n_train=96, n_test=32, seed=0,
+        backend="async", with_eval=False, cnn_cfg="mnist_cnn_tiny",
+        scenario="uniform",
+        async_spec=AsyncSpec(buffer_size=m, staleness="constant")).build()
+    st_s, res_s = scan_sim.run(scan_sim.init(), max_rounds=rounds)
+    st_a, res_a = async_sim.run(async_sim.init(), max_rounds=rounds)
+    ls = [r.train_loss for r in res_s.history]
+    la = [r.train_loss for r in res_a.history]
+    if not np.allclose(la, ls, rtol=2e-5, atol=1e-6):
+        print(f"FAIL: async sync-limit (K=M, constant staleness, uniform) "
+              f"diverges from scan losses:\n  scan  {ls}\n  async {la}")
+        raise SystemExit(1)
+    ps = jax.device_get(scan_sim.params(st_s))
+    pa = jax.device_get(async_sim.params(st_a))
+    for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(ps)):
+        if not np.allclose(a, b, rtol=2e-5, atol=1e-6):
+            print("FAIL: async sync-limit final params diverge from scan")
+            raise SystemExit(1)
+    print(f"check: async sync-limit (K=M={m}, constant) reproduces the "
+          f"scan trajectory over {rounds} rounds")
+
+
 def _chunk_hlo(faults) -> str:
     """Lowered HLO text of the compiled scan-chunk graph for a tiny CNN
     sim at the given FaultModel — the graph-byte probe behind the
@@ -312,13 +405,16 @@ def check_quorum_graph() -> None:
 def run(quick: bool = False, smoke: bool = False, out: str = "",
         speedups: Optional[dict] = None, scan_speedups: Optional[dict] = None,
         fleet_speedups: Optional[dict] = None,
-        sampled_stats: Optional[dict] = None):
+        sampled_stats: Optional[dict] = None,
+        async_stats: Optional[dict] = None):
     """smoke=True is the CI gate: tiny config (M=10 only). `out` gets the
     timing rows plus speedup rows as a CI artifact; pass dicts as
     `speedups` / `scan_speedups` / `fleet_speedups` to receive the raw
     {m: loop/batched}, {m: batched/scan@GATE_EVAL} and
-    {(m, suffix): seq/fleet@8 seeds} ratios (main --check uses these —
-    never the rounded CSV strings). smoke/quick runs never clobber the
+    {(m, suffix): seq/fleet@8 seeds} ratios, and `sampled_stats` /
+    `async_stats` for the raw sampled/dense and scan_base/async
+    seconds (main --check uses these — never the rounded CSV
+    strings). smoke/quick runs never clobber the
     tracked full-size BENCH_round_step.json trajectory; its per-round
     rows keep the documented {m, backend, rounds_per_sec, round_ms}
     shape, scan rows add an `eval_every` key, and the M=10 fleet rows use
@@ -425,6 +521,31 @@ def run(quick: bool = False, smoke: bool = False, out: str = "",
     rows_csv.append(
         (f"round_step_m{SAMPLED_M}_sampled_over_dense{SAMPLED_K}", "",
          f"{sampled_x:.2f}"))
+    # Async event-queue rows (all modes): matched work at K=M — the
+    # engine's event-step cost vs the vmapped synchronous round.
+    astats = _bench_async(reps[ASYNC_M])
+    if async_stats is not None:
+        async_stats.update(astats)
+    for name in ("scan_base", "async"):
+        sec = astats[name]
+        # 'scan_uniform' (not 'scan') so the row can't be confused with
+        # the main scan sweep: this baseline runs on scenario='uniform'.
+        backend = ("scan_uniform" if name == "scan_base"
+                   else f"async_k{ASYNC_M}")
+        rows_json.append({
+            "m": ASYNC_M,
+            "backend": backend,
+            "eval_every": GATE_EVAL,
+            "rounds_per_sec": 1.0 / sec,
+            "round_ms": sec * 1e3,
+        })
+        rows_csv.append((f"round_step_m{ASYNC_M}_{backend}_e{GATE_EVAL}",
+                         f"{sec * 1e6:.0f}", f"{1.0 / sec:.3f}"))
+    async_x = astats["scan_base"] / astats["async"]
+    speedup_json.append({"m": ASYNC_M, "k": ASYNC_M,
+                         "async_over_scan_x": async_x})
+    rows_csv.append((f"round_step_m{ASYNC_M}_async_over_scan", "",
+                     f"{async_x:.2f}"))
     if not (quick or smoke):
         # Only full runs update the tracked artifact: a reduced sweep must
         # not clobber the M=200 rows of the cross-PR perf trajectory.
@@ -460,10 +581,15 @@ def main(argv=None):
                          f"below {SAMPLED_GATE}x the dense K-client "
                          "baseline or its device state stops byte-"
                          "matching the dense-K trio (O(K), not O(M)); "
+                         "or if the async event engine falls below "
+                         f"{ASYNC_GATE}x the scan baseline at matched "
+                         f"work (M={ASYNC_M}, K=M, E=R*M events); "
                          "also asserts — exactly, never retried — that "
                          "an inactive FaultModel lowers to HLO byte-"
-                         "identical to faults=None and that min_quorum "
-                         "compiles quorum ops only when set")
+                         "identical to faults=None, that min_quorum "
+                         "compiles quorum ops only when set, and that "
+                         "the K=M async sync limit matches the scan "
+                         "backend's losses/params")
     ap.add_argument("--out", default="",
                     help="also write the rows JSON here (CI artifact)")
     args = ap.parse_args(argv)
@@ -471,16 +597,19 @@ def main(argv=None):
     scan_speedups: dict = {}
     fleet_speedups: dict = {}
     sampled_stats: dict = {}
+    async_stats: dict = {}
     header, rows = run(quick=args.quick, smoke=args.smoke, out=args.out,
                        speedups=speedups, scan_speedups=scan_speedups,
                        fleet_speedups=fleet_speedups,
-                       sampled_stats=sampled_stats)
+                       sampled_stats=sampled_stats,
+                       async_stats=async_stats)
     print(header)
     for r in rows:
         print(",".join(map(str, r)))
     if args.check:
-        # Exact graph gate first: no timing, no retry.
+        # Exact gates first: no timing, no retry.
         check_quorum_graph()
+        check_async_identity()
         # Timing gates on shared runners are noisy: a failing comparison
         # is re-measured ONCE (only the failing M / fleet config, not the
         # whole sweep) before it fails the run — a genuine regression
@@ -573,6 +702,22 @@ def main(argv=None):
             raise SystemExit(1)
         print(f"check: sampled (M={SAMPLED_M}, K={SAMPLED_K}) >= "
               f"{SAMPLED_GATE}x dense K={SAMPLED_K} throughput")
+
+        def re_async(_keys):
+            s = _bench_async(REPS[ASYNC_M])
+            async_stats.update(s)
+            x = s["scan_base"] / s["async"]
+            return {} if x >= ASYNC_GATE else {"async": x}
+
+        x = async_stats["scan_base"] / async_stats["async"]
+        bad = retry("async/scan",
+                    {} if x >= ASYNC_GATE else {"async": x}, re_async)
+        if bad:
+            print(f"FAIL: async event engine below {ASYNC_GATE}x the scan "
+                  f"baseline at matched work (M={ASYNC_M}, K=M): {bad}")
+            raise SystemExit(1)
+        print(f"check: async event engine >= {ASYNC_GATE}x scan at "
+              f"matched work (M={ASYNC_M}, K=M, E=R*M events)")
 
 
 if __name__ == "__main__":

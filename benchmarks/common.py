@@ -56,6 +56,7 @@ def make_cnn_spec(
     cnn_cfg=None,  # model registry name | cnn.CNNConfig | None (default per dataset)
     scenario=None,  # registered scenario name | None
     population=None,  # PopulationSpec | None (None: dense fed.n_devices)
+    async_spec=None,  # events.AsyncSpec | None (requires backend='async')
 ) -> ExperimentSpec:
     """The CNN-FL harness (Figs. 1-2) as an ExperimentSpec: data,
     partitions, population and model wiring all live in the spec;
@@ -74,7 +75,7 @@ def make_cnn_spec(
         fed=fed, model=model, dataset=dataset, n_train=n_train,
         n_test=n_test, seed=seed, scenario=scenario, backend=backend,
         impl=impl, with_eval=with_eval, label=label,
-        population=population)
+        population=population, async_spec=async_spec)
 
 
 def make_cnn_sim(*args, **kw) -> Simulator:

@@ -30,6 +30,7 @@ sys.path.insert(0, __file__.rsplit("/", 2)[0])
 from benchmarks import (  # noqa: E402
     ablation_compression,
     ablation_straggler,
+    async_vs_sync,
     bench_round_step,
     bench_study,
     fig1a_epsilon,
@@ -47,6 +48,7 @@ BENCHES = {
     "fig1c": fig1c_theta.run,
     "fig1d": fig1d_rounds.run,
     "fig2": fig2_defl_vs_fedavg.run,
+    "async": async_vs_sync.run,
     "straggler": ablation_straggler.run,
     "compression": ablation_compression.run,
     "roofline": roofline_table.run,

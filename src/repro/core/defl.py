@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -62,6 +62,17 @@ def make_plan(
     drives H is cohort-conditional. `participation` composes on top
     (dropout strikes the drawn cohort).
     """
+    prob, T_cm, update_bits = _plan_problem(
+        fed, pop, update_bits, wireless, participation, cohort_size)
+    sol = kkt.solve(prob, method=method).quantized(prob)
+    return _assemble_plan(sol, prob, T_cm, update_bits)
+
+
+def _plan_problem(fed, pop, update_bits, wireless, participation,
+                  cohort_size):
+    """The Alg. 1 problem setup shared by the scalar and batched solvers:
+    wire size -> Eq. 7 uplink straggler max, bottleneck compute slope,
+    participation-scaled effective M."""
     wireless = wireless or WirelessConfig()
     if fed.compress_updates:
         update_bits = update_bits / 4.0  # fp32 -> int8 quantized updates
@@ -71,7 +82,11 @@ def make_plan(
     M_eff = max(1, int(round(M_base * participation)))
     prob = kkt.DelayProblem(
         T_cm=T_cm, g=g, M=M_eff, eps=fed.epsilon, nu=fed.nu, c=fed.c)
-    sol = kkt.solve(prob, method=method).quantized(prob)
+    return prob, T_cm, update_bits
+
+
+def _assemble_plan(sol: kkt.DelaySolution, prob: kkt.DelayProblem,
+                   T_cm: float, update_bits: float) -> DEFLPlan:
     return DEFLPlan(
         b=int(sol.b),
         theta=sol.theta,
@@ -85,6 +100,45 @@ def make_plan(
         solution=sol,
         problem=prob,
     )
+
+
+@dataclass(frozen=True, eq=False)
+class PlanRequest:
+    """One arm's Alg. 1 solve in value form — the batchable unit of
+    `make_plan_batch`. Field-for-field the `make_plan` signature."""
+
+    fed: FedConfig
+    pop: delay.DevicePopulation
+    update_bits: float
+    wireless: Optional[WirelessConfig] = None
+    method: str = "closed_form"
+    participation: float = 1.0
+    cohort_size: Optional[int] = None
+
+
+def make_plan_batch(requests: Sequence[PlanRequest]) -> List[DEFLPlan]:
+    """`make_plan` over N requests with the KKT stage batched: requests
+    sharing a method are solved by ONE vectorized `kkt.solve_batch`
+    dispatch instead of N scalar solves. Each returned plan is
+    bit-identical to `make_plan(**request)` — solve_batch's closed form
+    is elementwise-exact and the problem setup/assembly code is shared
+    verbatim (tests/test_plan_batch.py asserts the identity).
+    """
+    reqs = list(requests)
+    pieces = [
+        _plan_problem(r.fed, r.pop, r.update_bits, r.wireless,
+                      r.participation, r.cohort_size)
+        for r in reqs]
+    by_method = {}
+    for i, r in enumerate(reqs):
+        by_method.setdefault(r.method, []).append(i)
+    plans: List[Optional[DEFLPlan]] = [None] * len(reqs)
+    for method, idxs in by_method.items():
+        sols = kkt.solve_batch([pieces[i][0] for i in idxs], method=method)
+        for i, sol in zip(idxs, sols):
+            prob, T_cm, bits = pieces[i]
+            plans[i] = _assemble_plan(sol.quantized(prob), prob, T_cm, bits)
+    return plans
 
 
 def deadline_plan(
@@ -184,6 +238,83 @@ def deadline_plan(
         T_cp=sol.T_cp,
         T_round=min(deadline, sol.T_round),
         overall_pred=sol.H * min(deadline, sol.T_round),
+        update_bits=update_bits, solution=sol, problem=prob)
+
+
+def async_plan(
+    fed: FedConfig,
+    pop: delay.DevicePopulation,
+    update_bits: float,
+    buffer_size: int,
+    wireless: Optional[WirelessConfig] = None,
+    b_max: float = 64.0,
+) -> DEFLPlan:
+    """Alg. 1 re-derived for buffered asynchronous aggregation
+    (backend='async', events.AsyncSpec(buffer_size=K)).
+
+    Two terms of the synchronous objective change:
+
+      * Eq. 8's round time is a straggler MAX (T_cm + nu alpha T_cp at
+        the slowest device). Under ack-at-aggregation every accepted
+        client is re-dispatched at an aggregation instant, so in steady
+        state client m contributes updates as a renewal process at rate
+        1/s_m with service span s_m = V t_cp_m + t_cm_m. The buffer
+        fills after K arrivals from the pooled process: the expected
+        aggregation period is T_agg = K / sum_m (1/s_m) — K over the
+        HARMONIC sum of client spans. A straggler hurts only in
+        proportion to its rate share, not as a hard round floor.
+      * Eq. 12's effective M is the number of updates averaged per
+        aggregation. Asynchronously that is the buffer size K — the
+        expected concurrency replaces the synchronous cohort M.
+
+    J(b, alpha) = H(b, alpha; M=K) * T_agg(b, alpha) has per-client
+    feasibility steps baked into neither term, but H's M-dependence and
+    T_agg's harmonic pooling make the objective non-smooth in K, so —
+    like `deadline_plan` — this sweeps the exact quantized decision
+    space (b in {2^n} up to b_max x alpha on a log grid, alpha >=
+    1/nu so V >= 1) rather than solving KKT conditions. The staleness
+    discount is a second-order effect on H (weights are normalized per
+    fill) and is not modeled.
+
+    Returns a DEFLPlan whose T_round/overall_pred are the async
+    T_agg / H*T_agg; `problem.M` records K (method 'async_grid').
+    """
+    wireless = wireless or WirelessConfig()
+    if fed.compress_updates:
+        update_bits = update_bits / 4.0
+    t_cm_m = delay.per_client_uplink_time(update_bits, wireless, pop.p, pop.h)
+    slopes = np.asarray(pop.G, np.float64) / np.asarray(pop.f, np.float64)
+    K = int(buffer_size)
+    if not 1 <= K <= slopes.size:
+        raise ValueError(
+            f"buffer_size must be in [1, M={slopes.size}], got {K}")
+
+    n_pow = max(int(np.floor(np.log2(b_max))), 0)
+    bs = 2.0 ** np.arange(0, n_pow + 1)
+    als = np.geomspace(1.0 / fed.nu, 20.0, 96)
+
+    best, best_J = None, np.inf
+    for b in bs:
+        for alpha in als:
+            V = max(int(round(fed.nu * alpha)), 1)
+            spans = V * slopes * b + t_cm_m  # per-client service span s_m
+            T_agg = K / float(np.sum(1.0 / spans))
+            H = kkt.communication_rounds_alpha(
+                b, alpha, K, fed.epsilon, fed.nu, fed.c)
+            J = H * T_agg
+            if J < best_J:
+                best, best_J = (float(b), float(alpha), float(T_agg)), J
+    b, alpha, T_agg = best
+    T_cm = float(np.max(t_cm_m))
+    g = float(max(pop.G / pop.f))
+    prob = kkt.DelayProblem(
+        T_cm=T_cm, g=g, M=K, eps=fed.epsilon, nu=fed.nu, c=fed.c)
+    sol = kkt.evaluate(prob, b, alpha, method="async_grid")
+    return DEFLPlan(
+        b=int(sol.b), theta=sol.theta, V=sol.V, H_pred=sol.H, T_cm=T_cm,
+        T_cp=sol.T_cp,
+        T_round=T_agg,
+        overall_pred=sol.H * T_agg,
         update_bits=update_bits, solution=sol, problem=prob)
 
 

@@ -189,3 +189,38 @@ def solve(prob: DelayProblem, method: str = "closed_form",
         grid = grid_search(prob, b_range=(1.0, b_max))
         return coordinate_descent(prob, grid.b, grid.alpha, b_max=b_max)
     raise ValueError(method)
+
+
+def solve_batch(probs, method: str = "closed_form",
+                b_max: float = 64.0):
+    """`solve` over N problems at once, bit-identical to the scalar path.
+
+    For method='closed_form' (the default, and what every plan=True study
+    arm runs) the Eq. 29 algebra is evaluated as ONE (N,)-vectorized
+    numpy dispatch instead of N scalar solves: every operation is an
+    elementwise IEEE-754 double op (mul/div/sqrt/max), so each lane is
+    bit-identical to `solve(probs[i])` — asserted in
+    tests/test_plan_batch.py. Other methods (golden-section coordinate
+    descent is inherently sequential per problem) fall back to the
+    scalar loop, which is trivially identical.
+
+    Returns a list of DelaySolution, one per problem, in order.
+    """
+    probs = list(probs)
+    if not probs:
+        return []
+    if method != "closed_form":
+        return [solve(p, method=method, b_max=b_max) for p in probs]
+    T_cm = np.asarray([p.T_cm for p in probs], np.float64)
+    g = np.asarray([p.g for p in probs], np.float64)
+    M = np.asarray([p.M for p in probs], np.float64)
+    eps = np.asarray([p.eps for p in probs], np.float64)
+    nu = np.asarray([p.nu for p in probs], np.float64)
+    c = np.asarray([p.c for p in probs], np.float64)
+    inv_g = 1.0 / g
+    alpha = np.sqrt(T_cm * inv_g / (M ** 2 * eps * nu ** 2))
+    b = 2.0 * c * M * np.sqrt(T_cm * inv_g * eps)
+    b = np.maximum(b, 1.0)
+    alpha = np.maximum(alpha, 1e-6)
+    return [evaluate(p, float(bi), float(ai), method="closed_form")
+            for p, bi, ai in zip(probs, b, alpha)]

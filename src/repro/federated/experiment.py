@@ -38,6 +38,7 @@ from repro.core import defl, delay
 from repro.data import BatchIterator, make_cifar_like, make_mnist_like
 from repro.data.pipeline import ClientDataPool
 from repro.federated import scenarios
+from repro.federated.events import AsyncSpec
 from repro.federated.faults import FaultModel
 from repro.federated.partition import (partition_dirichlet, partition_sizes,
                                        partition_virtual)
@@ -176,7 +177,14 @@ class ExperimentSpec:
                    cohort's K (defl.make_plan cohort_size).
     batch_cap      dataset-bounded cap applied to a planned b* (paper
                    §VI-B discussion); None disables.
-    backend        'scan' (default) | 'batched' | 'loop'.
+    backend        'scan' (default) | 'batched' | 'loop' | 'async'.
+    async_spec     events.AsyncSpec for backend='async': buffered
+                   staleness-weighted aggregation over a compiled
+                   device-side event queue. Requires backend='async'
+                   (and vice versa). Mutually exclusive with sampled
+                   participation (population.cohort), shard_clients and
+                   quorum/update-norm fault guards — the validation
+                   errors name the offending fields.
     """
 
     fed: FedConfig = FedConfig()
@@ -200,6 +208,48 @@ class ExperimentSpec:
     impl: str = "xla"
     with_eval: bool = True
     label: str = ""
+    async_spec: Optional[AsyncSpec] = None
+
+    def __post_init__(self):
+        # Satellite knob-compatibility contract: mutually-exclusive
+        # combinations fail at spec construction, naming the fields, so
+        # a bad sweep dies before any build()/compile cost is paid.
+        if self.backend == "async" and self.async_spec is None:
+            raise ValueError(
+                "ExperimentSpec: backend='async' requires async_spec="
+                "AsyncSpec(...) (fields backend, async_spec)")
+        if self.async_spec is not None and self.backend != "async":
+            raise ValueError(
+                f"ExperimentSpec: async_spec is set but backend="
+                f"{self.backend!r}; asynchronous aggregation requires "
+                "backend='async' (fields backend, async_spec)")
+        if self.backend != "async":
+            return
+        if self.population is not None and self.population.cohort is not None:
+            raise ValueError(
+                "ExperimentSpec: backend='async' is incompatible with "
+                "sampled participation (fields backend, population.cohort) "
+                "— the event queue tracks every client; use a dense "
+                "PopulationSpec(M) or drop the CohortSpec")
+        if self.shard_clients:
+            raise ValueError(
+                "ExperimentSpec: backend='async' is incompatible with "
+                "client sharding (fields backend, shard_clients) — the "
+                "event queue pops one client per step, which does not "
+                "shard across devices")
+        fm = self.effective_faults()
+        if fm is not None and fm.min_quorum is not None:
+            raise ValueError(
+                "ExperimentSpec: backend='async' is incompatible with "
+                "quorum gating (fields backend, faults.min_quorum) — "
+                "rounds are buffer fills, not synchronized cohorts; use "
+                "AsyncSpec.buffer_size to set the fill threshold")
+        if fm is not None and fm.max_update_norm is not None:
+            raise ValueError(
+                "ExperimentSpec: backend='async' is incompatible with "
+                "update-norm clipping (fields backend, "
+                "faults.max_update_norm); deadline/retransmission/crash "
+                "fault channels do compose with async")
 
     def replace(self, **kw) -> "ExperimentSpec":
         return dataclasses.replace(self, **kw)
@@ -296,6 +346,33 @@ class ExperimentSpec:
         plan=True (batch capped at `batch_cap`, wire size left to the
         simulator's exact accounting), `fed` unchanged otherwise."""
         return self._fed_with_plan(self.resolve_plan())
+
+    def plan_request(self) -> Optional[defl.PlanRequest]:
+        """The arm's Alg. 1 solve in batchable value form: a
+        `defl.PlanRequest` when `resolve_plan()` reduces to a plain
+        `defl.make_plan` (plan=True and no deadline re-derivation), else
+        None — fixed-(b, V) baselines solve nothing and deadline-fault
+        scenarios re-derive over the truncated delay model, so both keep
+        their bespoke scalar paths. `Study.plans()` collects these to
+        solve all batchable arms in one vectorized KKT dispatch,
+        bit-identical to per-arm `analytic_plan()`."""
+        if not self.plan:
+            return None
+        participation = 1.0
+        if self.scenario is not None:
+            sc = scenarios.get(self.scenario)
+            fm = sc.faults
+            if fm is not None and fm.active and (
+                    fm.deadline is not None
+                    or fm.deadline_factor is not None):
+                return None
+            participation = sc.expected_participation
+        cohort = self.cohort_spec()
+        return defl.PlanRequest(
+            fed=self.base_fed(), pop=self.device_population(),
+            update_bits=self.update_bits(), wireless=self.wireless,
+            method=self.plan_method, participation=participation,
+            cohort_size=None if cohort is None else cohort.K)
 
     def analytic_plan(self) -> defl.DEFLPlan:
         """The arm's delay-model operating point, always available: the
@@ -411,7 +488,8 @@ class ExperimentSpec:
         envelope_key = (cfg, fed.n_devices, fed.lr, fed.compress_updates,
                         self.impl,
                         self.scenario is not None or eff_faults is not None,
-                        eff_faults, cohort, self.shard_clients)
+                        eff_faults, cohort, self.shard_clients,
+                        self.async_spec)
         return Simulator(
             functools.partial(cnn.cnn_loss, cfg), params, data_factory,
             data_sizes, fed, sgd(fed.lr), pop,
@@ -423,7 +501,8 @@ class ExperimentSpec:
             cohort=None if cohort is None else cohort.K,
             cohort_sampler="uniform" if cohort is None else cohort.sampler,
             cohort_spare=0 if cohort is None else cohort.spare,
-            shard_clients=self.shard_clients)
+            shard_clients=self.shard_clients,
+            async_spec=self.async_spec)
 
 
 # ---------------------------------------------------------------------------
@@ -474,6 +553,12 @@ register("mnist_sampled", ExperimentSpec(
     model="mnist_cnn_small", dataset="mnist", n_train=240, n_test=80,
     scenario="dropout",
     label="mnist_sampled"))
+register("mnist_async", ExperimentSpec(
+    fed=FedConfig(n_devices=10, batch_size=8, theta=0.62, lr=0.05),
+    model="mnist_cnn_small", dataset="mnist", n_train=240, n_test=80,
+    scenario="stragglers", backend="async",
+    async_spec=AsyncSpec(buffer_size=4, staleness="poly"),
+    label="mnist_async"))
 register("mnist_storm", ExperimentSpec(
     fed=FedConfig(n_devices=10, epsilon=0.01, nu=2.0, c=CALIBRATED_C,
                   lr=0.05),

@@ -699,6 +699,230 @@ def build_round_chunk(
     return chunk_step
 
 
+def build_async_chunk(
+    loss_fn: Callable,
+    opt: Optimizer,
+    V: int,
+    n_clients: int,
+    spec,  # events.AsyncSpec — static policy (buffer size, staleness, mode)
+    impl: str = "xla",
+    batch_from: Callable = None,
+    compress: bool = False,
+):
+    """Fuse a whole event-budget chunk of the asynchronous server into one
+    `jax.lax.scan`: the scan axis is ARRIVAL EVENTS, not rounds, and the
+    carry holds a device-side pending-update structure — a (C,) finish-time
+    array whose argmin is the compiled analogue of a priority-queue pop.
+    No Python event loop: E events cost one dispatch.
+
+    Returns chunk_step(params_C, opt_C, key, async_c, sizes, data, xs)
+    -> (params_C', opt_C', key', async_c', ys).
+
+    async_c is the async carry dict (the extra SimState leaves):
+      params_g   the server's global model (unstacked param tree)
+      buf        staleness-weighted delta accumulator (f32 param tree)
+      buf_w      f32 sum of accepted weights in the buffer
+      cnt        int32 number of buffered updates
+      loss_sum   f32 sum of accepted updates' local losses
+      t_finish   (C,) f32 ABSOLUTE finish time of each client's in-flight
+                 dispatch (the pending-update structure); +inf marks a
+                 client blocked awaiting the aggregation ack
+      t_next     (C,) f32 service time of the NEXT dispatch a blocked
+                 client was handed (applied at its release)
+      now        f32 event clock (arrival time of the last valid event)
+      version    int32 server aggregation count
+      version_C  (C,) int32 server version each client was dispatched at
+      drop_C     (C,) f32 1.0 where the in-flight update will be lost
+                 (participation mask / fault realization, resolved at
+                 dispatch time)
+
+    params_C/opt_C keep the synchronous layout — row c is the params/opt
+    snapshot client c was DISPATCHED with (rows now differ between
+    aggregations, unlike the sync backends' identical post-broadcast rows).
+
+    xs leaves, every one stacked on a leading (E,) event axis:
+      t_svc      (E, C) f32 service time (V t_cp + effective uplink) of the
+                 dispatch HANDED OUT at this event, drawn M-wide per event
+                 (prefix-stable stream consumption); only the arriving
+                 client's column is consumed
+      drop_next  (E, C) f32 loss indicator for that dispatch
+      valid      (E,) padding flag — invalid events run but every state
+                 write is masked out, exactly the sync chunk's ragged-tail
+                 trick, so one trace serves every chunk of a run
+      idx/batches  the ARRIVING client's V local batches — (E, V, B) int32
+                 gather indices (device-resident data) or (E, V, ...)
+                 pre-stacked host batches. The host knows who arrives at
+                 each event ahead of dispatch via the f32 schedule twin
+                 (events.twin_step): jnp.argmin == np.argmin (first-min
+                 tie-break) over IEEE-identical f32 adds.
+
+    Per event: pop c = argmin(t_finish); run c's V local steps from its
+    dispatch snapshot; weight the delta by w = w_stale(version -
+    version_C[c]) * sizes[c] (events.staleness_weight); a non-dropped
+    update enters the buffer, and the K-th buffered update fires the
+    aggregation params_g += buf / buf_w (mode='fedbuff' — a weighted mean
+    of deltas, which in the sync limit K=M / uniform scenario equals
+    FedAvg's weighted mean up to the delta-form association; see
+    EXPERIMENTS.md §Asynchronous execution) or the immediate mixing
+    params_g = (1 - lr w_stale) params_g + lr w_stale new_p
+    (mode='fedasync', K=1). Re-dispatch is ACK-AT-AGGREGATION: an
+    accepted update's client blocks until the aggregation that consumes
+    its update, then re-dispatches from the fresh aggregate at the fill
+    instant (finish time now + t_svc[e, c]); a dropped update's client
+    re-dispatches immediately from the current global model. The K=M
+    sync limit is therefore EXACTLY FedAvg's broadcast schedule.
+
+    ys per event: t_event, client, dropped, agg (buffer filled here),
+    loss_agg (mean buffered loss at a fill, NaN otherwise), staleness,
+    version and cnt after the event — the event-aligned metrics the
+    simulator turns into per-aggregation RoundRecords.
+    """
+    from repro.federated import compression, events as ev
+
+    local = local_steps_fn(loss_fn, opt)
+    K = int(spec.buffer_size)
+    fedasync = spec.mode == "fedasync"
+
+    def chunk_step(params_C, opt_C, key, async_c, sizes, data, xs):
+        sizes_f32 = sizes.astype(jnp.float32)
+
+        def body(carry, x):
+            params_C, opt_C, k, a = carry
+            valid = x["valid"]
+            t_finish = a["t_finish"]
+            # Priority-queue pop, compiled: earliest finisher arrives.
+            # First-minimum tie-break == np.argmin, the twin contract.
+            c = jnp.argmin(t_finish)
+            now = t_finish[c]
+            p_c = jax.tree.map(lambda t: t[c], params_C)
+            s_c = jax.tree.map(lambda t: t[c], opt_C)
+            if batch_from is not None:
+                batches = batch_from(data, x["idx"])
+            else:
+                batches = x["batches"]
+            new_p, new_s, loss = local(p_c, s_c, batches)
+            delta = jax.tree.map(
+                lambda n, o: n.astype(jnp.float32) - o.astype(jnp.float32),
+                new_p, p_c)
+            new_key = k
+            if compress:
+                # One quantizer key per event — the async twin of the sync
+                # backends' per-round sequential_client_keys schedule.
+                new_key, keys_1 = compression.sequential_client_keys(k, 1)
+                delta = compression.decompress_update(
+                    compression.compress_update(
+                        delta, keys_1[0], impl=impl), impl=impl)
+            drop = a["drop_C"][c]
+            stale = (a["version"] - a["version_C"][c]).astype(jnp.float32)
+            ws = ev.staleness_weight(spec, stale, xp=jnp)
+            w = ws * sizes_f32[c]
+            take = jnp.logical_and(valid, drop == 0)
+            takef = take.astype(jnp.float32)
+            onehot_c = jnp.arange(n_clients) == c
+            # Buffer entry (exact +0.0 when dropped/invalid — the update
+            # cannot perturb the aggregate's bits, same discipline as the
+            # sync path's masked weighted sum).
+            buf = jax.tree.map(lambda b, d: b + takef * (w * d),
+                               a["buf"], delta)
+            buf_w = a["buf_w"] + takef * w
+            cnt = a["cnt"] + take.astype(jnp.int32)
+            loss_sum = a["loss_sum"] + takef * loss
+            fill = take if fedasync else jnp.logical_and(take, cnt >= K)
+            if fedasync:
+                am = jnp.where(fill, jnp.float32(spec.server_lr) * ws, 0.0)
+                params_g = jax.tree.map(
+                    lambda g, n: ((jnp.float32(1.0) - am)
+                                  * g.astype(jnp.float32)
+                                  + am * n.astype(jnp.float32)
+                                  ).astype(g.dtype),
+                    a["params_g"], new_p)
+            else:
+                denom = jnp.where(fill, buf_w, jnp.float32(1.0))
+                params_g = jax.tree.map(
+                    lambda g, b: jnp.where(
+                        fill, g.astype(jnp.float32) + b / denom,
+                        g.astype(jnp.float32)).astype(g.dtype),
+                    a["params_g"], buf)
+            version = a["version"] + fill.astype(jnp.int32)
+            loss_agg = jnp.where(
+                fill, loss_sum / jnp.maximum(cnt.astype(jnp.float32), 1.0),
+                jnp.nan)
+            # Aggregation drains the buffer.
+            buf = jax.tree.map(
+                lambda b: jnp.where(fill, jnp.zeros_like(b), b), buf)
+            buf_w = jnp.where(fill, jnp.float32(0.0), buf_w)
+            cnt = jnp.where(fill, jnp.int32(0), cnt)
+            loss_sum = jnp.where(fill, jnp.float32(0.0), loss_sum)
+            # Ack-at-aggregation re-dispatch (all writes valid-masked so
+            # padded events are exact no-ops): an ACCEPTED update's client
+            # blocks (finish time +inf) holding its next service draw, and
+            # is released — re-dispatched FROM THE FRESH AGGREGATE at the
+            # fill instant — by the aggregation that consumes its update
+            # (the server's model broadcast is the ack). A DROPPED
+            # update's client re-dispatches immediately from the current
+            # global model (the server never saw it). This is what makes
+            # the K=M sync limit EXACT: every generation starts from the
+            # just-aggregated model, like FedAvg's broadcast (see
+            # EXPERIMENTS.md §Asynchronous execution).
+            t_next = jax.tree.map(
+                lambda t: t.at[c].set(
+                    jnp.where(take, x["t_svc"][c], t[c])), a["t_next"])
+            t_fin = t_finish.at[c].set(jnp.where(
+                valid,
+                jnp.where(take, jnp.float32(jnp.inf),
+                          now + x["t_svc"][c]),
+                t_finish[c]))
+            idle = jnp.isinf(t_fin)
+            release = jnp.logical_and(fill, idle)  # includes c itself
+            t_fin = jnp.where(release, now + t_next, t_fin)
+            version_C = a["version_C"].at[c].set(
+                jnp.where(valid, version, a["version_C"][c]))
+            version_C = jnp.where(release, version, version_C)
+            # Model binding: dropped -> rebind row c to the current global
+            # now; released -> rebind every idle row to the fresh
+            # aggregate. (fill == False on a drop, so params_g is the
+            # right model in both cases.)
+            bind = jnp.logical_or(
+                release,
+                jnp.logical_and(onehot_c,
+                                jnp.logical_and(valid,
+                                                jnp.logical_not(take))))
+            params_C = jax.tree.map(
+                lambda t, g: jnp.where(
+                    bind.reshape((-1,) + (1,) * (t.ndim - 1)),
+                    g.astype(t.dtype), t),
+                params_C, params_g)
+            opt_C = jax.tree.map(
+                lambda t, n: t.at[c].set(
+                    jnp.where(valid, n.astype(t.dtype), t[c])),
+                opt_C, new_s)
+            a2 = {
+                "params_g": params_g,
+                "buf": buf,
+                "buf_w": buf_w,
+                "cnt": cnt,
+                "loss_sum": loss_sum,
+                "t_finish": t_fin,
+                "t_next": t_next,
+                "now": jnp.where(valid, now, a["now"]),
+                "version": version,
+                "version_C": version_C,
+                "drop_C": a["drop_C"].at[c].set(
+                    jnp.where(valid, x["drop_next"][c], drop)),
+            }
+            ys = {"t_event": now, "client": c.astype(jnp.int32),
+                  "dropped": drop, "agg": fill, "loss_agg": loss_agg,
+                  "staleness": jnp.where(take, stale, 0.0),
+                  "version": version, "cnt": cnt}
+            return (params_C, opt_C, jnp.where(valid, new_key, k), a2), ys
+
+        (params_C, opt_C, key, async_c), ys = jax.lax.scan(
+            body, (params_C, opt_C, key, async_c), xs)
+        return params_C, opt_C, key, async_c, ys
+
+    return chunk_step
+
+
 def build_fleet_chunk(chunk_step: Callable, envelope: bool = False,
                       sampled: bool = False) -> Callable:
     """vmap a `build_round_chunk` step over a leading fleet axis S.

@@ -198,6 +198,22 @@ class SimState:
                 expose the snapshot protocol (then the data source is
                 assumed stateless/deterministic).
 
+    Asynchronous backend (backend='async') extension — all None/0 on the
+    synchronous backends, so sync states flatten/signature/checkpoint
+    exactly as before:
+      async_c     the device-side event-queue carry (a 4th pytree child):
+                  global model, staleness-weighted buffer, per-client
+                  finish times / dispatch versions / drop flags — see
+                  mesh_rounds.build_async_chunk. Mid-buffer states
+                  checkpoint/resume bit-identically because the whole
+                  pending-update structure lives here.
+      event       arrival-event cursor (host int): how many events the
+                  run has consumed (state.round counts AGGREGATIONS).
+      async_host  f64 dispatch bookkeeping for the history records
+                  {'t_cm_disp' (C,), 'attempts_disp' (C,)}: each
+                  in-flight update's effective uplink seconds and
+                  attempt count, fixed at its dispatch.
+
     States are produced by `Simulator.init` and threaded through
     state-in/state-out methods; `save_state`/`load_state` round-trip one
     through disk for checkpoint/resume.
@@ -224,18 +240,25 @@ class SimState:
     sim_time: float = 0.0
     stream: Optional[dict] = None
     data: Optional[tuple] = None
+    async_c: Optional[Any] = None
+    event: int = 0
+    async_host: Optional[dict] = None
 
 
 def _simstate_flatten(s: SimState):
-    return ((s.params_C, s.opt_C, s.key),
-            (s.seed, s.round, s.sim_time, s.stream, s.data))
+    # async_c joins the device children (None is an empty subtree, so a
+    # synchronous state's treedef carries no extra leaves).
+    return ((s.params_C, s.opt_C, s.key, s.async_c),
+            (s.seed, s.round, s.sim_time, s.stream, s.data, s.event,
+             s.async_host))
 
 
 def _simstate_unflatten(aux, children):
-    params_C, opt_C, key = children
-    seed, rnd, sim_time, stream, data = aux
+    params_C, opt_C, key, async_c = children
+    seed, rnd, sim_time, stream, data, event, async_host = aux
     return SimState(params_C=params_C, opt_C=opt_C, key=key, seed=seed,
-                    round=rnd, sim_time=sim_time, stream=stream, data=data)
+                    round=rnd, sim_time=sim_time, stream=stream, data=data,
+                    async_c=async_c, event=event, async_host=async_host)
 
 
 jax.tree_util.register_pytree_node(
@@ -254,6 +277,11 @@ def _state_signature(state: SimState) -> tuple:
     truncated/corrupt payload) before JAX hits a cryptic unflatten or
     donation shape error deep in the first compiled step."""
     trio = (state.params_C, state.opt_C, state.key)
+    if getattr(state, "async_c", None) is not None:
+        # Async states append the event-queue carry; synchronous states
+        # keep the historical 3-tuple signature byte-identical, so every
+        # pre-async checkpoint still validates.
+        trio = trio + (state.async_c,)
     treedef = str(jax.tree.structure(trio))
     leaves = tuple(
         (tuple(np.shape(x)), str(getattr(x, "dtype", type(x).__name__)))
@@ -309,7 +337,9 @@ def load_state(path: str, like: Optional[SimState] = None) -> SimState:
     pytree/unflatten failure deep in JAX. Pass `like=` (any SimState from
     the target Simulator, e.g. `sim.init()`) to additionally verify the
     checkpoint matches that simulator's shapes before running it.
-    Legacy raw-pickle checkpoints (pre-envelope) still load."""
+    Legacy raw-pickle checkpoints (pre-envelope) still load; checkpoints
+    written before the async backend existed (no async_c/event fields in
+    the pickled dataclass) are fixed up with the synchronous defaults."""
     try:
         with open(path, "rb") as f:
             payload = pickle.load(f)
@@ -336,6 +366,14 @@ def load_state(path: str, like: Optional[SimState] = None) -> SimState:
                 "match the payload's leaves")
     else:
         raise ValueError(f"{path!r} does not hold a SimState")
+    if not hasattr(state, "async_c"):
+        # Pre-async checkpoint: pickle restored the old dataclass __dict__
+        # (bypassing __init__), so the new fields are absent entirely —
+        # install the synchronous defaults so dataclasses.replace and the
+        # pytree flatten see a complete instance.
+        object.__setattr__(state, "async_c", None)
+        object.__setattr__(state, "event", 0)
+        object.__setattr__(state, "async_host", None)
     if like is not None:
         want, got = _state_signature(like), _state_signature(state)
         if want != got:
@@ -452,6 +490,7 @@ class Simulator:
         cohort_sampler: str = "uniform",  # 'uniform' | 'weighted' (by D_m)
         cohort_spare: int = 0,  # over-provisioned candidates per round
         shard_clients: bool = False,  # shard the client axis over devices
+        async_spec: Optional[Any] = None,  # events.AsyncSpec (backend='async')
     ):
         """eval_batch_fn evaluates a whole stacked member axis at once —
         (S, ...) param leaves -> dict of (S,) metrics — so fleet/study
@@ -500,9 +539,40 @@ class Simulator:
             eval_batch_fn=eval_batch_fn, masked_loss_fn=masked_loss_fn,
             envelope_key=envelope_key, faults=faults, cohort=cohort,
             cohort_sampler=cohort_sampler, cohort_spare=cohort_spare,
-            shard_clients=shard_clients)
-        if backend not in ("scan", "batched", "loop"):
+            shard_clients=shard_clients, async_spec=async_spec)
+        if backend not in ("scan", "batched", "loop", "async"):
             raise ValueError(f"unknown backend {backend!r}")
+        if backend == "async" and async_spec is None:
+            raise ValueError(
+                "backend='async' needs an aggregation policy — pass "
+                "async_spec=events.AsyncSpec(buffer_size=K, ...)")
+        if (async_spec is not None
+                and async_spec.buffer_size > fed.n_devices):
+            raise ValueError(
+                f"AsyncSpec.buffer_size ({async_spec.buffer_size}) must "
+                f"not exceed n_devices ({fed.n_devices}): accepted "
+                "updates block their client until the consuming "
+                "aggregation, so a buffer larger than the population "
+                "could never fill")
+        if async_spec is not None and backend != "async":
+            raise ValueError(
+                f"async_spec is only meaningful with backend='async' "
+                f"(got backend={backend!r}) — drop it or switch backends")
+        if backend == "async":
+            if cohort is not None:
+                raise ValueError(
+                    "backend='async' and cohort=K (sampled participation) "
+                    "are mutually exclusive: the event queue already "
+                    "schedules per-client work continuously, so there is "
+                    "no per-round cohort to draw. Drop cohort (every "
+                    "client stays in flight) or use backend='scan'.")
+            if shard_clients:
+                raise ValueError(
+                    "backend='async' and shard_clients are mutually "
+                    "exclusive: the event scan runs ONE client per event "
+                    "(nothing to shard over a client mesh). Drop "
+                    "shard_clients or use backend='scan'.")
+        self._async = async_spec if backend == "async" else None
         if cohort_sampler not in ("uniform", "weighted"):
             raise ValueError(
                 f"unknown cohort_sampler {cohort_sampler!r}; "
@@ -559,6 +629,10 @@ class Simulator:
             # neutral 'uniform' scenario so the stream exists (same
             # pattern as the faults overlay above).
             self.scenario = scenarios.get("uniform")
+        if self._async is not None and self.scenario is None:
+            # The event queue draws per-dispatch service times from the
+            # realization stream — promote like the sampled path does.
+            self.scenario = scenarios.get("uniform")
         fm = self.scenario.faults if self.scenario is not None else None
         self._faults = fm if (fm is not None and fm.active) else None
         self._guard = None
@@ -579,6 +653,24 @@ class Simulator:
             if q is not None:
                 self._quorum = q
                 self._quorum_policy = self._faults.quorum_policy
+        if self._async is not None and self._quorum is not None:
+            raise ValueError(
+                "backend='async' and FaultModel.min_quorum are mutually "
+                "exclusive: the buffered server aggregates whenever "
+                "buffer_size updates arrive — there is no per-round "
+                "participant count to gate. Drop min_quorum from the "
+                "FaultModel (AsyncSpec.buffer_size IS the async quorum) "
+                "or use backend='scan'.")
+        if (self._async is not None and self._faults is not None
+                and self._faults.max_update_norm is not None):
+            raise ValueError(
+                "backend='async' and FaultModel.max_update_norm are "
+                "mutually exclusive: update sanitation runs at the sync "
+                "round step's participant axis, which the event scan "
+                "does not have. Drop max_update_norm or use "
+                "backend='scan'. (The always-on defaults "
+                "reject_nonfinite/divergence_guard are round-level "
+                "guards and are inert on the async backend.)")
         # Envelope-form graphs: when the masked loss is available, the
         # compiled batched/scan graphs run mesh_rounds' (V, b)-envelope
         # round step at the TRIVIAL envelope (V_env=V, B_env=b, all-ones
@@ -589,7 +681,10 @@ class Simulator:
         # arm running padded inside a Study group (observed: padded ==
         # trivial-envelope bit-for-bit; plain == neither). The loop
         # backend keeps the plain loss (its parity is tolerance-based).
-        self._envelope = masked_loss_fn is not None and backend != "loop"
+        # (The async event scan runs one client per event — there is no
+        # member axis to envelope-pad, so async arms run solo in a Study.)
+        self._envelope = (masked_loss_fn is not None
+                          and backend not in ("loop", "async"))
         self._env_cache: Optional[dict] = None
         probe = self._make_iters(fed.seed)
         assert len(probe) == fed.n_devices == pop.n
@@ -605,6 +700,13 @@ class Simulator:
                 "state between rounds (cohort lanes change owners every "
                 "round; clients re-initialize from the global model) — "
                 "use a stateless local optimizer (plain SGD)")
+        if (self._async is not None
+                and jax.tree.leaves(opt.init(self._init_params))):
+            raise ValueError(
+                "backend='async' re-dispatches every client from the "
+                "current global model, so per-client optimizer state "
+                "carried across stale dispatches is ill-defined — use a "
+                "stateless local optimizer (plain SGD)")
         # Sharded client axis: FedAvg aggregation as a shard_map psum
         # over a 1-D 'clients' device mesh.
         self._mesh = self._param_specs = None
@@ -654,6 +756,10 @@ class Simulator:
         self._fleet_base = None
         if backend == "loop":
             self.local_update = make_local_update(loss_fn, opt)
+        elif backend == "async":
+            # The event scan renormalizes size weights in-graph per
+            # aggregation; only the raw sizes ship.
+            self._sizes_f32 = jnp.asarray(np.asarray(data_sizes), jnp.float32)
         else:
             w = jnp.asarray(np.asarray(data_sizes), jnp.float32)
             # Legacy path: host-normalized FedAvg weights. The scenario path
@@ -663,27 +769,7 @@ class Simulator:
             self._sizes_f32 = w
             self._round_fn = self._build_batched_round()
         if backend == "scan":
-            # Device-resident data path: when every client iterator draws
-            # from one shared dataset and speaks the index protocol
-            # (data.BatchIterator), upload the backing arrays once and
-            # gather batches in-graph — per chunk only (R, C, V, B) int32
-            # indices cross the host->device boundary. Anything else falls
-            # back to pre-stacked (R, C, V, ...) host batches per chunk.
-            self._data_dev = self._batch_from = None
-            its = probe
-            if hasattr(its, "client"):  # ClientDataPool: one shared dataset
-                self._data_dev = jax.tree.map(
-                    jnp.asarray, its.device_arrays())
-                self._batch_from = its.batch_from
-            elif (its
-                    and all(hasattr(it, "next_indices")
-                            and hasattr(it, "device_arrays") for it in its)
-                    and getattr(its[0], "data", None) is not None
-                    and len({id(getattr(it, "data", None))
-                             for it in its}) == 1):
-                self._data_dev = jax.tree.map(
-                    jnp.asarray, its[0].device_arrays())
-                self._batch_from = type(its[0]).batch_from
+            self._detect_device_data(probe)
             self._t_cp_dev = jnp.asarray(self._t_cp_clients, jnp.float32)
             self._chunk_raw = self._build_scan_chunk()
             # Same donation contract as the batched round step, amortized
@@ -692,6 +778,50 @@ class Simulator:
             # (R, ...) shape and a ragged final chunk pads to R under the
             # valid flag, so a whole run compiles exactly once.
             self._chunk_fn = jax.jit(self._chunk_raw, donate_argnums=(0, 1, 2))
+        if backend == "async":
+            from repro.federated import events as _events
+
+            self._events_mod = _events
+            self._detect_device_data(probe)
+            # Static per-chunk event budget E: every chunk pads its event
+            # axis to E (the ragged-tail trick on the event axis), so one
+            # trace serves the whole run. The default covers several full
+            # population turnovers (or buffer fills) per dispatch.
+            self._async_E = int(
+                self._async.event_budget
+                if self._async.event_budget is not None
+                else 8 * max(fed.n_devices, self._async.buffer_size))
+            self._chunk_raw = mesh_rounds.build_async_chunk(
+                loss_fn, self.opt, fed.local_rounds, fed.n_devices,
+                self._async, impl=self.impl, batch_from=self._batch_from,
+                compress=fed.compress_updates)
+            # params/opt/key AND the async carry are donated: the event
+            # queue's finish-time/buffer leaves reuse their buffers across
+            # chunks exactly like the sync carry trio.
+            self._chunk_fn = jax.jit(
+                self._chunk_raw, donate_argnums=(0, 1, 2, 3))
+
+    def _detect_device_data(self, its) -> None:
+        """Device-resident data path: when every client iterator draws
+        from one shared dataset and speaks the index protocol
+        (data.BatchIterator), upload the backing arrays once and gather
+        batches in-graph — per chunk only int32 index arrays cross the
+        host->device boundary. Anything else falls back to pre-stacked
+        host batches per chunk."""
+        self._data_dev = self._batch_from = None
+        if hasattr(its, "client"):  # ClientDataPool: one shared dataset
+            self._data_dev = jax.tree.map(
+                jnp.asarray, its.device_arrays())
+            self._batch_from = its.batch_from
+        elif (its
+                and all(hasattr(it, "next_indices")
+                        and hasattr(it, "device_arrays") for it in its)
+                and getattr(its[0], "data", None) is not None
+                and len({id(getattr(it, "data", None))
+                         for it in its}) == 1):
+            self._data_dev = jax.tree.map(
+                jnp.asarray, its[0].device_arrays())
+            self._batch_from = type(its[0]).batch_from
 
     # -- state construction -------------------------------------------------
     def init(self, seed: Optional[int] = None) -> SimState:
@@ -719,6 +849,36 @@ class Simulator:
             params = mesh_rounds.replicate_clients(self._init_params, C)
             opt_C = jax.vmap(
                 lambda _: self.opt.init(self._init_params))(jnp.arange(C))
+        if self.backend == "async":
+            # The initial dispatch hands every client version-0 work at
+            # t=0, which consumes ONE realization draw — so the stream
+            # position is snapshotted into the state here (unlike the
+            # sync backends' "factory-fresh" None).
+            stream = self.scenario.stream(self.pop, seed)
+            t_svc0, drop0, t_cm0, att0 = self._async_dispatch_draw(stream)
+            async_c = {
+                "params_g": jax.tree.map(lambda x: x.copy(),
+                                         self._init_params),
+                "buf": jax.tree.map(
+                    lambda x: jnp.zeros(x.shape, jnp.float32),
+                    self._init_params),
+                "buf_w": jnp.float32(0.0),
+                "cnt": jnp.int32(0),
+                "loss_sum": jnp.float32(0.0),
+                "t_finish": jnp.asarray(t_svc0),
+                "t_next": jnp.zeros(C, jnp.float32),
+                "now": jnp.float32(0.0),
+                "version": jnp.int32(0),
+                "version_C": jnp.zeros(C, jnp.int32),
+                "drop_C": jnp.asarray(drop0),
+            }
+            async_host = {"t_cm_disp": np.asarray(t_cm0, np.float64),
+                          "attempts_disp": np.asarray(att0, np.float64),
+                          "bits_acc": 0.0}
+            return SimState(params_C=params, opt_C=opt_C,
+                            key=jax.random.PRNGKey(seed), seed=seed,
+                            stream=stream.state(), async_c=async_c,
+                            async_host=async_host)
         # stream/data stay None — "factory-fresh at `seed`", which is
         # exactly what _materialize constructs with no fast-forward, so
         # init() never has to build (and immediately discard) the
@@ -767,19 +927,23 @@ class Simulator:
         return iters, stream
 
     def _rebuild_state(self, state, params_C, opt_C, key, rnd, sim_time,
-                       iters, stream) -> SimState:
+                       iters, stream, **extra) -> SimState:
         return dataclasses.replace(
             state, params_C=params_C, opt_C=opt_C, key=key, round=int(rnd),
             sim_time=float(sim_time),
             stream=stream.state() if stream is not None else None,
-            data=self._snapshot_iters(iters))
+            data=self._snapshot_iters(iters), **extra)
 
     # -- state views --------------------------------------------------------
     def params(self, state: SimState) -> Any:
         """The global model in `state` (post-aggregation every client row
-        is equal, so row 0 of the stacked state is the global model)."""
+        is equal, so row 0 of the stacked state is the global model; the
+        async backend carries it explicitly — client rows are dispatch
+        snapshots that differ between aggregations)."""
         if self.backend == "loop":
             return state.params_C
+        if self.backend == "async":
+            return state.async_c["params_g"]
         return jax.tree.map(lambda x: x[0], state.params_C)
 
     @staticmethod
@@ -796,6 +960,10 @@ class Simulator:
         padding are traced values, never new shapes/constants."""
         if self.backend == "loop":
             return 0
+        if self.backend == "async":
+            # One compiled event-scan chunk serves the whole run: every
+            # chunk pads its event axis to the static budget E.
+            return int(self._chunk_fn._cache_size())
         count = int(self._round_fn._cache_size())
         if self.backend == "scan":
             count += int(self._chunk_fn._cache_size())
@@ -1138,6 +1306,11 @@ class Simulator:
         instead of recomputing. The scan backend shares the batched
         backend's per-round step here (same stacked state layout);
         chunking only applies inside run()."""
+        if self.backend == "async":
+            raise ValueError(
+                "run_round is round-synchronous; backend='async' advances "
+                "by arrival events, not rounds — use run() (aggregation "
+                "cadence) or run_events() (exact event counts).")
         if real is not None and self.scenario is None:
             raise ValueError(
                 "run_round(real=...) was given a scenario realization but "
@@ -1537,6 +1710,270 @@ class Simulator:
             records[-1].sim_time, iters, stream)
         return new_state, records
 
+    # -- asynchronous (event-driven) execution ------------------------------
+    def _async_dispatch_draw(self, stream):
+        """One M-wide dispatch realization from the scenario stream:
+        (t_svc f32, drop f32, t_cm f64, attempts f64), all (M,).
+
+        t_svc is the full service time V*t_cp + effective uplink (f32 —
+        it feeds the f32 finish-time schedule, host twin and in-graph
+        alike). drop marks dispatches whose update will be LOST: the
+        scenario participation mask, composed with the fault model's
+        deadline cut (a dispatch whose service time exceeds the deadline
+        never lands — _fault_round resolves that M-wide in f64 exactly as
+        the sync path does). Retransmission attempts/backoff waits are
+        already inside the effective uplink time, so a retrying client
+        simply finishes later."""
+        real = stream.next_round()
+        if self._faults is not None:
+            real, t_cm, _ = self._fault_round(real)
+            attempts = np.asarray(real.attempts, np.float64)
+        else:
+            t_cm = delay.per_client_uplink_time(
+                self._update_bits(), self.wireless, self.pop.p, real.h)
+            attempts = np.ones(self.fed.n_devices, np.float64)
+        t_svc = (self.fed.local_rounds * self._t_cp_clients
+                 + t_cm).astype(np.float32)
+        drop = (~np.asarray(real.mask, bool)).astype(np.float32)
+        return t_svc, drop, np.asarray(t_cm, np.float64), attempts
+
+    def _async_twin(self, state: SimState):
+        """The host f32 schedule twin positioned at `state`: a numpy
+        replay of the device carry's scheduling slice (events.TwinState).
+        One small fetch of the scheduling leaves — params never leave the
+        device."""
+        a = jax.device_get({k: state.async_c[k] for k in (
+            "t_finish", "t_next", "drop_C", "version", "version_C",
+            "cnt", "now")})
+        h = state.async_host
+        return self._events_mod.TwinState(
+            t_finish=np.asarray(a["t_finish"], np.float32).copy(),
+            t_next=np.asarray(a["t_next"], np.float32).copy(),
+            drop=np.asarray(a["drop_C"], np.float32).copy(),
+            version=int(a["version"]),
+            version_disp=np.asarray(a["version_C"], np.int32).copy(),
+            cnt=int(a["cnt"]),
+            now=np.float32(a["now"]),
+            t_cm_disp=np.asarray(h["t_cm_disp"], np.float64).copy(),
+            attempts_disp=np.asarray(h["attempts_disp"], np.float64).copy())
+
+    def _async_chunk_inputs(self, iters, stream, twin, stop_aggs=None,
+                            stop_events=None, max_sim_time=None):
+        """Host-side prep for one event chunk: advance the schedule twin
+        event by event — drawing one M-wide dispatch realization and the
+        arriving client's V batches per event — until `stop_aggs`
+        aggregations have fired (chunks end exactly at aggregation
+        boundaries, the async analogue of eval_every chunking), an
+        aggregation crosses `max_sim_time`, `stop_events` events have run
+        (run_events' exact-event mode), or the static budget E is full.
+        Returns (xs padded to E, [TwinEvent], n_events). The twin is
+        mutated in place; because np and jnp share f32 arithmetic and
+        first-min argmin, its predicted arrival order is exact (asserted
+        against the scan ys in _async_records)."""
+        E = self._async_E
+        V = self.fed.local_rounds
+        limit = E if stop_events is None else min(E, int(stop_events))
+        t_svc_rows, drop_rows, data_rows, evs = [], [], [], []
+        n_aggs = 0
+        while len(evs) < limit:
+            c = int(np.argmin(twin.t_finish))
+            # The arriving client's batches: its iterator advances at
+            # arrival (per-client streams are independent, so client c's
+            # k-th dispatch consumes its k-th V-block — the same
+            # sequence a dispatch-time draw would produce).
+            it = iters[c]
+            if self._data_dev is not None:
+                data_rows.append(
+                    np.stack([it.next_indices() for _ in range(V)]).astype(
+                        np.int32))
+            else:
+                bs = [it.next_batch() for _ in range(V)]
+                data_rows.append(
+                    jax.tree.map(lambda *x: np.stack(x), *bs))
+            t_svc, drop, t_cm, att = self._async_dispatch_draw(stream)
+            e = self._events_mod.twin_step(
+                self._async, twin, t_svc, drop, t_cm, att)
+            assert e.client == c
+            t_svc_rows.append(t_svc)
+            drop_rows.append(drop)
+            evs.append(e)
+            if e.aggregated and stop_events is None:
+                n_aggs += 1
+                if stop_aggs is not None and n_aggs >= stop_aggs:
+                    break
+                if (max_sim_time is not None
+                        and float(e.t_event) >= max_sim_time):
+                    break
+        n_ev = len(evs)
+        pad = self._pad_rounds
+        xs = {
+            "t_svc": pad(np.stack(t_svc_rows), E),
+            "drop_next": pad(np.stack(drop_rows), E),
+        }
+        valid = np.zeros(E, bool)
+        valid[:n_ev] = True
+        xs["valid"] = valid
+        if self._data_dev is not None:
+            xs["idx"] = pad(np.stack(data_rows), E)
+        else:
+            xs["batches"] = jax.tree.map(
+                lambda *r: pad(np.stack(r), E), *data_rows)
+        return xs, evs, n_ev
+
+    def _async_records(self, ys, evs, n_ev, r0: int, bits_acc: float):
+        """Per-AGGREGATION RoundRecords from one event chunk's fetched
+        scan outputs, plus the carried-over uplink-bits accumulator
+        (bits of arrivals since the previous aggregation — it spans
+        chunk/checkpoint boundaries via SimState.async_host).
+
+        Clock semantics (EXPERIMENTS.md §Asynchronous execution): an
+        async 'round' is one buffer fill; sim_time is the ABSOLUTE f32
+        event clock at the filling update's arrival (not a per-round f64
+        delta sum — the event clock IS the schedule, so the record clock
+        deliberately shares its f32 arithmetic). T_cm/T_cp are the
+        FILLING update's own f64 uplink and compute times."""
+        clients = np.asarray(ys["client"][:n_ev])
+        twin_clients = np.array([e.client for e in evs], np.int32)
+        if not np.array_equal(clients, twin_clients):
+            j = int(np.argmin(clients == twin_clients))
+            raise RuntimeError(
+                "async schedule twin diverged from the compiled event "
+                f"queue at event {j}: twin predicted client "
+                f"{int(twin_clients[j])}, the scan popped "
+                f"{int(clients[j])}. The f32 replay contract "
+                "(events.twin_step) is broken — records would be "
+                "misattributed, refusing to continue.")
+        update_bits = self._update_bits()
+        records = []
+        k = 0
+        for j, e in enumerate(evs):
+            # Wire accounting: every arrival's dispatch paid its uplink.
+            # Fault path: every retransmission attempt hit the air,
+            # dropped or not (the sync chunk's attempts-sum rule).
+            # Plain path: one upload per non-dropped arrival.
+            if self._faults is not None:
+                bits_acc += float(e.attempts_done) * update_bits
+            elif not e.dropped:
+                bits_acc += update_bits
+            if e.aggregated:
+                k += 1
+                records.append(RoundRecord(
+                    round=r0 + k,
+                    sim_time=float(e.t_event),
+                    T_cm=float(e.t_cm_done),
+                    T_cp=float(self._t_cp_clients[e.client]),
+                    train_loss=float(ys["loss_agg"][j]),
+                    n_participants=int(self._async.buffer_size),
+                    uplink_bits=bits_acc))
+                bits_acc = 0.0
+        return records, bits_acc
+
+    def _async_state(self, state, params_C, opt_C, key, async_c, twin,
+                     rnd, n_events, bits_acc, iters, stream) -> SimState:
+        """Rebuild a SimState after async chunks: the device carry plus
+        the twin's f64 dispatch bookkeeping and the event cursor."""
+        return self._rebuild_state(
+            state, params_C, opt_C, key, rnd, float(twin.now), iters,
+            stream, async_c=async_c, event=int(state.event) + int(n_events),
+            async_host={"t_cm_disp": twin.t_cm_disp.copy(),
+                        "attempts_disp": twin.attempts_disp.copy(),
+                        "bits_acc": float(bits_acc)})
+
+    def _run_async(self, state, max_rounds, target_acc, eval_every,
+                   max_sim_time):
+        """Event-driven driver: one compiled event-scan dispatch + one
+        device_get per chunk, chunk boundaries at aggregation (round)
+        boundaries so eval cadence matches the sync drivers'. A 'round'
+        is a buffer fill; max_rounds counts fills."""
+        iters, stream = self._materialize(state)
+        twin = self._async_twin(state)
+        params_C, opt_C, key = state.params_C, state.opt_C, state.key
+        async_c = state.async_c
+        bits_acc = float(state.async_host.get("bits_acc", 0.0))
+        history: List[RoundRecord] = []
+        r0 = state.round
+        n_events = 0
+        done, stop, idle_chunks = 0, False, 0
+        while done < max_rounds and not stop:
+            n_t = min(eval_every - done % eval_every, max_rounds - done)
+            xs, evs, n_ev = self._async_chunk_inputs(
+                iters, stream, twin, stop_aggs=n_t,
+                max_sim_time=max_sim_time)
+            params_C, opt_C, key, async_c, ys = self._chunk_fn(
+                params_C, opt_C, key, async_c, self._sizes_f32,
+                self._data_dev, xs)
+            # The chunk's only device->host sync, same as the sync scan.
+            ys = jax.device_get(ys)
+            records, bits_acc = self._async_records(
+                ys, evs, n_ev, r0 + done, bits_acc)
+            n_events += n_ev
+            history.extend(records)
+            done += len(records)
+            # Aggregation-progress watchdog: a scenario that drops every
+            # update (or a buffer larger than the surviving arrival rate
+            # can ever fill) would otherwise burn event chunks forever.
+            idle_chunks = 0 if records else idle_chunks + 1
+            if idle_chunks >= 1000:
+                raise RuntimeError(
+                    f"async run made no aggregation progress over "
+                    f"{idle_chunks * self._async_E} consecutive events "
+                    f"(buffer_size={self._async.buffer_size}) — the "
+                    "scenario drops too many updates to ever fill the "
+                    "buffer. Shrink buffer_size or fix the scenario.")
+            if max_sim_time and float(twin.now) >= max_sim_time:
+                stop = True
+            at_boundary = done > 0 and (done % eval_every == 0
+                                        or done == max_rounds)
+            if self.eval_fn and records and (at_boundary or stop):
+                rec = history[-1]
+                ev = self.eval_fn(async_c["params_g"])
+                rec.test_acc = float(ev.get("acc", np.nan))
+                rec.test_loss = float(ev.get("loss", np.nan))
+                if (target_acc and rec.test_acc is not None
+                        and rec.test_acc >= target_acc):
+                    stop = True
+        new_state = self._async_state(
+            state, params_C, opt_C, key, async_c, twin, r0 + done,
+            n_events, bits_acc, iters, stream)
+        return new_state, SimResult(
+            history=history, params=async_c["params_g"],
+            label=self.label, fed=self.fed)
+
+    def run_events(self, state: SimState, events: int):
+        """Run EXACTLY `events` arrival events (async backend only):
+        (state', [RoundRecord]). Unlike run(), this may stop mid-buffer —
+        pending updates, the partial buffer and the event cursor all live
+        in the returned SimState, and a save/load/resume from it is
+        bit-identical to the uninterrupted run (the mid-buffer
+        checkpoint contract, tests/test_async_events.py)."""
+        if self.backend != "async":
+            raise ValueError(
+                f"run_events requires backend='async', not {self.backend!r}")
+        if not isinstance(events, (int, np.integer)) or events < 1:
+            raise ValueError(f"events must be an int >= 1, got {events!r}")
+        iters, stream = self._materialize(state)
+        twin = self._async_twin(state)
+        params_C, opt_C, key = state.params_C, state.opt_C, state.key
+        async_c = state.async_c
+        bits_acc = float(state.async_host.get("bits_acc", 0.0))
+        history: List[RoundRecord] = []
+        done_ev = 0
+        while done_ev < events:
+            xs, evs, n_ev = self._async_chunk_inputs(
+                iters, stream, twin, stop_events=events - done_ev)
+            params_C, opt_C, key, async_c, ys = self._chunk_fn(
+                params_C, opt_C, key, async_c, self._sizes_f32,
+                self._data_dev, xs)
+            ys = jax.device_get(ys)
+            records, bits_acc = self._async_records(
+                ys, evs, n_ev, state.round + len(history), bits_acc)
+            history.extend(records)
+            done_ev += n_ev
+        new_state = self._async_state(
+            state, params_C, opt_C, key, async_c, twin,
+            state.round + len(history), done_ev, bits_acc, iters, stream)
+        return new_state, history
+
     def _run_scan(self, state, max_rounds, target_acc, eval_every,
                   max_sim_time):
         """Chunked driver: one compiled scan call + one device_get per
@@ -1667,6 +2104,14 @@ class Simulator:
         norm optionally tightened), and the run resumes — up to
         max_restarts attempts, each logged in SimResult.restarts."""
         _validate_run_args(max_rounds, eval_every)
+        if self.backend == "async":
+            if recovery is not None:
+                raise ValueError(
+                    "recovery=RecoveryPolicy requires the divergence-"
+                    "guarded sync backends — backend='async' has no "
+                    "in-graph guard to raise from. Use backend='scan'.")
+            return self._run_async(state, max_rounds, target_acc,
+                                   eval_every, max_sim_time)
         if recovery is not None:
             return self._run_recovering(state, recovery, max_rounds,
                                         target_acc, eval_every, max_sim_time)

@@ -357,6 +357,10 @@ class StudyResult:
     # label -> cohort size K for sampled-participation arms (None = dense).
     cohorts: Dict[str, Optional[int]] = dataclasses.field(
         default_factory=dict)
+    # label -> "mode/K=buffer/staleness" for backend='async' arms (None =
+    # synchronous): the aggregation regime column of table()/to_json().
+    async_modes: Dict[str, Optional[str]] = dataclasses.field(
+        default_factory=dict)
 
     def __getitem__(self, label: str) -> List[SimResult]:
         return self.results[label]
@@ -443,9 +447,11 @@ class StudyResult:
 
     def table(self) -> Tuple[str, List[tuple]]:
         """Paper-style per-arm rows:
-        label,b,V,K,rounds,mean_participants,overall_time_s,acc,
+        label,b,V,K,agg,rounds,mean_participants,overall_time_s,acc,
         time_to_target,rounds_rejected,restarts — K is the sampled
-        cohort size (blank for dense arms); time/acc as mean+-std bands
+        cohort size (blank for dense arms); agg is the aggregation
+        regime ('sync', or 'mode/K=buffer/staleness' for backend='async'
+        arms); time/acc as mean+-std bands
         when the study ran multiple seeds; rounds_rejected/restarts are
         seed totals of quorum-rejected rounds and recovery restarts
         (0 when those knobs are off)."""
@@ -455,12 +461,14 @@ class StudyResult:
             s = self.summary(label)
             fed = self.results[label][0].fed
             K = self.cohorts.get(label)
+            mode = self.async_modes.get(label)
             tta = self.time_to_target_or_total(label)
             hit = [r.time_to_accuracy(self.target_acc) is not None
                    for r in self.results[label]] if self.target_acc else []
             rows.append((
                 label, fed.batch_size, fed.local_rounds,
                 K if K is not None else "",
+                mode if mode is not None else "sync",
                 round(s["rounds_mean"], 1),
                 (round(s["mean_participants"], 1)
                  if np.isfinite(s["mean_participants"]) else ""),
@@ -471,8 +479,8 @@ class StudyResult:
                 s["rounds_rejected"],
                 s["restarts"],
             ))
-        return ("label,b,V,K,rounds,mean_participants,overall_time_s,acc,"
-                "time_to_target_s,rounds_rejected,restarts", rows)
+        return ("label,b,V,K,agg,rounds,mean_participants,overall_time_s,"
+                "acc,time_to_target_s,rounds_rejected,restarts", rows)
 
     def to_json(self) -> dict:
         """Machine-readable emit (benchmarks/run.py --json, the CI study
@@ -506,6 +514,7 @@ class StudyResult:
             arms[label] = {
                 "b": fed.batch_size, "V": fed.local_rounds, "lr": fed.lr,
                 "K": self.cohorts.get(label),
+                "async": self.async_modes.get(label),
                 "compress_updates": fed.compress_updates,
                 "summary": self.summary(label),
                 "per_seed": per_seed,
@@ -561,10 +570,10 @@ class Study:
             if not isinstance(spec, ExperimentSpec):
                 raise TypeError(f"arm {label!r}: expected ExperimentSpec, "
                                 f"got {type(spec).__name__}")
-            if spec.backend != "scan":
+            if spec.backend not in ("scan", "async"):
                 raise ValueError(
-                    f"arm {label!r}: studies run on backend='scan' "
-                    f"(got {spec.backend!r})")
+                    f"arm {label!r}: studies run on backend='scan' or "
+                    f"'async' (got {spec.backend!r})")
 
     def replace(self, **kw) -> "Study":
         return dataclasses.replace(self, **kw)
@@ -573,8 +582,22 @@ class Study:
     def plans(self) -> Dict[str, defl.DEFLPlan]:
         """Per-arm analytic operating points (no training): the DEFL plan
         for plan=True arms, the fixed-(b, V) Eq. 12/8 evaluation
-        otherwise."""
-        return {label: spec.analytic_plan() for label, spec in self.arms}
+        otherwise. Arms whose solve reduces to a plain Alg. 1 problem
+        (spec.plan_request() is not None) are solved together through ONE
+        vectorized KKT dispatch (defl.make_plan_batch) — bit-identical to
+        per-arm analytic_plan(); fixed-(b, V) baselines and deadline-
+        fault arms keep their scalar paths."""
+        reqs = [(label, spec.plan_request()) for label, spec in self.arms]
+        batch = [(label, r) for label, r in reqs if r is not None]
+        out: Dict[str, defl.DEFLPlan] = {}
+        if batch:
+            for (label, _), plan in zip(
+                    batch, defl.make_plan_batch([r for _, r in batch])):
+                out[label] = plan
+        for label, spec in self.arms:
+            if label not in out:
+                out[label] = spec.analytic_plan()
+        return out
 
     # -- execution -----------------------------------------------------------
     def build_sims(self) -> Dict[str, Simulator]:
@@ -633,8 +656,11 @@ class Study:
         groups: Dict[Any, List[Tuple[str, ExperimentSpec, Simulator]]] = {}
         order: List[Any] = []
         for i, (label, spec, sim) in enumerate(sims):
-            if sim.masked_loss_fn is None:
-                sig: Any = ("__solo__", i)  # no envelope form: own group
+            if sim.masked_loss_fn is None or sim.backend == "async":
+                # No envelope form (hand-built Simulator) or async arm
+                # (its own event clock cannot be vmapped against sync
+                # round loops): runs solo, sequentially per seed.
+                sig: Any = ("__solo__", i)
             else:
                 sig = _group_signature(spec, sim.fed)
                 if self.grouping == "exact":
@@ -688,7 +714,11 @@ class Study:
             target_acc=self.target_acc, max_sim_time=self.max_sim_time,
             cohorts={label: (c.K if (c := spec.cohort_spec()) is not None
                              else None)
-                     for label, spec in self.arms})
+                     for label, spec in self.arms},
+            async_modes={
+                label: (f"{a.mode}/K={a.buffer_size}/{a.staleness}"
+                        if (a := spec.async_spec) is not None else None)
+                for label, spec in self.arms})
 
     def _bit_probe(self, group) -> None:
         """One-round native-vs-enveloped bit comparison per arm of a

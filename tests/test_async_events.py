@@ -1,0 +1,341 @@
+"""Event-queue invariants for backend='async' (federated/events.py +
+mesh_rounds.build_async_chunk): monotone event clock, update
+conservation, mid-buffer checkpoint bit-identity, scan-vs-Python-
+reference parity, the synchronous-limit identity, and the knob
+compatibility contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ComputeConfig, FedConfig, WirelessConfig
+from repro.core import delay
+from repro.federated import events, mesh_rounds
+from repro.federated.events import AsyncSpec
+from repro.federated.simulation import Simulator, load_state, save_state
+from repro.optim import sgd
+
+
+def _quad_loss(params, batch):
+    diff = params["w"] - batch["target"]
+    return 0.5 * jnp.sum(diff * diff), {}
+
+
+class _TargetIterator:
+    def __init__(self, target, batch_size):
+        self.target = np.asarray(target, np.float32)
+        self.batch_size = batch_size
+
+    def next_batch(self):
+        return {"target": np.tile(self.target, (self.batch_size, 1))}
+
+
+_M, _D, _B = 4, 16, 2
+_SIZES = np.array([10, 20, 30, 40])
+
+
+def _quad_sim(backend, spec=None, scenario=None, seed=0, heterogeneity=0.3,
+              **kw):
+    fed = FedConfig(n_devices=_M, batch_size=_B, lr=0.05, seed=seed)
+    pop = delay.draw_population(
+        _M, ComputeConfig(), WirelessConfig(), seed, heterogeneity)
+
+    def iters(s):
+        return [_TargetIterator(np.linspace(0.0, m, _D) * 0.1, _B)
+                for m in range(_M)]
+
+    return Simulator(
+        _quad_loss, {"w": jnp.zeros(_D)}, iters, _SIZES, fed, sgd(fed.lr),
+        pop, backend=backend, async_spec=spec, scenario=scenario, **kw)
+
+
+# ---------------------------------------------------------------------------
+# AsyncSpec value contract
+# ---------------------------------------------------------------------------
+
+def test_async_spec_validation():
+    with pytest.raises(ValueError, match="buffer_size"):
+        AsyncSpec(buffer_size=0)
+    with pytest.raises(ValueError, match="staleness"):
+        AsyncSpec(buffer_size=2, staleness="bogus")
+    with pytest.raises(ValueError, match="mode"):
+        AsyncSpec(buffer_size=2, mode="bogus")
+    spec = AsyncSpec(buffer_size=2).replace(staleness="exp", staleness_a=0.3)
+    assert spec.staleness == "exp" and spec.staleness_a == 0.3
+
+
+def test_staleness_weights():
+    spec_c = AsyncSpec(buffer_size=2, staleness="constant")
+    spec_p = AsyncSpec(buffer_size=2, staleness="poly", staleness_a=0.5)
+    spec_e = AsyncSpec(buffer_size=2, staleness="exp", staleness_a=0.5)
+    s = np.arange(4, dtype=np.float32)
+    np.testing.assert_array_equal(
+        events.staleness_weight(spec_c, s, np), np.ones(4, np.float32))
+    np.testing.assert_allclose(
+        events.staleness_weight(spec_p, s, np), (1.0 + s) ** -0.5,
+        rtol=1e-6)
+    np.testing.assert_allclose(
+        events.staleness_weight(spec_e, s, np), np.exp(-0.5 * s), rtol=1e-6)
+    # fresh updates carry full weight under every discipline
+    for spec in (spec_c, spec_p, spec_e):
+        assert float(events.staleness_weight(
+            spec, np.zeros(1, np.float32), np)[0]) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Event-clock invariants
+# ---------------------------------------------------------------------------
+
+def test_event_times_monotone_and_trace_count():
+    sim = _quad_sim("async", AsyncSpec(buffer_size=2, staleness="poly"))
+    st, res = sim.run(sim.init(), max_rounds=6)
+    times = [r.sim_time for r in res.history]
+    assert len(times) == 6
+    assert all(b >= a for a, b in zip(times, times[1:]))
+    assert sim.trace_count == 1
+    # continuation reuses the compiled chunk and the clock keeps running
+    _, res2 = sim.run(st, max_rounds=3)
+    assert sim.trace_count == 1
+    assert res2.history[0].round == 7
+    assert res2.history[0].sim_time >= times[-1]
+
+
+def test_update_conservation_reference():
+    """Every event is consumed exactly once: dropped, or buffered — and
+    each aggregation consumes exactly buffer_size buffered updates."""
+    K = 2
+    spec = AsyncSpec(buffer_size=K, staleness="poly")
+    sim = _quad_sim("async", spec, scenario="dropout", seed=3)
+    stream = sim.scenario.stream(sim.pop, 3)
+    local = jax.jit(mesh_rounds.local_steps_fn(_quad_loss, sim.opt))
+    iters = [_TargetIterator(np.linspace(0.0, m, _D) * 0.1, _B)
+             for m in range(_M)]
+
+    def next_batches(c):
+        bs = [iters[c].next_batch() for _ in range(sim.fed.local_rounds)]
+        return jax.tree.map(lambda *x: np.stack(x), *bs)
+
+    def draw_dispatch():
+        t_svc, drop, _, _ = sim._async_dispatch_draw(stream)
+        return t_svc, drop
+
+    _, evs = events.reference_run(
+        spec, 24, jax.device_get(sim._init_params),
+        sim.opt.init(sim._init_params), lambda p, s, b: local(p, s, b),
+        next_batches, _SIZES, draw_dispatch)
+    accepted = 0
+    for e in evs:
+        assert isinstance(e["dropped"], bool)
+        if e["dropped"]:
+            assert not e["aggregated"]  # a dropped update never aggregates
+        else:
+            accepted += 1
+        if e["aggregated"]:
+            assert accepted % K == 0  # fills consume exactly K updates
+    n_aggs = sum(1 for e in evs if e["aggregated"])
+    assert n_aggs == accepted // K
+    assert accepted - K * n_aggs < K  # leftover buffer is partial
+
+
+def test_scan_matches_python_reference():
+    spec = AsyncSpec(buffer_size=2, staleness="poly", staleness_a=0.7)
+    sim = _quad_sim("async", spec, seed=3)
+    st = sim.init()
+    stream = sim.scenario.stream(sim.pop, 3)
+    local = jax.jit(mesh_rounds.local_steps_fn(_quad_loss, sim.opt))
+    iters = [_TargetIterator(np.linspace(0.0, m, _D) * 0.1, _B)
+             for m in range(_M)]
+
+    def next_batches(c):
+        bs = [iters[c].next_batch() for _ in range(sim.fed.local_rounds)]
+        return jax.tree.map(lambda *x: np.stack(x), *bs)
+
+    def draw_dispatch():
+        t_svc, drop, _, _ = sim._async_dispatch_draw(stream)
+        return t_svc, drop
+
+    n_ev = 11
+    p_ref, evs = events.reference_run(
+        spec, n_ev, jax.device_get(sim._init_params),
+        sim.opt.init(sim._init_params), lambda p, s, b: local(p, s, b),
+        next_batches, _SIZES, draw_dispatch)
+    st2, hist = sim.run_events(st, n_ev)
+    p_scan = jax.device_get(sim.params(st2))
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_scan)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=1e-6)
+    assert sum(1 for e in evs if e["aggregated"]) == len(hist)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def test_mid_buffer_checkpoint_bit_identity(tmp_path):
+    """Stopping after an event count that strands updates mid-buffer,
+    round-tripping through save_state/load_state, and continuing is
+    bit-identical to the uninterrupted run."""
+    spec = AsyncSpec(buffer_size=2, staleness="poly")
+    sim_a = _quad_sim("async", spec, seed=1)
+    st_a, res_a = sim_a.run(sim_a.init(), max_rounds=8)
+
+    sim_b = _quad_sim("async", spec, seed=1)
+    st_b, hist_b = sim_b.run_events(sim_b.init(), 5)  # odd: mid-buffer
+    path = str(tmp_path / "async_ck.pkl")
+    save_state(path, st_b)
+    st_b = load_state(path, like=st_b)
+    st_b, res_b = sim_b.run(st_b, max_rounds=8 - len(hist_b))
+
+    pa = jax.device_get(sim_a.params(st_a))
+    pb = jax.device_get(sim_b.params(st_b))
+    for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+        np.testing.assert_array_equal(a, b)
+    la = [r.train_loss for r in res_a.history]
+    lb = ([r.train_loss for r in hist_b]
+          + [r.train_loss for r in res_b.history])
+    np.testing.assert_array_equal(la, lb)
+    ta = [r.sim_time for r in res_a.history]
+    tb = ([r.sim_time for r in hist_b]
+          + [r.sim_time for r in res_b.history])
+    np.testing.assert_array_equal(ta, tb)
+
+
+# ---------------------------------------------------------------------------
+# Synchronous limit
+# ---------------------------------------------------------------------------
+
+def test_sync_limit_identity():
+    """AsyncSpec(buffer_size=M, staleness='constant') on the uniform
+    scenario reproduces the synchronous scan trajectory: under
+    ack-at-aggregation the buffer fills with exactly one update per
+    client, all dispatched from the same global model — FedAvg. The
+    association (delta accumulation vs direct weighted mean) differs at
+    the ulp level in principle, hence allclose rather than array_equal;
+    in practice the shipped configuration reproduces bitwise."""
+    spec = AsyncSpec(buffer_size=_M, staleness="constant")
+    sim_a = _quad_sim("async", spec, scenario="uniform", seed=2)
+    st_a, res_a = sim_a.run(sim_a.init(), max_rounds=5)
+    sim_s = _quad_sim("scan", scenario="uniform", seed=2)
+    st_s, res_s = sim_s.run(sim_s.init(), max_rounds=5)
+    la = [r.train_loss for r in res_a.history]
+    ls = [r.train_loss for r in res_s.history]
+    np.testing.assert_allclose(la, ls, rtol=2e-5, atol=1e-6)
+    pa = jax.device_get(sim_a.params(st_a))
+    ps = jax.device_get(sim_s.params(st_s))
+    for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(ps)):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=1e-6)
+    # every aggregation saw the full population
+    assert all(r.n_participants == _M for r in res_a.history)
+
+
+def test_fedasync_differs_from_fedbuff():
+    base = dict(scenario=None, seed=0)
+    r_buf = _quad_sim("async", AsyncSpec(buffer_size=1, mode="fedbuff"),
+                      **base)
+    r_asy = _quad_sim("async", AsyncSpec(buffer_size=1, mode="fedasync",
+                                         server_lr=0.5), **base)
+    st_b, _ = r_buf.run(r_buf.init(), max_rounds=4)
+    st_a, _ = r_asy.run(r_asy.init(), max_rounds=4)
+    pb = jax.device_get(r_buf.params(st_b))["w"]
+    pa = jax.device_get(r_asy.params(st_a))["w"]
+    assert not np.allclose(pb, pa)
+
+
+# ---------------------------------------------------------------------------
+# Fault composition
+# ---------------------------------------------------------------------------
+
+def test_async_composes_with_faults():
+    from repro.federated.faults import FaultModel
+    spec = AsyncSpec(buffer_size=2, staleness="poly")
+    sim = _quad_sim("async", spec, scenario="unreliable_edge", seed=4)
+    assert sim._faults is not None
+    st, res = sim.run(sim.init(), max_rounds=5)
+    assert len(res.history) == 5
+    times = [r.sim_time for r in res.history]
+    assert all(b >= a for a, b in zip(times, times[1:]))
+    # retransmission accounting: uplink bits accumulate per attempt
+    assert all(r.uplink_bits > 0 for r in res.history)
+    # quorum gating is named in the rejection
+    fm = FaultModel(deadline_factor=1.5, min_quorum=3)
+    with pytest.raises(ValueError, match="min_quorum"):
+        _quad_sim("async", spec, scenario="uniform", faults=fm)
+
+
+# ---------------------------------------------------------------------------
+# Spec / Study integration
+# ---------------------------------------------------------------------------
+
+def test_async_arm_in_study():
+    """An async ExperimentSpec builds, runs solo inside a Study next to
+    a synchronous arm, and surfaces its aggregation regime in the
+    table/JSON emits."""
+    from repro.federated.experiment import ExperimentSpec
+    from repro.federated.study import Study
+    sync = ExperimentSpec(
+        fed=FedConfig(n_devices=3, batch_size=8, theta=0.62, lr=0.05),
+        model="mnist_cnn_small", dataset="mnist", n_train=96, n_test=48,
+        label="sync")
+    asyn = sync.replace(
+        backend="async",
+        async_spec=AsyncSpec(buffer_size=2, staleness="poly"),
+        label="asyn")
+    res = Study(arms=[("sync", sync), ("asyn", asyn)], seeds=(0,),
+                max_rounds=3).run()
+    assert ("asyn",) in res.groups  # async arms run solo, never grouped
+    assert res.async_modes == {"sync": None, "asyn": "fedbuff/K=2/poly"}
+    header, rows = res.table()
+    assert ",agg," in header
+    by_label = {r[0]: r for r in rows}
+    assert by_label["sync"][4] == "sync"
+    assert by_label["asyn"][4] == "fedbuff/K=2/poly"
+    assert res.to_json()["arms"]["asyn"]["async"] == "fedbuff/K=2/poly"
+    assert len(res["asyn"][0].history) == 3
+
+
+def test_spec_knob_validation():
+    """Satellite contract: mutually-exclusive ExperimentSpec knobs fail
+    at construction, naming the offending fields."""
+    from repro.federated.experiment import (CohortSpec, ExperimentSpec,
+                                            PopulationSpec)
+    from repro.federated.faults import FaultModel
+    spec = AsyncSpec(buffer_size=2)
+    with pytest.raises(ValueError, match="async_spec"):
+        ExperimentSpec(backend="async")
+    with pytest.raises(ValueError, match="backend"):
+        ExperimentSpec(async_spec=spec)
+    with pytest.raises(ValueError, match="population.cohort"):
+        ExperimentSpec(backend="async", async_spec=spec,
+                       population=PopulationSpec(M=40,
+                                                 cohort=CohortSpec(K=8)))
+    with pytest.raises(ValueError, match="shard_clients"):
+        ExperimentSpec(backend="async", async_spec=spec, shard_clients=True)
+    with pytest.raises(ValueError, match="min_quorum"):
+        ExperimentSpec(backend="async", async_spec=spec,
+                       faults=FaultModel(deadline_factor=1.5, min_quorum=3))
+    with pytest.raises(ValueError, match="max_update_norm"):
+        ExperimentSpec(backend="async", async_spec=spec,
+                       faults=FaultModel(deadline_factor=1.5,
+                                         max_update_norm=1.0))
+    # deadline/retransmission/crash channels DO compose
+    ok = ExperimentSpec(backend="async", async_spec=spec,
+                        faults=FaultModel(deadline_factor=1.5,
+                                          max_retries=2))
+    assert ok.effective_faults() is not None
+
+
+# ---------------------------------------------------------------------------
+# Knob compatibility contract (Simulator level)
+# ---------------------------------------------------------------------------
+
+def test_async_knob_validation():
+    spec = AsyncSpec(buffer_size=2)
+    with pytest.raises(ValueError, match="async_spec"):
+        _quad_sim("async", None)
+    with pytest.raises(ValueError, match="backend"):
+        _quad_sim("scan", spec)
+    with pytest.raises(ValueError, match="buffer_size"):
+        _quad_sim("async", AsyncSpec(buffer_size=_M + 1))
+    sim = _quad_sim("async", spec)
+    with pytest.raises(ValueError, match="run_events"):
+        sim.run_round(sim.init())

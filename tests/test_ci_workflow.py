@@ -62,11 +62,15 @@ def test_workflow_jobs_share_tier1_entrypoint():
     # ...and the grouped-study-vs-sequential gate, with its StudyResult
     # JSON uploaded alongside the timing rows.
     assert "bench_study.py" in smoke
+    # ...and the async-vs-sync quick sweep (PR 9), whose StudyResult JSON
+    # joins the artifact next to the event-engine gates inside --check.
+    assert "async_vs_sync.py" in smoke and "--quick" in smoke
     uploads = [s for s in jobs["bench-smoke"]["steps"]
                if "upload-artifact" in str(s.get("uses", ""))]
     assert uploads
     paths = " ".join(str(s["with"]["path"]) for s in uploads)
     assert "study_smoke.json" in paths and "bench_smoke.json" in paths
+    assert "async_smoke.json" in paths
 
 
 def test_workflow_caches_jax_install_keyed_on_pin():

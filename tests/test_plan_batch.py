@@ -1,0 +1,127 @@
+"""Batched plan solving: kkt.solve_batch / defl.make_plan_batch must be
+bit-identical to the scalar path lane by lane, Study.plans() must route
+through them without changing a single plan, and defl.async_plan's
+Eq. 12 re-derivation must behave like the buffered-asynchronous model
+it claims to be."""
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig, WirelessConfig
+from repro.core import defl, delay, kkt
+from repro.federated import experiment
+from repro.federated.experiment import CALIBRATED_COMPUTE
+from repro.federated.study import Study
+
+
+def _problems():
+    return [
+        kkt.DelayProblem(T_cm=t, g=g, M=m, eps=e, nu=2.0, c=4.0)
+        for t in (0.01, 0.5, 3.0)
+        for g in (1e-4, 2e-3)
+        for m in (2, 10, 64)
+        for e in (0.01, 0.1)
+    ]
+
+
+@pytest.mark.parametrize("method", ["closed_form", "numerical", "corrected"])
+def test_solve_batch_bit_identical(method):
+    probs = _problems()
+    for p, sb in zip(probs, kkt.solve_batch(probs, method=method)):
+        ss = kkt.solve(p, method=method)
+        assert float(sb.b) == float(ss.b)
+        assert float(sb.alpha) == float(ss.alpha)
+        assert sb.H == ss.H
+        assert sb.T_round == ss.T_round
+        assert sb.overall == ss.overall
+        assert sb.V == ss.V and sb.theta == ss.theta
+
+
+def test_solve_batch_empty():
+    assert kkt.solve_batch([]) == []
+
+
+def test_make_plan_batch_bit_identical():
+    fed = FedConfig(n_devices=10, epsilon=0.01, nu=2.0, c=4.0)
+    reqs = []
+    for seed, het, part, K in [(0, 0.0, 1.0, None), (1, 0.4, 0.7, None),
+                               (2, 0.8, 1.0, 6), (3, 0.2, 0.9, 4)]:
+        pop = delay.draw_population(
+            10, CALIBRATED_COMPUTE, WirelessConfig(), seed, het)
+        reqs.append(defl.PlanRequest(
+            fed=fed, pop=pop, update_bits=1e6, participation=part,
+            cohort_size=K))
+    batched = defl.make_plan_batch(reqs)
+    for r, pb in zip(reqs, batched):
+        ps = defl.make_plan(r.fed, r.pop, r.update_bits,
+                            wireless=r.wireless, method=r.method,
+                            participation=r.participation,
+                            cohort_size=r.cohort_size)
+        assert pb.b == ps.b and pb.V == ps.V
+        assert pb.theta == ps.theta
+        assert pb.H_pred == ps.H_pred
+        assert pb.T_cm == ps.T_cm and pb.T_cp == ps.T_cp
+        assert pb.overall_pred == ps.overall_pred
+        assert pb.solution.alpha == ps.solution.alpha
+        assert pb.problem == ps.problem
+
+
+def test_study_plans_match_scalar():
+    """Study.plans() (one vectorized KKT dispatch for the batchable
+    arms, scalar fallback for fixed/deadline arms) agrees exactly with
+    per-arm analytic_plan() across the registry's plan regimes."""
+    arms = [
+        ("defl", experiment.get("mnist_paper")),
+        ("storm", experiment.get("mnist_storm")),  # scenario, no deadline
+        ("fedavg", experiment.get("mnist_paper").replace(
+            plan=False, label="fedavg")),          # fixed_plan fallback
+        ("smoke", experiment.get("mnist_smoke")),  # plan=False
+    ]
+    st = Study(arms=arms, seeds=(0,))
+    batched = st.plans()
+    for label, spec in arms:
+        scalar = spec.analytic_plan()
+        got = batched[label]
+        assert got.b == scalar.b and got.V == scalar.V
+        assert got.theta == scalar.theta
+        assert got.H_pred == scalar.H_pred
+        assert got.overall_pred == scalar.overall_pred
+
+
+def test_plan_request_routing():
+    assert experiment.get("mnist_paper").plan_request() is not None
+    assert experiment.get("mnist_smoke").plan_request() is None  # plan=False
+    # deadline-fault scenario re-derives over the truncated model: scalar
+    deadline_spec = experiment.get("mnist_paper").replace(
+        scenario="unreliable_edge")
+    assert deadline_spec.plan_request() is None
+
+
+def test_async_plan_model():
+    fed = FedConfig(n_devices=10, epsilon=0.01, nu=2.0, c=4.0)
+    pop = delay.draw_population(
+        10, CALIBRATED_COMPUTE, WirelessConfig(), 0, 0.4)
+    plan = defl.async_plan(fed, pop, 1e6, buffer_size=4)
+    assert plan.solution.method == "async_grid"
+    assert plan.problem.M == 4  # expected concurrency replaces M_eff
+    assert plan.b >= 1 and plan.V >= 1
+    assert plan.overall_pred == plan.H_pred * plan.T_round
+    # T_agg is K over the harmonic sum of service spans at (b*, V*):
+    t_cm_m = delay.per_client_uplink_time(
+        1e6, WirelessConfig(), pop.p, pop.h)
+    slopes = np.asarray(pop.G, np.float64) / np.asarray(pop.f, np.float64)
+    spans = plan.V * slopes * plan.b + t_cm_m
+    T_agg = 4 / float(np.sum(1.0 / spans))
+    np.testing.assert_allclose(plan.T_round, T_agg, rtol=1e-12)
+    # the swept point is optimal over the quantized decision space: no
+    # probed (b, alpha) beats it under the async objective J = H * T_agg
+    best_J = plan.H_pred * plan.T_round
+    for b in (1.0, 4.0, 16.0, 64.0):
+        for alpha in np.geomspace(1.0 / fed.nu, 20.0, 96):
+            V = max(int(round(fed.nu * alpha)), 1)
+            spans = V * slopes * b + t_cm_m
+            T = 4 / float(np.sum(1.0 / spans))
+            H = kkt.communication_rounds_alpha(
+                b, alpha, 4, fed.epsilon, fed.nu, fed.c)
+            assert H * T >= best_J * (1.0 - 1e-12)
+    with pytest.raises(ValueError, match="buffer_size"):
+        defl.async_plan(fed, pop, 1e6, buffer_size=11)
