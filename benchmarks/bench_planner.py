@@ -1,0 +1,136 @@
+"""Planner service throughput: batched plan queries vs a per-query loop.
+
+The online planner (federated/planner.py) answers Q concurrent plan
+queries through ONE vectorized `kkt.solve_batch` dispatch per method
+(`PlannerService.plan_batch`); the alternative a naive service would run
+is Q scalar `plan()` calls. Both paths are bit-identical per lane
+(tests/test_planner.py), so the only question is throughput — measured
+here at the ISSUE's serving shape, Q=256 queries against a 64-device
+rolling population, for both the closed-form and the vectorized
+golden-section ('numerical') solver.
+
+  PYTHONPATH=src python benchmarks/bench_planner.py [--check] [--out PATH]
+
+--check exits 1 if the batched closed-form path is below GATE x the
+sequential per-query loop at Q=256 (CI's bench-smoke job). --out writes
+the timing rows as JSON (the uploaded CI artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0])
+
+from repro.configs.base import FedConfig  # noqa: E402
+from repro.federated.planner import (  # noqa: E402
+    DeviceStateUpdate, PlannerService, PlanQuery,
+)
+
+Q = 256
+M = 64
+GATE = 2.0
+FED = FedConfig(n_devices=M, epsilon=0.01, nu=2.0, c=4.0)
+UPDATE_BITS = 8e5
+
+
+def build_service(seed: int = 0) -> PlannerService:
+    rng = np.random.default_rng(seed)
+    svc = PlannerService(FED, UPDATE_BITS)
+    svc.observe([DeviceStateUpdate(
+        i, g=float(rng.uniform(1e-4, 2e-3)), p=0.2,
+        h=float(rng.uniform(1e-9, 1e-8))) for i in range(M)])
+    return svc
+
+
+def build_queries(method: str, q: int = Q, seed: int = 1):
+    """q tenants with distinct participation estimates and cohort sizes —
+    the heterogeneous-query shape one batched dispatch must absorb."""
+    rng = np.random.default_rng(seed)
+    return [PlanQuery(participation=float(rng.uniform(0.3, 1.0)),
+                      cohort_size=int(rng.integers(4, M + 1)),
+                      method=method, tag=f"q{i}")
+            for i in range(q)]
+
+
+def _time_best(fn, reps: int = 3) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = False, out: str = "", speedup_out=None):
+    """(header, rows, payload): batched vs sequential seconds per query
+    and their ratio, for both solver methods. The gated configuration is
+    closed_form at Q=256; `quick` shrinks Q — informational only."""
+    q = 64 if quick else Q
+    svc = build_service()
+    rows, payload = [], {"q": q, "devices": M, "gate": GATE, "methods": {}}
+    for method, reps in (("closed_form", 3), ("numerical", 1)):
+        queries = build_queries(method, q=q)
+        svc.plan_batch(queries[:2])  # warm caches on both paths
+        svc.plan(queries[0])
+        t_batch = _time_best(lambda: svc.plan_batch(queries), reps=reps)
+
+        def sequential():
+            for qq in queries:
+                svc.plan(qq)
+
+        t_seq = _time_best(sequential, reps=reps)
+        ratio = t_seq / t_batch
+        rows += [
+            (f"plan_batch[{method}]", f"{t_batch / q * 1e6:.1f}",
+             f"{q / t_batch:.0f}"),
+            (f"plan_loop[{method}]", f"{t_seq / q * 1e6:.1f}",
+             f"{q / t_seq:.0f}"),
+            (f"plan_batch_over_loop[{method}]", "", f"{ratio:.2f}"),
+        ]
+        payload["methods"][method] = {
+            "batched_s": t_batch, "sequential_s": t_seq, "speedup": ratio}
+        if method == "closed_form" and speedup_out is not None:
+            speedup_out["batch_over_loop"] = ratio
+    if out:
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2, default=float)
+            f.write("\n")
+    return "name,us_per_query,queries_per_sec_or_x", rows, payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help=f"exit 1 if batched planning is below {GATE}x the "
+                         f"sequential per-query loop at Q={Q}")
+    ap.add_argument("--out", default="",
+                    help="write the timing JSON here (CI artifact)")
+    args = ap.parse_args(argv)
+    speed: dict = {}
+    header, rows, _ = run(out=args.out, speedup_out=speed)
+    print(header)
+    for r in rows:
+        print(",".join(map(str, r)))
+    if args.check:
+        x = speed["batch_over_loop"]
+        if x < GATE:
+            # Noisy-runner tolerance: one re-measurement before failing
+            # (same convention as bench_study).
+            print(f"check: batched planning {x:.2f}x loop (< {GATE}x); "
+                  "re-measuring once")
+            speed = {}
+            run(speedup_out=speed)
+            x = speed["batch_over_loop"]
+        if x < GATE:
+            print(f"FAIL: batched planning {x:.2f}x loop (< {GATE}x)")
+            raise SystemExit(1)
+        print(f"check: batched planning >= {GATE}x loop ({x:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

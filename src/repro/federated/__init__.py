@@ -4,7 +4,9 @@ from repro.federated import (
     experiment,
     mesh_rounds,
     partition,
+    planner,
     scenarios,
     server,
     simulation,
+    traces,
 )

@@ -40,6 +40,7 @@ from repro.data.pipeline import ClientDataPool
 from repro.federated import scenarios
 from repro.federated.events import AsyncSpec
 from repro.federated.faults import FaultModel
+from repro.federated.traces import TraceSpec, replay_scenario
 from repro.federated.partition import (partition_dirichlet, partition_sizes,
                                        partition_virtual)
 from repro.federated.simulation import Simulator
@@ -155,6 +156,13 @@ class ExperimentSpec:
     scenario       registered edge-scenario name (scenarios.py) or None;
                    draws the population and the per-round
                    participation/channel stream.
+    trace          optional traces.TraceSpec: replay a recorded JSONL
+                   device-state log as the scenario source (deterministic
+                   presence/loss/channel overlay on the unchanged
+                   backends). Mutually exclusive with `scenario` — the
+                   log IS the realization stream, so a registry scenario
+                   cannot also drive it; the validation error names both
+                   fields. `scenario_ref()` resolves whichever is set.
     faults         optional faults.FaultModel overriding (or adding to)
                    the scenario's failure semantics — deadlines, uplink
                    retransmission, crash/rejoin, divergence guards. None
@@ -197,6 +205,7 @@ class ExperimentSpec:
     alpha: float = 1.0
     seed: int = 0
     scenario: Optional[str] = None
+    trace: Optional[TraceSpec] = None
     faults: Optional[FaultModel] = None
     heterogeneity: float = 0.0
     compute: ComputeConfig = CALIBRATED_COMPUTE
@@ -214,6 +223,13 @@ class ExperimentSpec:
         # Satellite knob-compatibility contract: mutually-exclusive
         # combinations fail at spec construction, naming the fields, so
         # a bad sweep dies before any build()/compile cost is paid.
+        if self.trace is not None and self.scenario is not None:
+            raise ValueError(
+                f"ExperimentSpec: trace={self.trace.name!r} and scenario="
+                f"{self.scenario!r} are mutually exclusive (fields "
+                "scenario, trace) — a TraceSpec replays its own recorded "
+                "device-state stream, so a registry scenario cannot also "
+                "drive the population; drop one of them")
         if self.backend == "async" and self.async_spec is None:
             raise ValueError(
                 "ExperimentSpec: backend='async' requires async_spec="
@@ -265,13 +281,24 @@ class ExperimentSpec:
                     f"{tuple(MODELS)}") from None
         return self.model
 
+    def scenario_ref(self) -> Union[str, scenarios.Scenario, None]:
+        """The scenario source this spec actually runs: the ReplayScenario
+        materialized from `trace` when set, else the registry `scenario`
+        name, else None. Every scenario consumer (faults, population,
+        plan, build) resolves through this, so a trace-driven spec rides
+        the identical code paths as a registry-scenario one."""
+        if self.trace is not None:
+            return replay_scenario(self.trace)
+        return self.scenario
+
     def effective_faults(self) -> Optional[FaultModel]:
         """The FaultModel this spec actually runs under: the spec's own
         override when set, else the scenario's, else None. Inactive
         models normalize to None (they are bit-identical to no model)."""
         fm = self.faults
-        if fm is None and self.scenario is not None:
-            fm = scenarios.get(self.scenario).faults
+        ref = self.scenario_ref()
+        if fm is None and ref is not None:
+            fm = scenarios.get(ref).faults
         return fm if fm is not None and fm.active else None
 
     def n_devices(self) -> int:
@@ -297,8 +324,9 @@ class ExperimentSpec:
         """Draw the (M,) device population (compute + channel). Renamed
         from `population()`, which the PopulationSpec field now owns."""
         M = self.n_devices()
-        if self.scenario is not None:
-            return scenarios.get(self.scenario).population(
+        ref = self.scenario_ref()
+        if ref is not None:
+            return scenarios.get(ref).population(
                 M, self.compute, self.wireless, self.seed)
         return delay.draw_population(
             M, self.compute, self.wireless, self.seed, self.heterogeneity)
@@ -319,9 +347,10 @@ class ExperimentSpec:
         fed = self.base_fed()
         cohort = self.cohort_spec()
         K = None if cohort is None else cohort.K
-        if self.scenario is not None:
+        ref = self.scenario_ref()
+        if ref is not None:
             return scenarios.plan_for_scenario(
-                fed, self.scenario, bits, cc=self.compute,
+                fed, ref, bits, cc=self.compute,
                 wc=self.wireless, seed=self.seed, method=self.plan_method,
                 cohort_size=K,
                 spare=0 if cohort is None else cohort.spare)
@@ -359,8 +388,9 @@ class ExperimentSpec:
         if not self.plan:
             return None
         participation = 1.0
-        if self.scenario is not None:
-            sc = scenarios.get(self.scenario)
+        ref = self.scenario_ref()
+        if ref is not None:
+            sc = scenarios.get(ref)
             fm = sc.faults
             if fm is not None and fm.active and (
                     fm.deadline is not None
@@ -474,8 +504,9 @@ class ExperimentSpec:
             eval_batch_fn = lambda ps: {  # noqa: E731
                 "acc": np.asarray(jax.device_get(eval_acc_S(ps)))}
 
+        ref = self.scenario_ref()
         label = self.label or (
-            f"{self.dataset}@{self.scenario}" if self.scenario
+            f"{self.dataset}@{scenarios.get(ref).name}" if ref is not None
             else self.dataset)
         # The study-grouping capabilities: the (V, b)-envelope form of the
         # loss and a hashable compiled-graph signature — two sims with
@@ -487,14 +518,14 @@ class ExperimentSpec:
         eff_faults = self.effective_faults()
         envelope_key = (cfg, fed.n_devices, fed.lr, fed.compress_updates,
                         self.impl,
-                        self.scenario is not None or eff_faults is not None,
+                        ref is not None or eff_faults is not None,
                         eff_faults, cohort, self.shard_clients,
                         self.async_spec)
         return Simulator(
             functools.partial(cnn.cnn_loss, cfg), params, data_factory,
             data_sizes, fed, sgd(fed.lr), pop,
             wireless=self.wireless, eval_fn=eval_fn, label=label,
-            backend=self.backend, impl=self.impl, scenario=self.scenario,
+            backend=self.backend, impl=self.impl, scenario=ref,
             faults=self.faults, eval_batch_fn=eval_batch_fn,
             masked_loss_fn=functools.partial(cnn.cnn_loss_masked, cfg),
             envelope_key=envelope_key,
@@ -559,6 +590,12 @@ register("mnist_async", ExperimentSpec(
     scenario="stragglers", backend="async",
     async_spec=AsyncSpec(buffer_size=4, staleness="poly"),
     label="mnist_async"))
+register("mnist_diurnal", ExperimentSpec(
+    fed=FedConfig(n_devices=12, epsilon=0.01, nu=2.0, c=CALIBRATED_C,
+                  lr=0.05),
+    model="mnist_cnn_small", dataset="mnist", n_train=240, n_test=80,
+    scenario="diurnal_edge", plan=True,
+    label="mnist_diurnal"))
 register("mnist_storm", ExperimentSpec(
     fed=FedConfig(n_devices=10, epsilon=0.01, nu=2.0, c=CALIBRATED_C,
                   lr=0.05),

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple, Union
+from typing import Dict, NamedTuple, Optional, Tuple, Union
 
 import numpy as np
 
@@ -104,12 +104,38 @@ class ChunkRealization:
             h_att=None if self.h_att is None else self.h_att[i])
 
 
+class TraceRound(NamedTuple):
+    """Per-round overlay a trace-driven stream feeds into `_draw_round`.
+
+    present  (M,) bool or None — availability gate ANDed into presence
+             (battery/thermal/diurnal state machines, or a replayed log's
+             present set). None = everyone eligible.
+    lost     (M,) bool or None — deterministic upload losses (a replayed
+             log's lost set). ORed into the link-failure outcome and
+             final: retransmission retries never resurrect a recorded
+             loss. None = no recorded losses.
+    h_scale  (M,) float or None — multiplier on this round's realized
+             channel gains (device-class channel quality, recorded
+             fading), applied after the AR(1) drift to h and to every
+             retry attempt's gain. None = unscaled.
+    """
+
+    present: Optional[np.ndarray] = None
+    lost: Optional[np.ndarray] = None
+    h_scale: Optional[np.ndarray] = None
+
+
 class ScenarioStream:
     """Stateful per-round realization generator (host-side, numpy only).
 
     Owns the dropout/link-failure draws and the AR(1) log-drift state of
     the channel. One stream per simulation run; seeded so all backends
     (and reruns) see identical realizations.
+
+    Trace-driven subclasses (federated/traces.py) override `_trace_round`
+    to overlay availability/loss/channel-quality signals per round; the
+    base implementation returns None and consumes no randomness, so plain
+    scenario streams keep the pre-trace wire format bit for bit.
     """
 
     def __init__(self, scenario: "Scenario", pop: delay.DevicePopulation,
@@ -214,20 +240,33 @@ class ScenarioStream:
             return np.empty((0, K), np.int32)
         return np.stack([self.draw_cohort() for _ in range(rounds)])
 
+    # -- trace overlay hook -------------------------------------------------
+    def _trace_round(self) -> Optional[TraceRound]:
+        """Called exactly once at the top of `_draw_round`. Trace-driven
+        subclasses return a TraceRound overlay (and may advance their own
+        dedicated RNG/state machines); the base returns None, consuming
+        nothing — the legacy wire format is untouched."""
+        return None
+
     def _draw_round(self):
         """One round's raw draws: (uploaded, present, h, attempts, h_att).
 
-        The draw order (crash, dropout, link failure, drift, then the
-        retry attempts — each an M-vector from the shared RNG) is the
-        stream's wire format: draw_chunk must consume the generator in
-        exactly this per-round interleaving so a chunked run is
-        bit-identical to a per-round run and the two call styles can be
-        mixed on one stream. Every fault draw is gated on its knob, so a
-        scenario without an active FaultModel consumes the RNG exactly as
-        before faults existed (bit-identical legacy streams)."""
+        The draw order (trace overlay, crash, dropout, link failure,
+        drift, then the retry attempts — each an M-vector from the shared
+        RNG) is the stream's wire format: draw_chunk must consume the
+        generator in exactly this per-round interleaving so a chunked run
+        is bit-identical to a per-round run and the two call styles can
+        be mixed on one stream. Every fault draw is gated on its knob, so
+        a scenario without an active FaultModel consumes the RNG exactly
+        as before faults existed (bit-identical legacy streams); the
+        trace overlay draws from its own generator, never the shared one,
+        so trace scenarios keep the same guarantee."""
         s, M = self.scenario, self.pop.n
         fm = self._faults
+        tr = self._trace_round()
         present = np.ones(M, bool)
+        if tr is not None and tr.present is not None:
+            present &= tr.present
         if fm is not None and fm.crash_rate > 0:
             # alive -> crashed (down for rejoin_rounds) -> alive again
             crashed = (self._down == 0) & (self._rng.random(M) < fm.crash_rate)
@@ -238,14 +277,18 @@ class ScenarioStream:
             present &= self._rng.random(M) >= s.dropout
         uploaded = present.copy()
         failed = np.zeros(M, bool)
+        if tr is not None and tr.lost is not None:
+            failed |= tr.lost
         if s.link_failure > 0:
-            failed = self._rng.random(M) < s.link_failure
-            uploaded &= ~failed
+            failed |= self._rng.random(M) < s.link_failure
+        uploaded &= ~failed
         h = self.pop.h
         if s.drift_sigma > 0:
             self._log_drift = (s.drift_rho * self._log_drift
                                + self._rng.normal(0.0, s.drift_sigma, M))
             h = h * np.exp(self._log_drift)
+        if tr is not None and tr.h_scale is not None:
+            h = h * tr.h_scale
         if fm is None:
             return uploaded, present, h, None, None
         # Retransmission: up to max_retries re-attempts, each against a
@@ -257,6 +300,10 @@ class ScenarioStream:
         h_att[:, 0] = h
         attempts = present.astype(np.int64)
         pending = present & failed
+        if tr is not None and tr.lost is not None:
+            # Recorded losses are final: the log says that upload never
+            # arrived, so retries must not resurrect it.
+            pending &= ~tr.lost
         log_d = self._log_drift.copy()
         for k in range(1, A):
             fail_k = np.zeros(M, bool)
@@ -268,6 +315,8 @@ class ScenarioStream:
                 h_att[:, k] = self.pop.h * np.exp(log_d)
             else:
                 h_att[:, k] = self.pop.h
+            if tr is not None and tr.h_scale is not None:
+                h_att[:, k] *= tr.h_scale
             attempts += pending
             uploaded |= pending & ~fail_k
             pending &= fail_k

@@ -85,7 +85,7 @@ def _group_signature(spec: ExperimentSpec, fed) -> tuple:
     graph, and the fault inputs (attempt times, deadlines) are per-arm
     host values that must agree across a group's members."""
     return (spec.model, spec.dataset, spec.n_train, spec.n_test, spec.alpha,
-            spec.seed, spec.scenario, spec.effective_faults(),
+            spec.seed, spec.scenario, spec.trace, spec.effective_faults(),
             spec.heterogeneity, spec.compute,
             spec.wireless, spec.backend, spec.impl, spec.with_eval,
             spec.population, spec.shard_clients,

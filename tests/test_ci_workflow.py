@@ -3,7 +3,6 @@ and tier1.sh propagates pytest's exit code / forwards extra args (the
 'act-style dry check' of the CI pipeline, minus the network)."""
 import os
 import subprocess
-import sys
 
 import pytest
 
@@ -65,12 +64,18 @@ def test_workflow_jobs_share_tier1_entrypoint():
     # ...and the async-vs-sync quick sweep (PR 9), whose StudyResult JSON
     # joins the artifact next to the event-engine gates inside --check.
     assert "async_vs_sync.py" in smoke and "--quick" in smoke
+    # ...and the PR 10 planner gates: batched plan queries vs the
+    # sequential loop (bench_planner --check) plus the replanning demo's
+    # beats-worst-fixed-plan bar, regret report JSON as an artifact.
+    assert "bench_planner.py" in smoke
+    assert "planner_service_demo.py" in smoke
     uploads = [s for s in jobs["bench-smoke"]["steps"]
                if "upload-artifact" in str(s.get("uses", ""))]
     assert uploads
     paths = " ".join(str(s["with"]["path"]) for s in uploads)
     assert "study_smoke.json" in paths and "bench_smoke.json" in paths
     assert "async_smoke.json" in paths
+    assert "planner_bench.json" in paths and "planner_smoke.json" in paths
 
 
 def test_workflow_caches_jax_install_keyed_on_pin():

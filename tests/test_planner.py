@@ -1,0 +1,254 @@
+"""Online planner service (federated/planner.py): rolling device-state
+ingest, ONE-dispatch batched plan queries bit-identical per lane to the
+scalar path, and the trace-replanning driver whose report scores the
+adaptive sequence against fixed plans on the realized rounds."""
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig
+from repro.core import delay
+from repro.federated import planner, scenarios
+from repro.federated.planner import (
+    DeviceStateUpdate, EpochPlan, PlannerService, PlanQuery, ReplanReport,
+    replan_trace,
+)
+
+FED = FedConfig(n_devices=16, epsilon=0.01, nu=2.0, c=4.0)
+BITS = 8e5
+
+
+def _service(m=16, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    svc = PlannerService(FED, BITS, **kw)
+    svc.observe([DeviceStateUpdate(
+        i, g=float(rng.uniform(1e-4, 2e-3)), p=0.2,
+        h=float(rng.uniform(1e-9, 1e-8)), t=float(i)) for i in range(m)])
+    return svc
+
+
+# ---------------------------------------------------------------------------
+# Telemetry ingest
+# ---------------------------------------------------------------------------
+
+
+def test_update_validation():
+    with pytest.raises(ValueError, match="client_id"):
+        DeviceStateUpdate(-1, g=1e-3, p=0.2, h=1e-9)
+    for bad in (dict(g=0.0, p=0.2, h=1e-9), dict(g=1e-3, p=-1.0, h=1e-9),
+                dict(g=1e-3, p=0.2, h=0.0)):
+        with pytest.raises(ValueError, match="must be > 0"):
+            DeviceStateUpdate(0, **bad)
+
+
+def test_observe_latest_wins_and_snapshot_sorted():
+    svc = PlannerService(FED, BITS)
+    svc.observe(DeviceStateUpdate(3, g=2e-3, p=0.2, h=1e-9))
+    svc.observe([DeviceStateUpdate(1, g=1e-3, p=0.2, h=2e-9),
+                 DeviceStateUpdate(3, g=5e-3, p=0.3, h=3e-9)])  # overwrite
+    assert svc.n_devices == 2
+    pop = svc.population()
+    # Sorted by client id; G carries the observed slope with f = 1.
+    np.testing.assert_array_equal(pop.G, [1e-3, 5e-3])
+    np.testing.assert_array_equal(pop.f, [1.0, 1.0])
+    np.testing.assert_array_equal(pop.h, [2e-9, 3e-9])
+
+
+def test_observe_population_encodes_slope():
+    pop = delay.DevicePopulation(
+        G=np.array([10.0, 20.0]), f=np.array([2.0, 4.0]),
+        p=np.array([0.2, 0.2]), h=np.array([1e-9, 1e-9]))
+    svc = PlannerService(FED, BITS)
+    svc.observe_population(pop)
+    snap = svc.population()
+    # Only G/f is observable: the snapshot reproduces the slopes exactly.
+    np.testing.assert_array_equal(snap.G / snap.f, pop.G / pop.f)
+
+
+def test_staleness_eviction():
+    svc = _service(m=4, stale_after=1.5)  # update i has timestamp t=i
+    assert svc.population(now=3.0).n == 2  # t >= 3.0 - 1.5: ids 2 and 3
+    assert svc.population().n == 4  # no `now` -> nothing evicted
+    with pytest.raises(ValueError, match="no .fresh. device state"):
+        svc.population(now=100.0)
+    with pytest.raises(ValueError, match="observe"):
+        PlannerService(FED, BITS).population()
+
+
+def test_participation_ewma():
+    svc = PlannerService(FED, BITS)
+    assert svc.participation_estimate(default=0.7) == 0.7
+    svc.observe_participation(0.8)
+    assert svc.participation_estimate() == 0.8
+    svc.observe_participation(0.4)
+    assert svc.participation_estimate() == pytest.approx(0.6)  # beta = 0.5
+    svc.observe_participation(2.0)  # clipped into [0, 1]
+    assert svc.participation_estimate() <= 1.0
+
+
+def test_observe_round_updates_channels():
+    svc = _service(m=6)
+    scen = scenarios.get("hetero_storm")
+    pop = scen.population(6, seed=0)
+    real = scen.stream(pop, seed=0).next_round()
+    svc.observe_round(real, t=9.0)
+    snap = svc.population()
+    for i in np.flatnonzero(real.clock_mask):
+        assert snap.h[i] == real.h[i]
+    assert svc.participation_estimate() == pytest.approx(
+        float(np.mean(real.clock_mask)), abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Batched solves: one dispatch, lane bit-identity
+# ---------------------------------------------------------------------------
+
+
+def test_plan_batch_empty():
+    assert PlannerService(FED, BITS).plan_batch([]) == []
+
+
+def test_plan_defaults_to_service_snapshot():
+    svc = _service()
+    p = svc.plan()
+    assert p.b >= 1 and p.V >= 1 and np.isfinite(p.T_round)
+
+
+def test_plan_batch_bit_identical_to_scalar_q256():
+    """The ISSUE's serving contract: Q=256 heterogeneous queries (mixed
+    participation, cohort sizes, and BOTH solver methods) answered by
+    plan_batch are bit-identical per lane to 256 scalar plan() calls."""
+    svc = _service(m=16)
+    rng = np.random.default_rng(42)
+    queries = [PlanQuery(
+        participation=float(rng.uniform(0.3, 1.0)),
+        cohort_size=int(rng.integers(4, 17)),
+        method="numerical" if i % 4 == 0 else "closed_form",
+        tag=f"q{i}")
+        for i in range(256)]
+    batched = svc.plan_batch(queries)
+    assert len(batched) == 256
+    for q, bp in zip(queries, batched):
+        sp = svc.plan(q)
+        assert (bp.b, bp.V) == (sp.b, sp.V)
+        assert bp.theta == sp.theta
+        assert bp.H_pred == sp.H_pred and bp.T_round == sp.T_round
+        assert bp.overall_pred == sp.overall_pred
+        assert bp.solution.alpha == sp.solution.alpha
+
+
+def test_plan_batch_explicit_pop_skips_snapshot():
+    """Queries that all carry explicit population snapshots plan without
+    any service-side device state (the replanning driver's shape)."""
+    pop = scenarios.get("uniform").population(8, seed=0)
+    svc = PlannerService(FED, BITS)  # never observed anything
+    plans = svc.plan_batch([PlanQuery(pop=pop, participation=0.9),
+                            PlanQuery(pop=pop, participation=0.5)])
+    assert len(plans) == 2
+    # Lower expected participation shrinks Eq. 12's effective M.
+    assert plans[1].problem.M < plans[0].problem.M
+
+
+def test_query_overrides_route_through():
+    svc = _service()
+    loose = FedConfig(n_devices=16, epsilon=0.1, nu=2.0, c=4.0)
+    a, b = svc.plan_batch([PlanQuery(), PlanQuery(fed=loose, update_bits=1e4)])
+    assert b.problem.eps == pytest.approx(0.1)
+    assert b.update_bits == pytest.approx(1e4)
+    assert a.update_bits == pytest.approx(BITS)
+
+
+# ---------------------------------------------------------------------------
+# The replanning driver
+# ---------------------------------------------------------------------------
+
+
+def _quick_report(**kw):
+    fed = FedConfig(n_devices=12, epsilon=0.1, nu=2.0, c=1.0)
+    return replan_trace("diurnal_edge", fed, update_bits=1e5,
+                        epochs=4, rounds_per_epoch=8, seed=0, **kw)
+
+
+def test_replan_report_invariants():
+    rep = _quick_report()
+    assert isinstance(rep, ReplanReport)
+    assert rep.scenario == "diurnal_edge"
+    assert len(rep.plans) == 4
+    assert [p.epoch for p in rep.plans] == [0, 1, 2, 3]
+    for p in rep.plans:
+        assert isinstance(p, EpochPlan)
+        assert p.b >= 1 and p.V >= 1 and 0.0 < p.participation <= 1.0
+    # The deliberately-bad corners are always scored as fixed candidates.
+    assert "b1.V1" in rep.fixed_times and "b64.V16" in rep.fixed_times
+    assert np.isfinite(rep.replanned_time)
+    assert rep.oracle_time == min(rep.fixed_times.values())
+    assert rep.worst_time == max(rep.fixed_times.values())
+    assert rep.regret == rep.replanned_time - rep.oracle_time
+    # The acceptance bar the demo/CI gate enforce.
+    assert rep.beats_worst()
+    tbl = rep.table()
+    assert "oracle" in tbl and "worst" in tbl and "replanned" in tbl
+    js = rep.to_json()
+    assert js["beats_worst"] is True
+    assert set(js["fixed_times"]) == set(rep.fixed_times)
+
+
+def test_replan_is_deterministic():
+    a, b = _quick_report(), _quick_report()
+    assert a.replanned_time == b.replanned_time
+    assert a.fixed_times == b.fixed_times
+    assert [(p.b, p.V) for p in a.plans] == [(p.b, p.V) for p in b.plans]
+
+
+def test_replan_single_batched_dispatch():
+    """All E epoch solves route through exactly ONE plan_batch call (the
+    trace is open-loop, so every query is known upfront)."""
+    calls = []
+
+    class Counting(PlannerService):
+        def plan_batch(self, queries):
+            calls.append(len(queries))
+            return super().plan_batch(queries)
+
+    fed = FedConfig(n_devices=12, epsilon=0.1, nu=2.0, c=1.0)
+    svc = Counting(fed, 1e5)
+    rep = replan_trace("diurnal_edge", fed, update_bits=1e5, epochs=4,
+                       rounds_per_epoch=8, seed=0, service=svc)
+    assert calls == [4]
+    assert len(rep.plans) == 4
+
+
+def test_replan_causality():
+    """Epoch e's query carries only telemetry from before e: epoch 0 plans
+    on the analytic prior, and a later epoch's participation estimate
+    reflects the realized rounds (differs from the prior once the trace
+    disagrees with it)."""
+    rep = _quick_report()
+    prior = scenarios.get("diurnal_edge").expected_participation
+    assert rep.plans[0].participation == pytest.approx(prior)
+    assert any(abs(p.participation - prior) > 1e-6 for p in rep.plans[1:])
+
+
+def test_replan_explicit_target():
+    rep = _quick_report(target=0.05)
+    assert rep.target == pytest.approx(0.05)
+    # An unreachable budget scores inf for everyone, replanned included.
+    far = _quick_report(target=1e9)
+    assert far.replanned_time == np.inf
+    assert all(t == np.inf for t in far.fixed_times.values())
+
+
+def test_walk_linear_credit():
+    """_walk interpolates inside the crossing round: a target of 1.5
+    rounds' progress costs 1.5 rounds' time under a constant-rate chunk."""
+    fed = FedConfig(n_devices=2, epsilon=0.1, nu=2.0, c=1.0)
+    pop = scenarios.get("uniform").population(2, seed=0)
+    scen = scenarios.get("uniform")
+    chunk = scen.stream(pop, seed=0).draw_chunk(4)
+    _, per_round = planner._walk(fed, planner.WirelessConfig(), pop, 1e5,
+                                 [chunk], [(2, 2)])
+    t_full, _ = planner._walk(fed, planner.WirelessConfig(), pop, 1e5,
+                              [chunk], [(2, 2)])
+    rate = per_round / 4.0
+    t_half = planner._walk(fed, planner.WirelessConfig(), pop, 1e5,
+                           [chunk], [(2, 2)], target=1.5 * rate)
+    assert t_half == pytest.approx(1.5 / 4.0 * t_full, rel=1e-9)

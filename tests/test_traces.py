@@ -1,0 +1,401 @@
+"""Trace-driven scenarios (federated/traces.py): device-class fleets with
+battery/thermal/diurnal state machines, deterministic JSONL replay, and
+their integration with the ScenarioStream wire format — draw_chunk parity,
+mid-stream checkpoint/resume bit-identity, composition with FaultModel
+retransmission and cohort sampling, and the ExperimentSpec trace field
+riding the unchanged scan backend."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs.base import FedConfig, WirelessConfig
+from repro.federated import experiment, scenarios, traces
+from repro.federated.faults import FaultModel
+from repro.federated.traces import (
+    IOT, PHONE, TABLET, DeviceClassSpec, ReplayScenario, TraceScenario,
+    TraceSpec, record_trace, replay_scenario, write_trace,
+)
+
+
+# ---------------------------------------------------------------------------
+# Device classes and the generative TraceScenario
+# ---------------------------------------------------------------------------
+
+
+def test_diurnal_edge_registered():
+    assert "diurnal_edge" in scenarios.names()
+    scen = scenarios.get("diurnal_edge")
+    assert isinstance(scen, TraceScenario)
+    assert scenarios.get(scen) is scen  # idempotent on instances
+    assert 0.0 < scen.expected_participation < 1.0
+
+
+def test_device_class_validation():
+    with pytest.raises(ValueError, match="frac"):
+        DeviceClassSpec("bad", frac=0.0)
+    with pytest.raises(ValueError, match="compute_scale"):
+        DeviceClassSpec("bad", frac=0.5, compute_scale=-1.0)
+    with pytest.raises(ValueError, match="avail_base"):
+        DeviceClassSpec("bad", frac=0.5, avail_base=1.5)
+    with pytest.raises(ValueError, match="at least one"):
+        TraceScenario("t", "empty", classes=())
+    with pytest.raises(ValueError, match="battery_init"):
+        TraceScenario("t", "bad", battery_init=(0.9, 0.2))
+
+
+def test_class_index_largest_remainder():
+    scen = scenarios.get("diurnal_edge")
+    idx = scen.class_index(12)
+    assert idx.shape == (12,)
+    # 60/25/15 over 12 devices: 7.2/3.0/1.8 -> 7/3/2 by largest remainder.
+    counts = np.bincount(idx, minlength=3)
+    assert counts.tolist() == [7, 3, 2]
+    assert np.all(np.diff(idx) >= 0)  # contiguous leading blocks
+    # Tiny fleets: 1.8/0.75/0.45 floors to 1/0/0, the two largest
+    # remainders take the leftovers -> 2 phones, 1 tablet, no IoT.
+    assert np.bincount(scen.class_index(3), minlength=3).tolist() == [2, 1, 0]
+
+
+def test_population_class_scaling():
+    scen = scenarios.get("diurnal_edge")
+    M = 40
+    pop = scen.population(M, seed=0)
+    idx = scen.class_index(M)
+    assert pop.n == M
+    # IoT gateways (compute_scale=4) are materially slower than phones and
+    # their channel (channel_scale=0.3) materially worse.
+    slope = pop.G / pop.f
+    assert np.median(slope[idx == 2]) > 2.0 * np.median(slope[idx == 0])
+    assert np.median(pop.h[idx == 2]) < 0.6 * np.median(pop.h[idx == 0])
+    # Same seed -> same draw (the dedicated population RNG stream).
+    pop2 = scen.population(M, seed=0)
+    np.testing.assert_array_equal(pop.f, pop2.f)
+    np.testing.assert_array_equal(pop.h, pop2.h)
+
+
+def test_trace_stream_state_machines():
+    scen = scenarios.get("diurnal_edge")
+    pop = scen.population(24, seed=3)
+    stream = scen.stream(pop, seed=3)
+    chunk = stream.draw_chunk(96)  # two simulated days at 30-min rounds
+    # Participation is partial and the diurnal wave moves it round to round.
+    frac = chunk.clock_mask.mean(axis=1)
+    assert 0.0 < frac.mean() < 1.0
+    assert np.ptp(frac) > 0.2
+    # Battery/thermal state stays in [0, 1] and rides the snapshot.
+    s = stream.state()
+    assert np.all((s["trace"]["battery"] >= 0) & (s["trace"]["battery"] <= 1))
+    assert np.all((s["trace"]["thermal"] >= 0) & (s["trace"]["thermal"] <= 1))
+    assert s["trace"]["tick"] == 96
+
+
+def test_trace_overlay_only_gates_presence():
+    """With the state machines made vacuous (always available, no battery/
+    thermal gates), a TraceScenario realizes the SAME stream as a plain
+    Scenario with identical base knobs at the same seed — the trace
+    overlay must not consume the shared scenario RNG."""
+    always_on = DeviceClassSpec(
+        "on", frac=1.0, avail_base=1.0, battery_min=0.0, battery_drain=0.0,
+        battery_idle_drain=0.0, heat_per_round=0.0)
+    knobs = dict(dropout=0.2, link_failure=0.1, drift_sigma=0.15,
+                 drift_rho=0.9)
+    tscen = TraceScenario("t_on", "vacuous trace", classes=(always_on,),
+                          **knobs)
+    plain = scenarios.Scenario("plain", "same knobs", **knobs)
+    pop = plain.population(9, seed=5)
+    R = 30
+    tc = tscen.stream(pop, seed=5).draw_chunk(R)
+    pc = plain.stream(pop, seed=5).draw_chunk(R)
+    np.testing.assert_array_equal(tc.mask, pc.mask)
+    np.testing.assert_array_equal(tc.clock_mask, pc.clock_mask)
+    np.testing.assert_array_equal(tc.h, pc.h)
+
+
+# ---------------------------------------------------------------------------
+# Wire-format parity and checkpoint/resume
+# ---------------------------------------------------------------------------
+
+
+def test_trace_draw_chunk_equals_sequential():
+    """draw_chunk(R) == R next_round() calls bit for bit for the trace
+    stream, including mixed consumption mid-stream — the scan backend's
+    chunked reads are the same realization stream."""
+    scen = scenarios.get("diurnal_edge")
+    pop = scen.population(10, seed=2)
+    seq = scen.stream(pop, seed=7)
+    chk = scen.stream(pop, seed=7)
+    R = 17
+    reals = [seq.next_round() for _ in range(R)]
+    chunk = chk.draw_chunk(R)
+    np.testing.assert_array_equal(np.stack([r.mask for r in reals]),
+                                  chunk.mask)
+    np.testing.assert_array_equal(np.stack([r.clock_mask for r in reals]),
+                                  chunk.clock_mask)
+    np.testing.assert_array_equal(np.stack([r.h for r in reals]), chunk.h)
+    # Interleaved: next_round / draw_chunk(4) / next_round continues the
+    # same stream as 6 more sequential draws.
+    more = [seq.next_round() for _ in range(6)]
+    mix = [chk.next_round().clock_mask, *chk.draw_chunk(4).clock_mask,
+           chk.next_round().clock_mask]
+    np.testing.assert_array_equal(np.stack([r.clock_mask for r in more]),
+                                  np.stack(mix))
+
+
+def test_trace_stream_checkpoint_resume_bit_identical():
+    """state()/set_state() mid-stream resumes the trace state machines
+    (battery, thermal, tick, trace RNG) bit-identically on a FRESH
+    stream object."""
+    scen = scenarios.get("diurnal_edge")
+    pop = scen.population(12, seed=1)
+    full = scen.stream(pop, seed=4).draw_chunk(25)
+    a = scen.stream(pop, seed=4)
+    a.draw_chunk(11)
+    snap = a.state()
+    b = scen.stream(pop, seed=4)  # fresh object, then restore
+    b.set_state(snap)
+    tail = b.draw_chunk(14)
+    np.testing.assert_array_equal(full.mask[11:], tail.mask)
+    np.testing.assert_array_equal(full.clock_mask[11:], tail.clock_mask)
+    np.testing.assert_array_equal(full.h[11:], tail.h)
+
+
+def test_replay_stream_checkpoint_resume(tmp_path):
+    path = os.path.join(tmp_path, "t.jsonl")
+    spec = record_trace("hetero_storm", 8, 12, path, seed=0)
+    scen = replay_scenario(spec)
+    pop = scen.population(8, seed=0)
+    full = scen.stream(pop, seed=0).draw_chunk(12)
+    a = scen.stream(pop, seed=0)
+    a.draw_chunk(5)
+    b = scen.stream(pop, seed=0)
+    b.set_state(a.state())
+    tail = b.draw_chunk(7)
+    np.testing.assert_array_equal(full.mask[5:], tail.mask)
+    np.testing.assert_array_equal(full.h[5:], tail.h)
+
+
+# ---------------------------------------------------------------------------
+# JSONL record / replay
+# ---------------------------------------------------------------------------
+
+
+def test_record_replay_roundtrip(tmp_path):
+    """record_trace over a lossy drifting scenario, replayed through a
+    fresh ReplayScenario: masks bit-exact, realized channels recovered
+    (scale round-trips through one divide/multiply)."""
+    path = os.path.join(tmp_path, "storm.jsonl")
+    M, R = 8, 15
+    src = scenarios.get("hetero_storm")
+    spec = record_trace(src, M, R, path, seed=2)
+    src_pop = src.population(M, seed=2)
+    src_chunk = src.stream(src_pop, seed=2).draw_chunk(R)
+
+    scen = replay_scenario(spec)
+    pop = scen.population(M, seed=2)
+    chunk = scen.stream(pop, seed=2).draw_chunk(R)
+    np.testing.assert_array_equal(src_chunk.mask, chunk.mask)
+    np.testing.assert_array_equal(src_chunk.clock_mask, chunk.clock_mask)
+    np.testing.assert_allclose(src_chunk.h, chunk.h, rtol=1e-12)
+    # The meta population reproduces the recorded compute slopes exactly.
+    np.testing.assert_allclose(pop.G / pop.f, src_pop.G / src_pop.f,
+                               rtol=1e-12)
+    # Empirical participation estimate matches the recorded stream.
+    assert abs(scen.expected_participation - src_chunk.mask.mean()) < 1e-9
+
+
+def test_replay_on_end_modes(tmp_path):
+    path = os.path.join(tmp_path, "short.jsonl")
+    recs = [{"present": [0, 1]}, {"present": [1]}, {"present": [2]}]
+    write_trace(path, recs, meta={"devices": 3})
+    pop = scenarios.get("uniform").population(3, seed=0)
+
+    def masks(on_end, rounds):
+        scen = replay_scenario(TraceSpec(path, on_end=on_end),
+                               name=f"t_{on_end}")
+        return scen.stream(pop, seed=0).draw_chunk(rounds).clock_mask
+
+    cyc = masks("cycle", 5)
+    np.testing.assert_array_equal(cyc[3], cyc[0])  # wrapped to round 0
+    np.testing.assert_array_equal(cyc[4], cyc[1])
+    hold = masks("hold", 5)
+    np.testing.assert_array_equal(hold[3], hold[2])  # repeats the last
+    np.testing.assert_array_equal(hold[4], hold[2])
+    with pytest.raises(RuntimeError, match="exhausted"):
+        masks("error", 4)
+
+
+def test_trace_jsonl_validation(tmp_path):
+    with pytest.raises(ValueError, match="on_end"):
+        TraceSpec("x.jsonl", on_end="loop")
+    with pytest.raises(ValueError, match="TraceSpec"):
+        ReplayScenario("r", "no trace")
+    path = os.path.join(tmp_path, "bad.jsonl")
+    with open(path, "w") as f:
+        f.write(json.dumps({"present": [0]}) + "\n")
+        f.write(json.dumps({"meta": {"devices": 2}}) + "\n")
+    with pytest.raises(ValueError, match="first line"):
+        traces._load_trace(path)
+    write_trace(path, [{"lost": [0]}])
+    with pytest.raises(ValueError, match="present"):
+        traces._load_trace(path)
+    write_trace(path, [])
+    with pytest.raises(ValueError, match="no round records"):
+        traces._load_trace(path)
+    # Out-of-range ids and malformed h_scale surface at replay time.
+    write_trace(path, [{"present": [0, 9]}], meta={"devices": 4})
+    pop = scenarios.get("uniform").population(4, seed=0)
+    with pytest.raises(ValueError, match="out of range"):
+        replay_scenario(TraceSpec(path), name="t_oor").stream(
+            pop, seed=0).next_round()
+    write_trace(path, [{"present": [0], "h_scale": [1.0, 1.0]}],
+                meta={"devices": 4})
+    with pytest.raises(ValueError, match="h_scale"):
+        replay_scenario(TraceSpec(path), name="t_hs").stream(
+            pop, seed=0).next_round()
+    # Fleet-size mismatch names the trace.
+    write_trace(path, [{"present": [0]}], meta={"devices": 7})
+    with pytest.raises(ValueError, match="7 devices"):
+        replay_scenario(TraceSpec(path), name="t_m").population(4, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Composition: faults and cohorts over traces
+# ---------------------------------------------------------------------------
+
+
+def test_replay_lost_final_under_retransmission(tmp_path):
+    """Recorded losses are final: a FaultModel retransmission layer over a
+    replayed trace never resurrects a recorded 'lost' upload (the log
+    says the update did not arrive)."""
+    path = os.path.join(tmp_path, "lossy.jsonl")
+    recs = [{"present": [0, 1, 2, 3], "lost": [1, 2]} for _ in range(6)]
+    write_trace(path, recs, meta={"devices": 4})
+    scen = replay_scenario(TraceSpec(path), name="t_lossy",
+                           faults=FaultModel(max_retries=3))
+    pop = scen.population(4, seed=0)
+    chunk = scen.stream(pop, seed=0).draw_chunk(6)
+    assert not chunk.mask[:, 1].any() and not chunk.mask[:, 2].any()
+    assert chunk.mask[:, 0].all() and chunk.mask[:, 3].all()
+    # ...but the lost clients were present: the server waited for them.
+    assert chunk.clock_mask.all()
+    # and the retransmission machinery stayed live (attempts recorded).
+    assert chunk.attempts is not None
+
+
+def test_trace_composes_with_cohort_sampling():
+    """Cohort sampling composes with the trace overlay: cohort draws ride
+    their own RNG stream, so a cohort-configured trace stream realizes
+    the SAME rounds as a dense one, and both the cohort RNG and the trace
+    state machines survive one snapshot/restore."""
+    scen = scenarios.get("diurnal_edge")
+    pop = scen.population(20, seed=0)
+    K = 6
+    coh = scen.stream(pop, seed=0, cohort_size=K)
+    dense = scen.stream(pop, seed=0)
+    ids = coh.draw_cohorts(8)
+    assert ids.shape == (8, K)
+    for row in ids:
+        assert np.all(np.diff(row) > 0)  # sorted, unique client ids
+    cc = coh.draw_chunk(8)
+    dc = dense.draw_chunk(8)
+    np.testing.assert_array_equal(cc.mask, dc.mask)
+    np.testing.assert_array_equal(cc.h, dc.h)
+    # Snapshot carries cohort RNG and trace machines together.
+    snap = coh.state()
+    ahead_ids = coh.draw_cohorts(5)
+    ahead = coh.draw_chunk(5)
+    fresh = scen.stream(pop, seed=0, cohort_size=K)
+    fresh.set_state(snap)
+    np.testing.assert_array_equal(fresh.draw_cohorts(5), ahead_ids)
+    np.testing.assert_array_equal(fresh.draw_chunk(5).clock_mask,
+                                  ahead.clock_mask)
+
+
+def test_trace_composes_with_faults():
+    """A TraceScenario carrying an active FaultModel produces the fault
+    wire format (attempts / per-attempt gains) while the state machines
+    keep gating presence."""
+    base = scenarios.get("diurnal_edge")
+    scen = dataclasses.replace(
+        base, name="diurnal_faulty",
+        faults=FaultModel(max_retries=2, crash_rate=0.1, rejoin_rounds=3))
+    assert isinstance(scen, TraceScenario)  # replace preserves the subclass
+    pop = scen.population(12, seed=0)
+    chunk = scen.stream(pop, seed=0).draw_chunk(20)
+    assert chunk.attempts is not None and chunk.h_att is not None
+    assert chunk.h_att.shape == (20, 12, 3)
+    assert not np.any(chunk.mask & ~chunk.clock_mask)
+    assert 0.0 < chunk.clock_mask.mean() < 1.0
+
+
+# ---------------------------------------------------------------------------
+# ExperimentSpec integration (the scan backend is unchanged)
+# ---------------------------------------------------------------------------
+
+
+def _trace_spec(tmp_path, n_devices=3, rounds=8):
+    path = os.path.join(tmp_path, "exp.jsonl")
+    tspec = record_trace("hetero_storm", n_devices, rounds, path, seed=1)
+    return experiment.get("mnist_smoke").replace(
+        with_eval=False, backend="scan", scenario=None, trace=tspec,
+        fed=FedConfig(n_devices=n_devices, batch_size=8, theta=0.62,
+                      lr=0.05, compress_updates=True))
+
+
+def test_experiment_trace_scenario_mutually_exclusive(tmp_path):
+    path = os.path.join(tmp_path, "x.jsonl")
+    write_trace(path, [{"present": [0]}])
+    with pytest.raises(ValueError) as ei:
+        experiment.get("mnist_smoke").replace(
+            trace=TraceSpec(path), scenario="dropout")
+    msg = str(ei.value)
+    assert "scenario" in msg and "trace" in msg  # names both fields
+
+
+def test_experiment_trace_runs_on_scan_backend(tmp_path):
+    """A trace-driven ExperimentSpec runs on the unchanged scan backend
+    and its realized participation is exactly the recorded arrivals."""
+    spec = _trace_spec(tmp_path)
+    sim = spec.build()
+    _, res = sim.run(sim.init(0), max_rounds=6, eval_every=3)
+    ref = spec.scenario_ref()
+    pop = ref.population(spec.n_devices(), seed=spec.fed.seed)
+    chunk = ref.stream(pop, seed=spec.fed.seed).draw_chunk(6)
+    assert ([r.n_participants for r in res.history]
+            == chunk.n_participants.tolist())
+
+
+def test_experiment_trace_checkpoint_resume_bit_identical(tmp_path):
+    spec = _trace_spec(tmp_path)
+    simF = spec.build()
+    _, full = simF.run(simF.init(0), max_rounds=6, eval_every=2)
+    simA = spec.build()
+    mid, _ = simA.run(simA.init(0), max_rounds=3, eval_every=2)
+    simB = spec.build()
+    _, resumed = simB.run(mid, max_rounds=3, eval_every=2)
+    for x, y in zip(full.history[3:], resumed.history):
+        np.testing.assert_array_equal(x.train_loss, y.train_loss)
+        assert x.sim_time == y.sim_time
+        assert x.n_participants == y.n_participants
+    import jax
+    for a, b in zip(jax.tree.leaves(full.params),
+                    jax.tree.leaves(resumed.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_mnist_diurnal_spec():
+    spec = experiment.get("mnist_diurnal")
+    assert spec.scenario == "diurnal_edge" and spec.plan
+    scen = scenarios.get(spec.scenario_ref())
+    assert isinstance(scen, TraceScenario)
+    assert spec.n_devices() == 12
+
+
+def test_presets_cover_fleet():
+    fr = [c.frac for c in (PHONE, TABLET, IOT)]
+    assert abs(sum(fr) - 1.0) < 1e-9
+    wc = WirelessConfig()
+    assert wc.mean_channel_gain > 0  # presets scale a positive baseline
